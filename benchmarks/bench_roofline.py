@@ -1,0 +1,63 @@
+"""§Roofline — per (arch × shape × mesh) terms from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and emits the three-term roofline rows. Also used to regenerate the
+EXPERIMENTS.md table (``python -m benchmarks.bench_roofline --markdown``).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return
+    n_bound = {"compute": 0, "memory": 0, "collective": 0}
+    for r in recs:
+        rf = r["roofline"]
+        n_bound[rf["bottleneck"]] += 1
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(f"roofline/{tag}", rf["t_compute_s"] * 1e6,
+             f"tm_us={rf['t_memory_s']*1e6:.0f} "
+             f"tx_us={rf['t_collective_s']*1e6:.0f} "
+             f"bound={rf['bottleneck']} "
+             f"useful={rf['useful_flops_ratio']:.2f}")
+    emit("roofline/summary", 0.0,
+         f"{len(recs)} combos: " + " ".join(
+             f"{k}-bound={v}" for k, v in n_bound.items()))
+
+
+def markdown() -> None:
+    recs = load()
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+          " bound | useful FLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {rf['t_compute_s']:.2e} | {rf['t_memory_s']:.2e} "
+              f"| {rf['t_collective_s']:.2e} | {rf['bottleneck']} "
+              f"| {rf['useful_flops_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    (markdown if "--markdown" in sys.argv else main)()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [module ...]``
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import header
+
+MODULES = [
+    "bench_send_recv",          # Fig. 5
+    "bench_dispatch_combine",   # Fig. 6
+    "bench_a2e_e2a",            # Sec. 3.3
+    "bench_eplb",               # Fig. 11
+    "bench_decode_iteration",   # Fig. 20 + Sec. 7.1
+    "bench_production",         # Sec. 7.2
+    "bench_mtp",                # Sec. 4.6
+    "bench_quant",              # Sec. 4.7 / Fig. 15
+    "bench_roofline",           # Roofline (dry-run artifacts)
+]
+
+
+def main() -> None:
+    selected = sys.argv[1:] or MODULES
+    header()
+    failures = []
+    for name in selected:
+        mod_name = name if name.startswith("bench_") else f"bench_{name}"
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main()
+        except Exception as e:
+            failures.append((mod_name, e))
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.core.transformerless import (PartitionPlan, UnitSpec,
+                                        plan_partition, split_model)
+from repro.core.pd_disagg import DisaggregatedPD, PrefillTE, DecodeTE
+from repro.core.moe_attn_disagg import (DisaggregatedMoEAttention,
+                                        DomainPipeline, PipelineReport,
+                                        StageTimes, paper_stage_times)
+from repro.core.dataflow import (DataflowGraph, Node, Packet, Port, Tag)

@@ -1,0 +1,204 @@
+"""Disaggregated Prefill-Decode (§5.1).
+
+Separate prefill and decode TEs, each a FlowServe engine with its own
+mesh/sharding regime (prefill: TP-heavy, eager bucketed shapes; decode:
+EP+DP, static graph), connected by DistFlow over XCCL. The workflow
+implements the paper's 8 steps:
+
+ 1. JE picks a prefill TE (cache status + load + length-aware).
+ 2. Prefill TE schedules the request onto one of its DP groups.
+ 3. On completion, the DP master registers a PD-transfer task (metadata
+    only) with its DistFlow instance.
+ 4. JE dispatches to a decode TE by real-time load.
+ 5. Decode TE routes to a DP group (KV-usage-aware).
+ 6. The decode DP checks KV capacity; insufficient → deferred RECV
+    (backpressure); sufficient → async RECV submitted.
+ 7. DistFlow moves/reshards the KV (fabric-dependent: UB within the
+    SuperPod, RoCE/VPC for heterogeneous 910B prefill).
+ 8. Completion queues: prefill frees blocks, decode enqueues the request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.mesh_ctx import MeshCtx, make_smoke_ctx
+from repro.models.transformer import build_model
+from repro.serving.distflow import DistFlowInstance, TransferState
+from repro.serving.dp_group import DPGroup
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import (DecodeLoadBalancer, PrefillScheduler,
+                                     pick_prefill_te)
+from repro.serving.tokenizer import ByteTokenizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class PrefillTE:
+    """A prefill task executor: DP groups running bucketed prefill only."""
+    te_id: int
+    dps: List[DPGroup]
+    scheduler: PrefillScheduler
+    long_capable: bool = False
+    fabric: str = "ub"            # "roce"/"vpc" when running on 910B
+
+    def stats(self) -> Dict:
+        return {
+            "te_id": self.te_id,
+            "load": sum(len(self.scheduler.queue) for _ in (0,)),
+            "cache_hit": float(np.mean([
+                d.prefix_cache.match_fraction([1, 2, 3, 4]) or 0.0
+                for d in self.dps]) if self.dps else 0.0),
+            "mean_len": 512,
+            "long": self.long_capable,
+        }
+
+
+@dataclasses.dataclass
+class DecodeTE:
+    te_id: int
+    dps: List[DPGroup]
+    balancer: DecodeLoadBalancer
+
+
+class DisaggregatedPD:
+    """M prefill TEs × N decode TEs with full-mesh DistFlow connectivity."""
+
+    def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
+                 *, n_prefill_te: int = 2, n_decode_te: int = 1,
+                 dp_per_te: int = 2, max_batch: int = 2,
+                 max_len: int = 256, ctx: Optional[MeshCtx] = None,
+                 prefill_fabrics: Optional[Sequence[str]] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        ctx = ctx or make_smoke_ctx()
+        self.model = build_model(cfg, ctx)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        self.tokenizer = ByteTokenizer()
+
+        fabrics = list(prefill_fabrics or ["ub"] * n_prefill_te)
+        self.prefill_tes = [
+            PrefillTE(
+                te_id=i,
+                dps=[DPGroup(100 * i + j, self.model, self.params,
+                             max_batch=max_batch, max_len=max_len)
+                     for j in range(dp_per_te)],
+                scheduler=PrefillScheduler(dp_per_te),
+                long_capable=(i == 0),
+                fabric=fabrics[i])
+            for i in range(n_prefill_te)
+        ]
+        self.decode_tes = [
+            DecodeTE(
+                te_id=i,
+                dps=[DPGroup(1000 + 100 * i + j, self.model, self.params,
+                             max_batch=max_batch, max_len=max_len)
+                     for j in range(dp_per_te)],
+                balancer=DecodeLoadBalancer())
+            for i in range(n_decode_te)
+        ]
+        # isolated DistFlow instance per (prefill TE, decode TE) pair
+        self.distflow: Dict[str, DistFlowInstance] = {}
+        for p in self.prefill_tes:
+            for d in self.decode_tes:
+                key = f"p{p.te_id}-d{d.te_id}"
+                self.distflow[key] = DistFlowInstance(key, fabric=p.fabric)
+
+        self._pending_admit: List[Dict] = []
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.prompt_tokens is None:
+            req.prompt_tokens = self.tokenizer.encode(req.prompt)
+        # step 1: JE → prefill TE
+        te_id = pick_prefill_te([t.stats() for t in self.prefill_tes], req)
+        req.prefill_te = te_id
+        req.state = RequestState.PREFILLING
+        self.prefill_tes[te_id].scheduler.submit(req)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        produced = 0
+        # ---- prefill TEs: collaborative scheduling + execution ----------
+        for te in self.prefill_tes:
+            batches = te.scheduler.schedule_step(
+                hit_rate_fn=lambda r, te=te: max(
+                    d.prefix_cache.match_fraction(r.prompt_tokens)
+                    for d in te.dps))
+            for dp, batch in zip(te.dps, batches):
+                for req in batch:
+                    cache1, logits = dp.run_prefill(req)   # step 2
+                    # step 3: register the transfer (metadata only)
+                    dte = self._pick_decode_te(req)        # step 4
+                    req.decode_te = dte.te_id
+                    flow = self.distflow[f"p{te.te_id}-d{dte.te_id}"]
+                    task = flow.register(req.req_id, cache1,
+                                         {"logits": logits,
+                                          "prompt_len": req.prompt_len})
+                    req.state = RequestState.TRANSFERRING
+                    self._pending_admit.append(
+                        {"req": req, "flow": flow, "task": task.task_id,
+                         "te": dte, "logits": logits})
+        # ---- decode side: trigger transfers under backpressure ----------
+        still: List[Dict] = []
+        for item in self._pending_admit:
+            req, flow, dte = item["req"], item["flow"], item["te"]
+            dp_id = dte.balancer.pick([d.status() for d in dte.dps], req)
+            dp = (None if dp_id is None
+                  else next(d for d in dte.dps if d.dp_id == dp_id))
+            # step 6: capacity check (backpressure when absent)
+            if dp is None or not dp.can_admit(req):
+                flow.trigger(item["task"], lambda: False)
+                still.append(item)
+                continue
+            ok = flow.trigger(item["task"], lambda: True)  # step 7
+            assert ok
+            for task in flow.poll_completions():           # step 8
+                if task.req_id == req.req_id:
+                    dp.admit(req, task.result, item["logits"])
+        self._pending_admit = still
+        # ---- decode TEs: continuous batching ----------------------------
+        for dte in self.decode_tes:
+            for dp in dte.dps:
+                produced += dp.decode_step_all()
+                for r in dp.finished:
+                    self.finished.append(r)
+                dp.finished = []
+        return produced
+
+    def _pick_decode_te(self, req: Request) -> DecodeTE:
+        loads = [(sum(d.active for d in t.dps), i)
+                 for i, t in enumerate(self.decode_tes)]
+        return self.decode_tes[min(loads)[1]]
+
+    # ------------------------------------------------------------------
+    def run_until_done(self, reqs: Sequence[Request],
+                       max_steps: int = 10_000) -> List[Request]:
+        for r in reqs:
+            self.submit(r)
+        steps = 0
+        while len(self.finished) < len(reqs):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"stalled: {len(self.finished)}/{len(reqs)} done")
+        for te in self.decode_tes:
+            for d in te.dps:
+                d.drain()
+        return list(self.finished)
+
+    def close(self) -> None:
+        for te in self.prefill_tes:
+            for d in te.dps:
+                d.close()
+        for te in self.decode_tes:
+            for d in te.dps:
+                d.close()

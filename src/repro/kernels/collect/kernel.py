@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: EPLB Collect — token-count histogram after gating.
+
+§4.5 step 1 inserts a Collect kernel after gating to track tokens per
+expert per NPU; counts land in on-chip memory and are drained
+periodically. TPU adaptation: assignment blocks stream to VMEM; each
+block contributes a compare-broadcast one-hot reduced on the VPU into an
+int32 VMEM accumulator; the single [E] vector is written once at the end
+(metadata-sized, like the paper's 32-byte fields).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(ids_ref, o_ref, acc_ref, *, n_blocks: int, n_experts: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ids = ids_ref[...]
+    eids = jax.lax.broadcasted_iota(jnp.int32, (1, n_experts), 1)
+    onehot = (ids[:, None] == eids) & (ids >= 0)[:, None]
+    acc_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+    @pl.when(i == n_blocks - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "bn", "interpret"))
+def collect(expert_ids, *, n_experts: int, bn: int = 1024,
+            interpret: bool = True):
+    """expert_ids [N] int32 → counts [n_experts] int32."""
+    n = expert_ids.shape[0]
+    bn = min(bn, n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_blocks=grid[0], n_experts=n_experts),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_experts,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_experts,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((n_experts,), jnp.int32)],
+        interpret=interpret,
+    )(expert_ids)

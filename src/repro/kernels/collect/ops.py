@@ -1,0 +1,26 @@
+"""jit'd wrapper: pads N with -1 (invalid) sentinels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.collect.kernel import collect as _k
+from repro.kernels.collect.ref import collect_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_experts", "use_pallas", "interpret"))
+def expert_counts(expert_ids, *, n_experts: int, use_pallas: bool = True,
+                  interpret: bool = True):
+    if not use_pallas:
+        return collect_ref(expert_ids, n_experts)
+    n = expert_ids.shape[0]
+    pad = (-n) % 128
+    if pad:
+        expert_ids = jnp.pad(expert_ids, (0, pad), constant_values=-1)
+    bn = min(1024, n + pad)
+    while (n + pad) % bn:
+        bn //= 2
+    return _k(expert_ids, n_experts=n_experts, bn=bn, interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: expert-load histogram (the EPLB Collect kernel)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def collect_ref(expert_ids, n_experts: int):
+    """expert_ids [N] int32 (top-k routing flattened; -1 = invalid)
+    → counts [n_experts] int32. §4.5 step 1: tokens per expert per
+    interval."""
+    valid = expert_ids >= 0
+    onehot = (expert_ids[:, None] ==
+              jnp.arange(n_experts)[None, :]) & valid[:, None]
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: flash-decoding GQA attention over the KV cache.
+
+The decode attention kernel is the per-die hot loop of the paper's MLA/
+attention stage (Fig. 20: 21.8% of iteration latency, growing with
+sequence). TPU adaptation: grid (B, KV, L/BL); KV blocks stream HBM→VMEM
+while an online-softmax state (m, l, acc) lives in VMEM scratch; the
+G = H/KV query heads of a KV group ride the MXU together (the sublane
+dim), so GQA grouping is free. Supports ring-buffer sliding windows via
+position arithmetic — no gather needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_l: int, bl: int, window: int,
+            scale: float):
+    li = pl.program_id(2)
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                             # [G, hd]
+    k = k_ref[0, :, 0]                          # [BL, hd]
+    v = v_ref[0, :, 0]                          # [BL, vd]
+    pos = pos_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [G, BL]
+    slots = li * bl + jax.lax.broadcasted_iota(jnp.int32, (1, bl), 1)
+    if window > 0:
+        delta = (pos - slots) % window
+        kv_pos = pos - delta
+        valid = (kv_pos >= 0) & (kv_pos > pos - window) & (kv_pos <= pos)
+    else:
+        valid = slots <= pos
+    s = jnp.where(valid, s, -jnp.inf)
+    m_blk = jnp.max(s, axis=-1)                           # [G]
+    m_new = jnp.maximum(m_ref[...], m_blk)
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_ref[...]),
+                     jnp.exp(m_ref[...] - safe_m), 0.0)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=-1)
+    acc_ref[...] = (corr[:, None] * acc_ref[...]
+                    + jax.lax.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(li == n_l - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...][:, None], 1e-30))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bl", "window", "interpret"))
+def decode_attention(q, k, v, positions, *, bl: int = 512, window: int = 0,
+                     interpret: bool = True):
+    """q [B,H,hd]; k/v [B,L,KV,hd]; positions [B] → [B,H,vd] f32."""
+    B, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    G = H // KV
+    bl = min(bl, L)
+    grid = (B, KV, L // bl)
+    qr = q.reshape(B, KV, G, hd)
+    import numpy as np
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_l=grid[2], bl=bl, window=window,
+                          scale=float(1.0 / np.sqrt(hd))),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, li: (b,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, li: (b, h, 0, 0)),
+            pl.BlockSpec((1, bl, 1, hd), lambda b, h, li: (b, li, h, 0)),
+            pl.BlockSpec((1, bl, 1, vd), lambda b, h, li: (b, li, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, vd), lambda b, h, li: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, vd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(positions, qr, k, v)
+    return out.reshape(B, H, vd)

@@ -1,0 +1,35 @@
+"""jit'd wrapper for the flash-decoding kernel (pads L to block size)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention as _k
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "use_pallas", "interpret"))
+def decode_attention(q, k, v, positions, *, window: int = 0,
+                     use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return decode_attention_ref(q, k, v, positions, window=window)
+    B, L = k.shape[0], k.shape[1]
+    bl = min(512, L)
+    while L % bl:
+        bl //= 2
+    if bl < 8:  # pad L up to a clean block size
+        pad = (-L) % 128
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded slots must be invalid: position arithmetic already masks
+        # slots > pos for window==0; for ring windows pad breaks slot math,
+        # so fall back to the reference there.
+        if window > 0:
+            return decode_attention_ref(q, k[:, :L], v, positions,
+                                        window=window)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bl = min(128, L + pad)
+    return _k(q, k, v, positions, bl=bl, window=window,
+              interpret=interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: GQA decode attention over a (optionally windowed)
+KV cache with per-sequence positions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, positions, *, window: int = 0):
+    """q [B,H,hd]; k/v [B,L,KV,hd]; positions [B] (the NEW token's
+    position — entries at kv_pos ≤ positions are valid). Ring-buffer
+    window semantics match models/attention.py. → [B,H,vd] f32."""
+    B, H, hd = q.shape
+    L, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,blkd->bkgl", qr, k.astype(jnp.float32)) * scale
+    slots = jnp.arange(L)
+    if window > 0:
+        delta = (positions[:, None] - slots[None, :]) % window
+        kv_pos = positions[:, None] - delta
+        valid = (kv_pos >= 0) & (kv_pos > positions[:, None] - window)
+        valid &= kv_pos <= positions[:, None]
+    else:
+        valid = slots[None, :] <= positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgl,blkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, v.shape[-1])

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: grouped expert FFN (gate/up/SiLU/down fused).
+
+The MoE expert matmul is the paper's dominant expert-die compute (§3.2,
+§5.2). TPU adaptation: one grid step per (expert, token-block, ff-block);
+the gate/up projections and the SiLU product run on the MXU/VPU without
+materializing the [C, f] hidden in HBM — the f-dim is blocked and the
+down-projection accumulated in a VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *, n_f: int):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # [BC, d]
+    g = jax.lax.dot(x, wg_ref[0],
+                    preferred_element_type=jnp.float32)      # [BC, BF]
+    u = jax.lax.dot(x, wu_ref[0],
+                    preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g) * u).astype(x_ref.dtype)
+    acc_ref[...] += jax.lax.dot(h, wd_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(fi == n_f - 1)
+    def _done():
+        o_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "bf", "interpret"))
+def gmm(buckets, we_gate, we_up, we_down, *, bc: int = 128,
+        bf: int = 512, interpret: bool = True):
+    """buckets [E, C, d] → [E, C, d] f32. C % bc == 0, f % bf == 0
+    (ops.py pads)."""
+    E, C, d = buckets.shape
+    f = we_gate.shape[-1]
+    bc, bf = min(bc, C), min(bf, f)
+    grid = (E, C // bc, f // bf)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_f=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, c, fi: (e, c, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, c, fi: (e, 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda e, c, fi: (e, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda e, c, fi: (e, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, c, fi: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+        interpret=interpret,
+    )(buckets, we_gate, we_up, we_down)

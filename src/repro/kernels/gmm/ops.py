@@ -1,0 +1,31 @@
+"""jit'd wrapper for the grouped expert FFN kernel (pads capacity/ff)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gmm.kernel import gmm as _gmm
+from repro.kernels.gmm.ref import gmm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def expert_ffn(buckets, we_gate, we_up, we_down, *, use_pallas: bool = True,
+               interpret: bool = True):
+    if not use_pallas:
+        return gmm_ref(buckets, we_gate, we_up, we_down)
+    E, C, d = buckets.shape
+    f = we_gate.shape[-1]
+    padc = (-C) % 8
+    if padc:
+        buckets = jnp.pad(buckets, ((0, 0), (0, padc), (0, 0)))
+    bc = min(128, C + padc)
+    while (C + padc) % bc:
+        bc //= 2
+    bf = min(512, f)
+    while f % bf:
+        bf //= 2
+    out = _gmm(buckets, we_gate, we_up, we_down, bc=bc, bf=bf,
+               interpret=interpret)
+    return out[:, :C]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: capacity-padded grouped expert matmul (SwiGLU FFN)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(buckets, we_gate, we_up, we_down):
+    """buckets [E, C, d]; we_gate/we_up [E, d, f]; we_down [E, f, d]
+    → [E, C, d] f32 (the MoE hot loop: §3.2 Expert MatMul)."""
+    g = jnp.einsum("ecd,edf->ecf", buckets.astype(jnp.float32),
+                   we_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buckets.astype(jnp.float32),
+                   we_up.astype(jnp.float32))
+    h = g / (1 + jnp.exp(-g)) * u          # SiLU(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, we_down.astype(jnp.float32))

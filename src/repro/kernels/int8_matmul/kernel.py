@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: w8a8 INT8 matmul with fused dequant rescale.
+
+Adaptation of the paper's hardware-accelerated ``npu_quant_matmul``
+(§4.7) to the TPU MXU: int8×int8 → int32 accumulation on the MXU, with
+the token-wise activation scale and channel-wise weight scale applied in
+the epilogue. Tiling: (BM × BK) × (BK × BN) blocks, K-innermost grid with
+an int32 VMEM accumulator; MXU-aligned tiles (multiples of 128 on the
+lane dim, 32 on the int8 sublane dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, xs_ref, w_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * xs_ref[...][:, None]
+                      * ws_ref[...][None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(x_q, x_scale, w_q, w_scale, *, bm: int = 128,
+                bn: int = 128, bk: int = 512, interpret: bool = True):
+    """x_q [M,K] int8, x_scale [M] f32, w_q [K,N] int8, w_scale [N] f32
+    → [M,N] f32. Shapes must divide the block sizes (ops.py pads)."""
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, x_scale, w_q, w_scale)

@@ -1,0 +1,50 @@
+"""jit'd public wrapper: padding to MXU-aligned tiles + quantize-dequant
+helpers. ``use_pallas`` selects the kernel (interpret mode on CPU) vs the
+pure-jnp reference path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul as _kernel_call
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quantized_matmul(x_q, x_scale, w_q, w_scale, *, use_pallas: bool = True,
+                     interpret: bool = True):
+    """Shape-flexible entry: pads to (8,128)-aligned tiles, dispatches to
+    the Pallas kernel, slices back."""
+    if not use_pallas:
+        return int8_matmul_ref(x_q, x_scale, w_q, w_scale)
+    m, k = x_q.shape
+    n = w_q.shape[1]
+    xp = _pad_to(_pad_to(x_q, 8, 0), 128, 1)
+    wp = _pad_to(_pad_to(w_q, 128, 0), 128, 1)
+    xs = _pad_to(x_scale, 8, 0)
+    ws = _pad_to(w_scale, 128, 0)
+    bm = min(128, xp.shape[0])
+    bn = min(128, wp.shape[1])
+    bk = min(512, xp.shape[1])
+    # block sizes must divide the padded dims
+    while xp.shape[0] % bm:
+        bm //= 2
+    while wp.shape[1] % bn:
+        bn //= 2
+    while xp.shape[1] % bk:
+        bk //= 2
+    out = _kernel_call(xp, xs, wp, ws, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)
+    return out[:m, :n]

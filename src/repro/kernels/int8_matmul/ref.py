@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the w8a8 INT8 matmul (npu_quant_matmul analogue)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q, x_scale, w_q, w_scale):
+    """x_q: [M, K] int8; x_scale: [M] f32 (token-wise);
+    w_q: [K, N] int8; w_scale: [N] f32 (channel-wise). → [M, N] f32."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]

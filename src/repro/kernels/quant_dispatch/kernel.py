@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: fused dispatch quantization (§3.2 step 2, §4.7).
+
+On Ascend the dispatch kernel quantizes FP16/BF16→INT8 with vector
+instructions while the payload sits in the AIV unified buffer, so the
+wire sees half the bytes at zero extra HBM passes. The TPU analogue:
+token blocks stream HBM→VMEM once; the VPU computes the per-token amax,
+scale, and rounded int8 values in registers; int8 + scales are written
+out. One read of the bf16 tensor, one write of the int8 tensor — the
+fusion the paper gets from doing it inside the communication kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def quant_dispatch(x, *, bt: int = 256, interpret: bool = True):
+    """x [T, d] → (int8 [T, d], f32 [T]). T % bt == 0 (ops.py pads)."""
+    T, d = x.shape
+    bt = min(bt, T)
+    grid = (T // bt,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((bt, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bt,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((T, d), jnp.int8),
+                   jax.ShapeDtypeStruct((T,), jnp.float32)),
+        interpret=interpret,
+    )(x)

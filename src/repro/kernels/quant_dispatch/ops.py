@@ -1,0 +1,25 @@
+"""jit'd wrapper: pads the token dim, exposes use_pallas switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_dispatch.kernel import quant_dispatch as _k
+from repro.kernels.quant_dispatch.ref import quant_dispatch_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_quantize(x, *, use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return quant_dispatch_ref(x)
+    T = x.shape[0]
+    pad = (-T) % 8
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    bt = min(256, T + pad)
+    while (T + pad) % bt:
+        bt //= 2
+    q, s = _k(x, bt=bt, interpret=interpret)
+    return q[:T], s[:T]

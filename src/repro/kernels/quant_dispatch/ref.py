@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: fused token-wise INT8 quantization for dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_dispatch_ref(x):
+    """x [T, d] → (int8 [T, d], f32 scales [T]). §3.2 step 2: quantize
+    FP16/BF16 → INT8 inside the dispatch kernel, halving wire bytes."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]

@@ -1,0 +1,40 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any jax import: jax locks the device
+# count at first initialization. Everything below is ordinary code.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
+from repro.launch.dryrun_lib import run_many, run_one  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every "
+                    "(arch × input-shape × mesh) combination.")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable); default: all 10 "
+                         "assigned + the paper's deepseek-v3-671b")
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=list(INPUT_SHAPES), help="input shape (repeatable)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-skip", action="store_true",
+                    help="re-run combinations that already have results")
+    ap.add_argument("--assigned-only", action="store_true",
+                    help="only the 10 assigned archs (skip deepseek-v3-671b)")
+    args = ap.parse_args()
+
+    archs = args.arch or (ASSIGNED_ARCHS if args.assigned_only else ALL_ARCHS)
+    shapes = args.shape or list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    run_many(archs, shapes, meshes, args.out,
+             skip_existing=not args.no_skip)
+
+
+if __name__ == "__main__":
+    main()

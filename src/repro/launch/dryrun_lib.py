@@ -1,0 +1,184 @@
+"""Dry-run machinery: lower + compile every (arch × shape × mesh) combo.
+
+Import this ONLY after device count is configured (dryrun.py sets
+``--xla_force_host_platform_device_count=512`` before any jax import).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (derive_ctx, input_shardings, input_specs,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models.transformer import build_model
+from repro.roofline.analysis import RooflineTerms, analytic_model_flops
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.train.optimizer import AdamWState, init_adamw
+
+
+def _mem_stats(compiled) -> Dict[str, float]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": m.argument_size_in_bytes,
+            "output_bytes": m.output_size_in_bytes,
+            "temp_bytes": m.temp_size_in_bytes,
+            "alias_bytes": m.alias_size_in_bytes,
+            "code_bytes": m.generated_code_size_in_bytes,
+            "peak_bytes_estimate": (m.argument_size_in_bytes
+                                    + m.output_size_in_bytes
+                                    + m.temp_size_in_bytes
+                                    - m.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_stats(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            ctx_overrides: Optional[dict] = None,
+            keep_hlo: bool = False,
+            sharding_profile: str = "default") -> Dict[str, Any]:
+    """Lower + compile one combination; return the result record.
+
+    sharding_profile: "default" (the recorded baseline) or "decode_opt"
+    (§Perf: replicate weights over data at decode, EP across both axes).
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(ctx_overrides or {})
+    param_rules = None
+    if sharding_profile == "decode_opt":
+        param_rules = shd.DECODE_RULES
+        total = mesh.shape["data"] * mesh.shape["model"]
+        if cfg.has_moe and cfg.moe.num_experts % total == 0:
+            overrides.setdefault("ep_axis", ("data", "model"))
+    ctx = derive_ctx(mesh, shape, cfg, multi_pod, **overrides)
+    long_context = shape_name == "long_500k"
+    model = build_model(cfg, ctx, long_context=long_context)
+
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "sharding_profile": sharding_profile,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size,
+        "batch_axes": list(ctx.batch_axes),
+        "moe_impl": ctx.moe_impl,
+        "long_context_window": (model.window_override or 0),
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    t0 = time.time()
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shd.param_shardings(params_shape, mesh, param_rules)
+    specs = input_specs(cfg, shape, model, ctx)
+    shardings = input_shardings(cfg, shape, model, ctx)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(init_adamw, params_shape)
+        opt_sh = AdamWState(step=NamedSharding(mesh, P()),
+                            m=shd.param_shardings(opt_shape.m, mesh),
+                            v=shd.param_shardings(opt_shape.v, mesh))
+        step = make_train_step(model)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, opt_sh, shardings["batch"]),
+                         donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model)
+        if "memory" in specs:
+            jitted = jax.jit(step, in_shardings=(
+                p_sh, shardings["tokens"], shardings["memory"]))
+            args = (params_shape, specs["tokens"], specs["memory"])
+        else:
+            jitted = jax.jit(step, in_shardings=(p_sh, shardings["tokens"]))
+            args = (params_shape, specs["tokens"])
+    else:
+        step = make_serve_step(model)
+        jitted = jax.jit(step, in_shardings=(
+            p_sh, shardings["cache"], shardings["tokens"],
+            shardings["positions"]), donate_argnums=(1,))
+        args = (params_shape, specs["cache"], specs["tokens"],
+                specs["positions"])
+
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    rec["lower_s"] = t1 - t0
+    rec["compile_s"] = t2 - t1
+    rec["memory_analysis"] = _mem_stats(compiled)
+    rec["cost_analysis_raw"] = _cost_stats(compiled)
+
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    parsed = analyze_hlo(hlo)
+    terms = RooflineTerms(
+        flops=parsed.flops,
+        hbm_bytes=parsed.hbm_bytes,
+        coll_bytes={k: int(v) for k, v in parsed.coll_bytes.items()},
+        n_devices=mesh.size,
+        model_flops=analytic_model_flops(cfg, shape),
+    )
+    rec["roofline"] = terms.as_dict()
+    if keep_hlo:
+        rec["hlo"] = hlo
+    return rec
+
+
+def run_many(archs, shapes, meshes, out_dir: str,
+             skip_existing: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(out_dir, tag + ".json")
+                if skip_existing and os.path.exists(path):
+                    ok = json.load(open(path)).get("ok", False)
+                    if ok:
+                        print(f"[skip] {tag}", flush=True)
+                        continue
+                print(f"[run ] {tag}", flush=True)
+                try:
+                    rec = run_one(arch, shape, mp)
+                    rec["ok"] = True
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    print(f"[ ok ] {tag} compile={rec['compile_s']:.1f}s "
+                          f"tc={r['t_compute_s']:.2e} tm={r['t_memory_s']:.2e} "
+                          f"tx={r['t_collective_s']:.2e} "
+                          f"bound={r['bottleneck']} "
+                          f"useful={r['useful_flops_ratio']:.2f}",
+                          flush=True)

@@ -1,0 +1,142 @@
+"""Step functions (train / prefill / serve) + their abstract input specs.
+
+These are the exact functions the multi-pod dry-run lowers and compiles,
+and the same functions the launchers execute for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.mesh_ctx import MeshCtx
+from repro.models.transformer import Model, build_model
+from repro.launch import sharding as shd
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_adamw)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+def derive_ctx(mesh, shape: InputShape, cfg: ModelConfig,
+               multi_pod: bool, **overrides) -> MeshCtx:
+    """Pick batch axes (largest prefix of (pod, data) that divides the
+    global batch) and the MoE strategy for this input shape."""
+    candidates = ("pod", "data") if multi_pod else ("data",)
+    batch_axes = ()
+    b = shape.global_batch
+    for i in range(len(candidates), 0, -1):
+        axes = candidates[:i] if multi_pod else candidates
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if b % prod == 0:
+            batch_axes = tuple(axes)
+            break
+        if not multi_pod:
+            break
+    kw = dict(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        moe_impl="gather" if shape.kind == "decode" else "alltoall",
+        remat="full" if shape.kind == "train" else "none",
+    )
+    kw.update(overrides)
+    return MeshCtx(**kw)
+
+
+def memory_spec(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.num_frontend_tokens,
+             cfg.encoder_d_model or cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model: Model,
+                ctx: MeshCtx) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    mem = memory_spec(cfg, B)
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if mem is not None:
+            batch["memory"] = mem
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if mem is not None:
+            out["memory"] = mem
+        return out
+    # decode: one new token against a seq_len cache
+    return {
+        "cache": model.cache_spec(B, S),
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape, model: Model,
+                    ctx: MeshCtx) -> Dict[str, Any]:
+    bs = shd.batch_pspec(ctx, shape.global_batch)
+    tok = NamedSharding(ctx.mesh, bs)
+    mem = NamedSharding(ctx.mesh, P(*(tuple(bs) + (None, None))))
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if memory_spec(cfg, shape.global_batch) is not None:
+            batch["memory"] = mem
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": tok}
+        if memory_spec(cfg, shape.global_batch) is not None:
+            out["memory"] = mem
+        return out
+    return {
+        "cache": shd.cache_shardings(
+            model.cache_spec(shape.global_batch, shape.seq_len), ctx),
+        "tokens": tok,
+        "positions": NamedSharding(ctx.mesh, bs),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_fn(p):
+            return model.forward_train(p, batch["tokens"], batch["labels"],
+                                       memory=batch.get("memory"))
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, params,
+                                                      grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        metrics.pop("expert_counts", None)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, tokens, memory=None):
+        return model.prefill(params, tokens, memory=memory)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+    return serve_step

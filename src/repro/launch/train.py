@@ -1,0 +1,41 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.train import AdamWConfig, DataConfig, TrainConfig, Trainer
+
+    name = args.arch + ("-smoke" if args.smoke else "")
+    cfg = get_config(name)
+    tcfg = TrainConfig(
+        steps=args.steps, log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                        total_steps=args.steps),
+        data=DataConfig(seq_len=args.seq_len, global_batch=args.batch))
+    tr = Trainer(cfg, tcfg)
+    tr.maybe_restore()
+    tr.run(on_log=lambda r: print(
+        f"step {r['step']:5d}  loss {r['loss']:.4f}  nll {r['nll']:.4f}  "
+        f"gnorm {r['grad_norm']:.2f}  lr {r['lr']:.2e}  "
+        f"{r['wall_s']:.1f}s", flush=True))
+
+
+if __name__ == "__main__":
+    main()

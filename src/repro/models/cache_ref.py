@@ -1,0 +1,39 @@
+"""In-place cache views for decode.
+
+During decode, per-layer KV/state caches are carried through the layer
+scan as one stacked buffer per pattern position, and each layer updates
+its slice via a scatter into the stacked buffer. This lets XLA keep the
+cache in place inside the while loop (the write per step is just the new
+token's KV, not a full cache copy — the difference between ~128 KB and
+~67 MB per layer per decode step).
+
+A :class:`CacheRef` is (stacked arrays, layer index). Blocks outside the
+scan (prefix/tail) wrap their un-stacked caches with a leading 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CacheRef(NamedTuple):
+    stack: Dict[str, jax.Array]   # each array: [n_layers, ...]
+    idx: Any                      # scalar int32 layer index
+
+    def read(self, name: str) -> jax.Array:
+        return jax.lax.dynamic_index_in_dim(self.stack[name], self.idx, 0,
+                                            keepdims=False)
+
+    def with_stack(self, stack) -> "CacheRef":
+        return CacheRef(stack, self.idx)
+
+
+def wrap_single(cache: Dict[str, jax.Array]) -> CacheRef:
+    """Wrap an un-stacked per-layer cache as a 1-deep stack."""
+    return CacheRef({k: v[None] for k, v in cache.items()}, 0)
+
+
+def unwrap_single(ref: CacheRef) -> Dict[str, jax.Array]:
+    return {k: v[0] for k, v in ref.stack.items()}

@@ -1,0 +1,344 @@
+"""FFN blocks: dense MLP and Mixture-of-Experts.
+
+The MoE layer implements the paper's two communication regimes as two
+interchangeable execution strategies (both inside ``shard_map`` so the same
+code runs on the 1×1 smoke mesh and on 256/512-device meshes):
+
+* ``alltoall`` — XCCL ``dispatch``/``combine`` (§3.2): tokens are
+  sequence-sharded over the EP axis; each rank packs per-destination-rank
+  capacity buffers, `lax.all_to_all` routes them, local experts compute via
+  a capacity-padded grouped matmul, and a reverse all_to_all + weighted sum
+  combines. Used for train/prefill.
+
+* ``gather`` — the pull-based dispatch over global shared memory (§3.1/§3.2
+  "pull" protocol): tokens are *replicated* over the EP axis (the shared-
+  memory analogue), each rank gathers the tokens routed to its local
+  experts, computes, and a psum acts as combine. Used for decode, where the
+  token count per step is small — this is exactly the regime where the
+  paper's memory-semantic pull beats a scatter protocol.
+
+Shared experts (DeepSeek-MoE / DeepSeek-V3 / Llama-4) run as a dense MLP
+outside the routed path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import dense_init
+from repro.models.mesh_ctx import MeshCtx
+
+
+# ===========================================================================
+# Dense MLP (SwiGLU)
+# ===========================================================================
+def mlp_init(key, d: int, f: int, dtype) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], (d, f), dtype, d),
+        "wi_up": dense_init(ks[1], (d, f), dtype, d),
+        "wo": dense_init(ks[2], (f, d), dtype, f),
+    }
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, params["wo"])
+
+
+# ===========================================================================
+# MoE
+# ===========================================================================
+def moe_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    e: MoEConfig = cfg.moe
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e.num_experts), jnp.float32, d),
+        "we_gate": dense_init(ks[1], (e.num_experts, d, e.expert_d_ff),
+                              dtype, d),
+        "we_up": dense_init(ks[2], (e.num_experts, d, e.expert_d_ff),
+                            dtype, d),
+        "we_down": dense_init(ks[3], (e.num_experts, e.expert_d_ff, d),
+                              dtype, e.expert_d_ff),
+    }
+    if e.num_shared_experts:
+        f_sh = (e.shared_d_ff or e.expert_d_ff) * e.num_shared_experts
+        params["shared"] = mlp_init(ks[4], d, f_sh, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Capacity machinery (shared by both strategies and by the local oracle)
+# ---------------------------------------------------------------------------
+def capacity_rank(dest: jax.Array, n_dest: int, capacity: int):
+    """dest: [N] int32 in [0, n_dest). Returns (rank_within_dest [N],
+    keep [N] bool). FIFO ranking: earlier assignments win slots (matches
+    capacity-based MoE semantics)."""
+    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)      # [N, n_dest]
+    ranks = jnp.cumsum(onehot, axis=0) - 1
+    my_rank = jnp.take_along_axis(ranks, dest[:, None], axis=1)[:, 0]
+    keep = my_rank < capacity
+    return my_rank, keep
+
+
+def scatter_to_buckets(values: jax.Array, dest: jax.Array, rank: jax.Array,
+                       keep: jax.Array, n_dest: int, capacity: int,
+                       fill=0):
+    """values: [N, ...] → buckets [n_dest, capacity, ...]; dropped entries
+    go to a sacrificial slot that is sliced away."""
+    safe_rank = jnp.where(keep, rank, capacity)
+    buf_shape = (n_dest, capacity + 1) + values.shape[1:]
+    buf = jnp.full(buf_shape, fill, values.dtype)
+    buf = buf.at[dest, safe_rank].set(values, mode="drop")
+    return buf[:, :capacity]
+
+
+def _route(x_flat: jax.Array, router_w: jax.Array, top_k: int):
+    """Returns (expert idx [T,k], weights [T,k] f32, probs [T,E] f32,
+    logits [T,E] f32)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return idx, w, probs, logits
+
+
+def _expert_ffn(params_slice, buckets: jax.Array) -> jax.Array:
+    """buckets: [E_local, C, d] → [E_local, C, d] (capacity-padded GMM)."""
+    g = jnp.einsum("ecd,edf->ecf", buckets, params_slice["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buckets, params_slice["we_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      params_slice["we_down"])
+
+
+def _aux_stats(probs, idx, n_experts: int, logits):
+    """Load-balance + router-z losses (Switch-style)."""
+    k = idx.shape[-1]
+    # fraction of assignments per expert
+    counts = jnp.sum(jax.nn.one_hot(idx, n_experts, dtype=jnp.float32),
+                     axis=(0, 1))
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p = jnp.mean(probs, axis=0)
+    lb = n_experts * jnp.sum(f * p)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return lb, z, counts
+
+
+# ---------------------------------------------------------------------------
+# Strategy 1: all_to_all dispatch/combine (XCCL §3.2)
+# ---------------------------------------------------------------------------
+def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
+                        ep_size: int, all_axes: Tuple[str, ...],
+                        train: bool):
+    """Per-shard body. x: [B_l, S_l, d], sequence sharded over ep_axis.
+    Requires num_experts % ep_size == 0 and ep_size > 1."""
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = e.top_k
+    E = e.num_experts
+    E_local = E // ep_size
+
+    xf = x.reshape(T, d)
+    idx, w, probs, logits = _route(xf, params["router"], k)
+    lb, z, counts = _aux_stats(probs, idx, E, logits)
+
+    N = T * k
+    flat_idx = idx.reshape(N)
+    flat_w = w.reshape(N)
+    tok_of = jnp.repeat(jnp.arange(T), k)
+
+    # ---- stage 1: pack per-destination-rank capacity buffers -------------
+    dest_rank = flat_idx // E_local
+    cap_s = max(int(N / ep_size * e.capacity_factor), 4)
+    rank1, keep1 = capacity_rank(dest_rank, ep_size, cap_s)
+    send_tok = scatter_to_buckets(xf[tok_of], dest_rank, rank1, keep1,
+                                  ep_size, cap_s)                  # [R,C,d]
+    send_eid = scatter_to_buckets(flat_idx % E_local, dest_rank, rank1,
+                                  keep1, ep_size, cap_s, fill=-1)  # [R,C]
+    # ---- dispatch (all_to_all over the EP axis) ---------------------------
+    recv_tok = jax.lax.all_to_all(send_tok, ep_axis, 0, 0, tiled=True)
+    recv_eid = jax.lax.all_to_all(send_eid, ep_axis, 0, 0, tiled=True)
+    # ---- local expert compute (capacity-padded grouped matmul) ------------
+    flat_tok = recv_tok.reshape(ep_size * cap_s, d)
+    flat_eid = recv_eid.reshape(ep_size * cap_s)
+    valid = flat_eid >= 0
+    cap_e = max(int(ep_size * cap_s / E_local * e.capacity_factor), 4)
+    rank2, keep2 = capacity_rank(jnp.where(valid, flat_eid, 0), E_local,
+                                 cap_e)
+    keep2 = keep2 & valid
+    buckets = scatter_to_buckets(flat_tok, jnp.where(valid, flat_eid, 0),
+                                 rank2, keep2, E_local, cap_e)
+    local_params = {
+        n: params[n] for n in ("we_gate", "we_up", "we_down")
+    }
+    out_b = _expert_ffn(local_params, buckets)
+    y_flat = out_b[jnp.where(valid, flat_eid, 0),
+                   jnp.clip(rank2, 0, cap_e - 1)]
+    y_flat = jnp.where(keep2[:, None], y_flat, 0.0).astype(x.dtype)
+    # ---- combine (reverse all_to_all + weighted sum) -----------------------
+    back = jax.lax.all_to_all(y_flat.reshape(ep_size, cap_s, d),
+                              ep_axis, 0, 0, tiled=True)           # [R,C,d]
+    y_assign = back[dest_rank, jnp.clip(rank1, 0, cap_s - 1)]
+    y_assign = jnp.where(keep1[:, None], y_assign, 0.0)
+    y = jnp.zeros((T, d), x.dtype).at[tok_of].add(
+        (y_assign * flat_w[:, None]).astype(x.dtype))
+    # every shard holds distinct tokens → reduce over batch AND ep axes
+    lb = jax.lax.pmean(lb, all_axes)
+    z = jax.lax.pmean(z, all_axes)
+    counts = jax.lax.psum(counts, all_axes)
+    return y.reshape(B, S, d), (lb, z, counts)
+
+
+# ---------------------------------------------------------------------------
+# Strategy 2: pull-based gather-compute-reduce (decode)
+# ---------------------------------------------------------------------------
+def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
+                      ep_size: int, batch_axes: Tuple[str, ...],
+                      mesh_shape: Dict[str, int], train: bool):
+    """x: [B_l, S, d]. Each rank pulls the tokens routed to its local
+    experts and psum combines (the pull-based dispatch analogue).
+
+    ``ep_axes`` may be a single axis name or a TUPLE spanning the batch
+    axes (the paper's EP-per-die layout, e.g. 256 experts over a 16×16
+    pod): then the token batch is first all-gathered over the overlapping
+    axes (A2E — tokens fan in to the expert dies) and the local batch
+    shard is sliced back after the psum combine (E2A).
+
+    ``ep_size`` is the *effective* EP degree: 1 when experts are
+    replicated (indivisible expert count or 1×1 mesh)."""
+    e = cfg.moe
+    if isinstance(ep_axes, str):
+        ep_axes = (ep_axes,)
+    replicated_experts = ep_size == 1
+    overlap = tuple(a for a in ep_axes if a in batch_axes) \
+        if not replicated_experts else ()
+
+    B, S, d = x.shape
+    if overlap:
+        for a in overlap:              # A2E: fan tokens in to expert dies
+            x = jax.lax.all_gather(x, a, axis=0, tiled=True)
+    T = x.shape[0] * S
+    k = e.top_k
+    E = e.num_experts
+    E_local = E if replicated_experts else E // ep_size
+
+    xf = x.reshape(T, d)
+    idx, w, probs, logits = _route(xf, params["router"], k)
+    lb, z, counts = _aux_stats(probs, idx, E, logits)
+
+    N = T * k
+    flat_idx = idx.reshape(N)
+    flat_w = w.reshape(N)
+    tok_of = jnp.repeat(jnp.arange(T), k)
+
+    if replicated_experts:
+        my_eid, mine = flat_idx, jnp.ones((N,), bool)
+    else:
+        r = jnp.int32(0)
+        for a in ep_axes:
+            r = r * mesh_shape[a] + jax.lax.axis_index(a)
+        mine = (flat_idx // E_local) == r
+        my_eid = flat_idx % E_local
+    # expected assignments PER EXPERT = N/E (buckets are per expert); a
+    # 4× skew margin covers routing imbalance in the sharded case (EPLB
+    # keeps the tail bounded)
+    cap = max(int(N / E * e.capacity_factor
+                  * (1 if replicated_experts else 4)), 4)
+    rank, keep = capacity_rank(jnp.where(mine, my_eid, 0), E_local, cap)
+    keep = keep & mine
+    buckets = scatter_to_buckets(xf[tok_of], jnp.where(mine, my_eid, 0),
+                                 rank, keep, E_local, cap)
+    out_b = _expert_ffn(params, buckets)
+    y_assign = out_b[jnp.where(mine, my_eid, 0), jnp.clip(rank, 0, cap - 1)]
+    y_assign = jnp.where(keep[:, None], y_assign, 0.0)
+    y = jnp.zeros((T, d), jnp.float32).at[tok_of].add(
+        y_assign.astype(jnp.float32) * flat_w[:, None])
+    if not replicated_experts:
+        y = jax.lax.psum(y, ep_axes)            # combine (E2A analogue)
+    if overlap:
+        # E2A slice-back: keep only this rank's batch shard
+        ro = jnp.int32(0)
+        for a in overlap:
+            ro = ro * mesh_shape[a] + jax.lax.axis_index(a)
+        y = jax.lax.dynamic_slice_in_dim(
+            y.reshape(-1, S, d), ro * B, B, axis=0).reshape(B * S, d)
+    # stats: reduce over batch axes not already covered by the EP gather
+    stat_axes = tuple(a for a in batch_axes if a not in overlap)
+    if stat_axes:
+        lb = jax.lax.pmean(lb, stat_axes)
+        z = jax.lax.pmean(z, stat_axes)
+        counts = jax.lax.psum(counts, stat_axes)
+    return y.astype(x.dtype).reshape(B, S, d), (lb, z, counts)
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+def moe_apply(
+    params: Dict[str, jax.Array],
+    x: jax.Array,                   # [B, S, d]
+    *,
+    cfg: ModelConfig,
+    ctx: MeshCtx,
+    mode: str,                      # train | prefill | decode
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    e = cfg.moe
+    impl = "gather" if mode == "decode" else ctx.moe_impl
+    ep_axis = ctx.ep_axis            # str, or tuple for EP-per-die layout
+    ep_tuple = (ep_axis,) if isinstance(ep_axis, str) else tuple(ep_axis)
+    ep_size = ctx.axis_size(ep_axis)
+    mesh = ctx.mesh
+    train = mode == "train"
+
+    routed = {n: params[n] for n in ("router", "we_gate", "we_up", "we_down")}
+    # expert weights are sharded over the EP axis (dim 0) unless indivisible
+    ep_ok = e.num_experts % ep_size == 0 and ep_size > 1
+    seq_ok = x.shape[1] % ep_size == 0 and ep_size > 1
+    w_entry = (ep_tuple if len(ep_tuple) > 1 else ep_tuple[0]) \
+        if ep_ok else None
+    w_spec = {n: P(w_entry) for n in ("we_gate", "we_up", "we_down")}
+    w_spec["router"] = P()
+    eff_ep = ep_size if ep_ok else 1
+    all_axes = tuple(ctx.batch_axes) + tuple(
+        a for a in ep_tuple if a not in ctx.batch_axes)
+
+    if impl == "alltoall" and ep_ok and seq_ok and len(ep_tuple) == 1:
+        x_spec = P(ctx.bspec, ep_tuple[0], None)
+        body = functools.partial(_moe_alltoall_local, cfg=cfg,
+                                 ep_axis=ep_tuple[0], ep_size=eff_ep,
+                                 all_axes=all_axes, train=train)
+    else:
+        # pull-based gather-compute-reduce (also the 1×1-mesh degenerate)
+        x_spec = P(ctx.bspec, None, None)
+        body = functools.partial(_moe_gather_local, cfg=cfg,
+                                 ep_axes=ep_axis, ep_size=eff_ep,
+                                 batch_axes=tuple(ctx.batch_axes),
+                                 mesh_shape=dict(ctx.mesh.shape),
+                                 train=train)
+
+    y, (lb, z, counts) = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, w_spec),
+        out_specs=(x_spec, (P(), P(), P())),
+        check_rep=False,
+    )(x, routed)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x)
+
+    aux = {
+        "moe_lb_loss": lb * e.router_aux_coef,
+        "moe_z_loss": z * e.router_z_coef,
+        "expert_counts": counts,
+    }
+    return y, aux

@@ -1,0 +1,132 @@
+"""Griffin / RecurrentGemma recurrent block with the RG-LRU.
+
+[arXiv:2402.19427]. Block structure (the "recurrent block"):
+  x ── linear ─ conv1d ─ RG-LRU ─┐
+  x ── linear ─ GeLU ────────────┤ ⊙ ── linear ── out
+RG-LRU recurrence (per channel):
+  r_t = σ(W_a x_t + b_a)         (recurrence gate, block-diagonal)
+  i_t = σ(W_x x_t + b_x)         (input gate, block-diagonal)
+  a_t = exp(-c · softplus(Λ) · r_t)            c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+Train/prefill evaluate the linear recurrence with an associative scan;
+decode is the O(1) update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.models.mesh_ctx import MeshCtx
+
+Cache = Dict[str, jax.Array]
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    w = _width(cfg)
+    h = cfg.num_heads
+    bw = w // h if w % h == 0 else w   # block-diagonal gate width
+    nb = w // bw
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype, d),
+        "w_gate_branch": dense_init(ks[1], (d, w), dtype, d),
+        "conv_w": dense_init(ks[2], (cfg.rglru.conv_width, w), dtype,
+                             cfg.rglru.conv_width),
+        "conv_b": jnp.zeros((w,), dtype),
+        # block-diagonal input/recurrence gates: [nb, bw, bw]
+        "gate_a_w": dense_init(ks[3], (nb, bw, bw), jnp.float32, bw),
+        "gate_a_b": jnp.zeros((nb, bw), jnp.float32),
+        "gate_x_w": dense_init(ks[4], (nb, bw, bw), jnp.float32, bw),
+        "gate_x_b": jnp.zeros((nb, bw), jnp.float32),
+        # Λ parameterized so a ∈ (0.9, 0.999) at r=1 (paper init)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w, dtype=jnp.float32)) / _C)),
+        "w_out": dense_init(ks[5], (w, d), dtype, w),
+    }
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    w = _width(cfg)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.rglru.conv_width - 1, w),
+                                     dtype),
+    }
+
+
+def _causal_conv(x, w, b, history):
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K)) + b
+    return y, (xp[:, -(K - 1):] if K > 1 else history)
+
+
+def _block_diag(x, w, b):
+    """x: [B,S,width] → per-block linear. w: [nb,bw,bw]."""
+    B, S, width = x.shape
+    nb, bw, _ = w.shape
+    xr = x.reshape(B, S, nb, bw)
+    y = jnp.einsum("bsnw,nwv->bsnv", xr.astype(jnp.float32), w) + b
+    return y.reshape(B, S, width)
+
+
+def rglru_apply(
+    params, x: jax.Array, *, cfg: ModelConfig, ctx: MeshCtx, mode: str,
+    cache: Optional[Cache] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    B, S, d = x.shape
+    is_ref = cache is not None and hasattr(cache, "read")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                  params["w_gate_branch"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    hist = ((cache.read("conv") if is_ref else cache["conv"])
+            if mode == "decode" else None)
+    u, new_hist = _causal_conv(u, params["conv_w"], params["conv_b"], hist)
+
+    r = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"],
+                                   params["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"],
+                                   params["gate_x_b"]))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r        # [B,S,w] f32
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated_x
+
+    if mode == "decode":
+        assert cache is not None
+        prev = cache.read("state") if is_ref else cache["state"]
+        h = a[:, 0] * prev + b_t[:, 0]                      # [B,w]
+        y = h[:, None]
+        if is_ref:
+            new_cache = cache.with_stack({
+                "state": cache.stack["state"].at[cache.idx].set(h),
+                "conv": cache.stack["conv"].at[cache.idx].set(new_hist),
+            })
+        else:
+            new_cache = {"state": h, "conv": new_hist}
+    else:
+        # associative scan over the linear recurrence h_t = a_t h + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+        y = b_s                                             # h_t (zero init)
+        new_cache = ({"state": y[:, -1], "conv": new_hist}
+                     if mode == "prefill" else None)
+
+    y = (y * gate.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, params["w_out"]), new_cache

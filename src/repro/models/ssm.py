@@ -1,0 +1,190 @@
+"""Mamba-2 block with the SSD (state-space duality) algorithm.
+
+[arXiv:2405.21060]. Train/prefill use the chunked SSD form: within-chunk
+computation is an attention-like quadratic over chunk_size, inter-chunk
+states are carried by a scan — O(S·Q) memory instead of O(S·N·P) for a
+materialized recurrence. Decode is the O(1) recurrent update.
+
+Layout follows the minimal-mamba2 reference: in_proj → (z, x, B, C, dt);
+causal depthwise conv over (x, B, C); SSD; gated RMSNorm; out_proj.
+ngroups = 1 (B and C shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm, init_rms_norm
+from repro.models.mesh_ctx import MeshCtx
+
+Cache = Dict[str, jax.Array]
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, n_heads, s.head_dim, s.state_dim, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    di, h, p, n, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * n + h
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), dtype, d),
+        "conv_w": dense_init(ks[1], (cfg.ssm.conv_width, conv_dim), dtype,
+                             cfg.ssm.conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1))))),
+        "norm": init_rms_norm(di),
+        "out_proj": dense_init(ks[3], (di, d), dtype, di),
+    }
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    di, h, p, n, conv_dim = ssm_dims(cfg)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, p, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1,
+                                      conv_dim), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None):
+    """x: [B, S, C]; w: [K, C] depthwise. history: [B, K-1, C] (decode).
+    Returns (y [B,S,C], new_history [B, K-1, C])."""
+    K = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)        # [B, S+K-1, C]
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_hist = xp[:, -(K - 1):] if K > 1 else history
+    return jax.nn.silu(y), new_hist
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., Q] → cumulative decay matrix [..., Q, Q] with
+    out[..., i, j] = sum(a[j+1..i]) for i ≥ j, -inf otherwise."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xh, a, B, C, chunk: int):
+    """SSD over full sequence.
+
+    xh: [b, S, h, p] (dt-scaled input); a: [b, S, h] (log decay per step);
+    B, C: [b, S, n]. Returns (y [b,S,h,p], final_state [b,h,p,n]).
+    """
+    b, S, h, p = xh.shape
+    n = B.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert S % Q == 0, "sequence must be divisible by ssm chunk"
+    xh = xh.reshape(b, nc, Q, h, p)
+    a = a.reshape(b, nc, Q, h).transpose(0, 1, 3, 2)       # [b,nc,h,Q]
+    B_ = B.reshape(b, nc, Q, n)
+    C_ = C.reshape(b, nc, Q, n)
+
+    # 1. intra-chunk (attention-like)
+    L = jnp.exp(_segsum(a))                                # [b,nc,h,Q,Q]
+    scores = jnp.einsum("bcqn,bcpn->bcqp", C_, B_)         # [b,nc,Q,Q]
+    y_diag = jnp.einsum("bcqp,bchqp,bcphd->bcqhd",
+                        scores, jnp.where(jnp.isfinite(L), L, 0.0)
+                        .transpose(0, 1, 2, 3, 4), xh)
+    # note: L transposed to [b,nc,h,Q(dst),Q(src)] already matches.
+
+    # 2. chunk-final states
+    a_cum = jnp.cumsum(a, axis=-1)                         # [b,nc,h,Q]
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)        # [b,nc,h,Q]
+    states = jnp.einsum("bcqn,bchq,bcqhd->bchdn",
+                        B_, decay_to_end, xh)              # [b,nc,h,p,n]
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])                  # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit PREVIOUS
+
+    init = jnp.zeros((b, h, p, n), xh.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [b,nc,h,p,n]
+
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                           # decay 0..q
+    y_off = jnp.einsum("bcqn,bchq,bchdn->bcqhd",
+                       C_, state_decay, prev_states)
+    y = (y_diag + y_off).reshape(b, S, h, p)
+    return y, final
+
+
+def ssm_apply(
+    params, x: jax.Array, *, cfg: ModelConfig, ctx: MeshCtx, mode: str,
+    cache: Optional[Cache] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    di, h, p, n, conv_dim = ssm_dims(cfg)
+    Bsz, S, d = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xr, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)
+    is_ref = cache is not None and hasattr(cache, "read")
+    hist = ((cache.read("conv") if is_ref else cache["conv"])
+            if mode == "decode" else None)
+    conv_out, new_hist = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], hist)
+    xr, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])              # [B,S,h]
+    A = -jnp.exp(params["a_log"])                          # [h]
+    a_log_step = dt * A                                    # [B,S,h]
+    xh = xr.reshape(Bsz, S, h, p).astype(jnp.float32) * dt[..., None]
+
+    if mode == "decode":
+        assert cache is not None
+        st = cache.read("state") if is_ref else cache["state"]  # [B,h,p,n]
+        decay = jnp.exp(a_log_step[:, 0])                  # [B,h]
+        st = (st * decay[..., None, None]
+              + jnp.einsum("bhd,bn->bhdn", xh[:, 0],
+                           Bc[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhdn->bhd", Cc[:, 0].astype(jnp.float32), st)
+        y = y[:, None]                                     # [B,1,h,p]
+        if is_ref:
+            new_cache = cache.with_stack({
+                "state": cache.stack["state"].at[cache.idx].set(st),
+                "conv": cache.stack["conv"].at[cache.idx].set(new_hist),
+            })
+        else:
+            new_cache = {"state": st, "conv": new_hist}
+    else:
+        y, final = _ssd_chunked(xh, a_log_step,
+                                Bc.astype(jnp.float32),
+                                Cc.astype(jnp.float32), cfg.ssm.chunk_size)
+        new_cache = ({"state": final, "conv": new_hist}
+                     if mode == "prefill" else None)
+
+    # D skip connection on the (un-dt-scaled) conv output, per mamba2 ref
+    y = y + (xr.reshape(Bsz, S, h, p).astype(jnp.float32)
+             * params["d_skip"][:, None])
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"]), new_cache

@@ -1,0 +1,12 @@
+from repro.quant.int8 import (QTensor, int8_matmul_ref, quantization_error,
+                              quantize_act_tokenwise,
+                              quantize_weight_channelwise, quantized_linear)
+from repro.quant.smoothquant import (apply_smoothing, calibrate_act_amax,
+                                     smooth_quant_pair, smoothing_scales)
+from repro.quant.gptq import (calibrate_moe, gptq_quantize,
+                              hessian_from_calibration)
+from repro.quant.kvcache_quant import (dequantize_gqa_cache,
+                                       dequantize_mla_cache,
+                                       int8_attention_scores, memory_saving,
+                                       quantize_gqa_cache,
+                                       quantize_mla_cache)

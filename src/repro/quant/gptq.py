@@ -1,0 +1,82 @@
+"""GPTQ with Hessian-guided iterative refinement (§4.7, [4]).
+
+Column-by-column quantization: after quantizing column j, the remaining
+FP columns are updated to compensate the error, weighted by the inverse
+Hessian H = 2 X^T X of the calibration activations. Applied to MLA
+projections (Wq_a, Wkv_a, Wq_b, Wo), MLP projections and expert weights.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.int8 import QTensor, quantize_weight_channelwise
+
+
+def hessian_from_calibration(x: jax.Array, damp: float = 0.01)\
+        -> np.ndarray:
+    """x: [n, in] calibration activations → damped Hessian [in, in]."""
+    xf = np.asarray(x, np.float64)
+    h = 2.0 * xf.T @ xf
+    mean_diag = float(np.mean(np.diag(h))) or 1.0
+    h[np.diag_indices_from(h)] += damp * mean_diag
+    return h
+
+
+def gptq_quantize(w: jax.Array, hessian: Optional[np.ndarray] = None,
+                  block: int = 32) -> Tuple[QTensor, float]:
+    """w: [in, out]. Returns (channel-wise QTensor, rel error).
+
+    Cholesky-based GPTQ: process input dims in order; for each, quantize
+    the row, record the error, and distribute it onto not-yet-processed
+    rows via the inverse-Hessian factors.
+    """
+    wf = np.asarray(w, np.float64).copy()
+    n_in, n_out = wf.shape
+    if hessian is None:
+        hessian = np.eye(n_in)
+    # per-output-channel scale fixed up front (symmetric int8)
+    scale = np.maximum(np.abs(wf).max(axis=0), 1e-8) / 127.0
+
+    hinv = np.linalg.inv(hessian)
+    # Cholesky of the inverse Hessian gives the update factors
+    try:
+        L = np.linalg.cholesky(hinv)
+    except np.linalg.LinAlgError:
+        L = np.linalg.cholesky(hinv + 1e-6 * np.eye(n_in))
+    q = np.zeros_like(wf)
+    err = np.zeros_like(wf)
+    for i in range(n_in):
+        col = wf[i]
+        qi = np.clip(np.round(col / scale), -127, 127)
+        q[i] = qi
+        e = (col - qi * scale) / max(L[i, i], 1e-12)
+        err[i] = e
+        if i + 1 < n_in:
+            # Hessian-guided compensation of the remaining rows
+            wf[i + 1:] -= np.outer(L[i + 1:, i], e)
+    deq = q * scale[None, :]
+    rel = float(np.linalg.norm(np.asarray(w, np.float64) - deq)
+                / max(np.linalg.norm(np.asarray(w, np.float64)), 1e-12))
+    return QTensor(jnp.asarray(q, jnp.int8), jnp.asarray(scale,
+                                                         jnp.float32)), rel
+
+
+def calibrate_moe(samples: jax.Array, expert_assign: jax.Array,
+                  n_experts: int, min_per_expert: int = 4) -> jax.Array:
+    """§4.7: expert activations vary with input data; scale the
+    calibration set so each expert sees ≥ n samples. Returns per-expert
+    sample indices [E, min_per_expert] (repeating if needed)."""
+    idx = []
+    assign = np.asarray(expert_assign)
+    rng = np.random.default_rng(0)
+    for e in range(n_experts):
+        mine = np.where(assign == e)[0]
+        if len(mine) == 0:
+            mine = rng.integers(0, len(assign), size=min_per_expert)
+        reps = -(-min_per_expert // len(mine))
+        idx.append(np.tile(mine, reps)[:min_per_expert])
+    return jnp.asarray(np.stack(idx))

@@ -1,0 +1,77 @@
+"""INT8 quantization core (§4.7).
+
+Ascend 910C has no FP8, so xDeepServe deploys DeepSeek-class models in
+INT8 via PTQ. Scheme: token-wise activation scales (one per token),
+channel-wise weight scales (one per output channel), hardware INT8 matmul
+(``npu_quant_matmul`` → our Pallas ``int8_matmul`` kernel on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class QTensor:
+    """Channel-wise quantized weight: values int8 [in, out], scale f32
+    [out] (one per output channel)."""
+    values: jax.Array
+    scale: jax.Array
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def quantize_weight_channelwise(w: jax.Array,
+                                axis: int = -1) -> QTensor:
+    """w: [..., out] → int8 with per-output-channel scales."""
+    wf = w.astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(w.ndim)
+                        if i != (axis % w.ndim))
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, jnp.squeeze(scale, reduce_axes))
+
+
+def quantize_act_tokenwise(x: jax.Array)\
+        -> Tuple[jax.Array, jax.Array]:
+    """x: [..., d] → (int8, f32 scale per token row)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def int8_matmul_ref(x_q: jax.Array, x_scale: jax.Array,
+                    w: QTensor) -> jax.Array:
+    """(tokenwise int8 x) @ (channelwise int8 w) with f32 accumulation —
+    the pure-jnp oracle shared with kernels/int8_matmul/ref.py."""
+    acc = jnp.einsum("td,df->tf", x_q.astype(jnp.int32),
+                     w.values.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale[:, None] * w.scale[None, :]
+
+
+def quantized_linear(x: jax.Array, w: QTensor) -> jax.Array:
+    """Full path: quantize activations token-wise, INT8 matmul, rescale."""
+    shape = x.shape[:-1]
+    xq, xs = quantize_act_tokenwise(x.reshape(-1, x.shape[-1]))
+    y = int8_matmul_ref(xq, xs, w)
+    return y.reshape(*shape, -1)
+
+
+def quantization_error(w: jax.Array, q: QTensor) -> float:
+    """Relative Frobenius error of a quantized weight."""
+    d = w.astype(jnp.float32) - q.dequantize().reshape(w.shape)
+    return float(jnp.linalg.norm(d) / jnp.maximum(
+        jnp.linalg.norm(w.astype(jnp.float32)), 1e-9))

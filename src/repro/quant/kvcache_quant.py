@@ -1,0 +1,73 @@
+"""KV-cache INT8 quantization (§4.7).
+
+MLA's cache has a RoPE part and a non-RoPE (latent) part; the non-RoPE
+components have stable numerical distributions and are quantized to INT8
+(per-entry scales); the RoPE part stays bf16. For low-sensitivity layers
+the attention score/context computation itself runs in INT8.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv_entry(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [..., d] cache rows → (int8 values, f32 scale per row)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def dequantize_kv_entry(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def quantize_mla_cache(cache: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """MLA cache {'ckv','krope'} → non-RoPE latent INT8, RoPE bf16."""
+    q, s = quantize_kv_entry(cache["ckv"])
+    return {"ckv_q": q, "ckv_scale": s, "krope": cache["krope"]}
+
+def dequantize_mla_cache(qcache: Dict[str, jax.Array])\
+        -> Dict[str, jax.Array]:
+    return {"ckv": dequantize_kv_entry(qcache["ckv_q"],
+                                       qcache["ckv_scale"])
+            .astype(qcache["krope"].dtype),
+            "krope": qcache["krope"]}
+
+
+def quantize_gqa_cache(cache: Dict[str, jax.Array])\
+        -> Dict[str, jax.Array]:
+    """GQA k/v cache → INT8 per (position, head)."""
+    out = {}
+    for name in ("k", "v"):
+        q, s = quantize_kv_entry(cache[name])
+        out[name + "_q"], out[name + "_scale"] = q, s
+    return out
+
+
+def dequantize_gqa_cache(qcache: Dict[str, jax.Array], dtype=jnp.bfloat16)\
+        -> Dict[str, jax.Array]:
+    return {name: dequantize_kv_entry(qcache[name + "_q"],
+                                      qcache[name + "_scale"]).astype(dtype)
+            for name in ("k", "v")}
+
+
+def int8_attention_scores(q_int8: jax.Array, q_scale: jax.Array,
+                          k_int8: jax.Array, k_scale: jax.Array)\
+        -> jax.Array:
+    """Fully-INT8 score computation for low-sensitivity layers:
+    q [B,H,d]·k [B,L,H,d] in int32, rescaled to f32."""
+    acc = jnp.einsum("bhd,blhd->bhl", q_int8.astype(jnp.int32),
+                     k_int8.astype(jnp.int32))
+    return (acc.astype(jnp.float32)
+            * q_scale[..., None] * k_scale[:, None].transpose(0, 2, 1))
+
+
+def memory_saving(cache_bytes_bf16: int) -> Tuple[int, float]:
+    """INT8 non-RoPE halves the cache: returns (bytes, ratio)."""
+    q_bytes = cache_bytes_bf16 // 2 + cache_bytes_bf16 // 256  # + scales
+    return q_bytes, q_bytes / cache_bytes_bf16

@@ -1,0 +1,46 @@
+"""SmoothQuant smoothing (§4.7, [22]).
+
+Activations have a 10-100× wider dynamic range than weights (paper
+Fig. 15). Smoothing migrates quantization difficulty from activations to
+weights: per input channel j,  s_j = max|X_j|^α / max|W_j|^(1-α); the
+layer computes (X / s) @ (diag(s) W), numerically identical in f32 but
+with flattened activation outliers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def smoothing_scales(act_amax: jax.Array, w: jax.Array,
+                     alpha: float = 0.5) -> jax.Array:
+    """act_amax: [in] calibration max |activation| per input channel;
+    w: [in, out]. Returns s [in]."""
+    w_amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1)
+    s = (jnp.maximum(act_amax, 1e-5) ** alpha
+         / jnp.maximum(w_amax, 1e-5) ** (1 - alpha))
+    return jnp.clip(s, 1e-4, 1e4)
+
+
+def apply_smoothing(w: jax.Array, s: jax.Array)\
+        -> jax.Array:
+    """Fold s into the weight: W' = diag(s) @ W. The activation side
+    (X' = X / s) is folded into the preceding RMSNorm scale in deployment
+    (zero runtime cost)."""
+    return (w.astype(jnp.float32) * s[:, None]).astype(w.dtype)
+
+
+def calibrate_act_amax(samples: jax.Array) -> jax.Array:
+    """samples: [n, in] activations from the calibration set → per-channel
+    max |x| (the paper scales the calibration set so every expert sees
+    ≥ 4 samples; see gptq.calibrate_moe)."""
+    return jnp.max(jnp.abs(samples.astype(jnp.float32)), axis=0)
+
+
+def smooth_quant_pair(samples: jax.Array, w: jax.Array,
+                      alpha: float = 0.5) -> Tuple[jax.Array, jax.Array]:
+    """Returns (smoothed weight, activation divisor s)."""
+    s = smoothing_scales(calibrate_act_amax(samples), w, alpha)
+    return apply_smoothing(w, s), s

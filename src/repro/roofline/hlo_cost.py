@@ -1,0 +1,380 @@
+"""Scan-aware cost model parsed from post-SPMD HLO text.
+
+XLA's built-in ``cost_analysis`` counts a while-loop body ONCE, which
+undercounts scan-over-layers models by ~num_layers×. This parser rebuilds
+per-step costs from the compiled module text:
+
+  * FLOPs: every ``dot`` op → 2 · prod(result dims) · prod(contracting dims)
+    (operand shapes resolved from the per-computation symbol table).
+  * HBM bytes: for every top-level instruction in a *control* computation
+    (entry / while body / conditional branch): output bytes + operand bytes.
+    Post-fusion HLO makes this a faithful HBM-traffic model on TPU: a
+    fusion reads its operands from HBM and writes its output once; fusion-
+    internal values live in VMEM/registers.
+  * Collective bytes: result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+Each computation's cost is multiplied by its execution count, propagated
+through the call graph: ``body=%c``/``condition=%c`` edges carry the while
+op's ``known_trip_count``; ``calls=%c`` (fusions) and conditional branches
+carry ×1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-_]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND = re.compile(r"%([\w.\-_]+)")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr] = dataclasses.field(default_factory=list)
+    symtab: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_computations(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and ("->" in line):
+            cur = _Comp(hdr.group(1))
+            comps[cur.name] = cur
+            # parameters appear in the header; register their shapes
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = _Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.symtab[ins.name] = ins.type_str
+    return comps
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+
+    def scaled(self, k: float) -> "HLOCost":
+        return HLOCost(self.flops * k, self.hbm_bytes * k,
+                       {n: v * k for n, v in self.coll_bytes.items()})
+
+    def __iadd__(self, o: "HLOCost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        for k2, v in o.coll_bytes.items():
+            self.coll_bytes[k2] += v
+        return self
+
+
+_SKIP_HBM_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "partition-id", "replica-id",
+                 # donation/layout artifacts — elided on TPU
+                 "copy", "copy-start", "copy-done"}
+
+
+def analyze_hlo(hlo: str, debug_top: int = 0) -> HLOCost:
+    comps = parse_computations(hlo)
+    # classify: computations reached via fusion `calls=`/`to_apply=` are
+    # fused (VMEM-internal); via body=/condition=/branches are control.
+    fused = set()
+    control_edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    entry = None
+    for c in comps.values():
+        for ins in c.instrs:
+            trip = 1
+            tm = _TRIP.search(ins.rest)
+            if tm:
+                trip = int(tm.group(1))
+            if ins.op == "while":
+                for cal in _CALL_ATTR.findall(ins.rest):
+                    control_edges[c.name].append((cal, trip))
+            elif ins.op == "conditional":
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    for b in _OPERAND.findall(bm.group(1)):
+                        control_edges[c.name].append((b, 1))
+            elif ins.op in ("fusion", "call", "reduce", "reduce-window",
+                            "scatter", "sort", "map", "all-reduce",
+                            "reduce-scatter", "select-and-scatter",
+                            "custom-call"):
+                for cal in _CALL_ATTR.findall(ins.rest):
+                    fused.add(cal)
+                    control_edges[c.name].append((cal, 1))
+    # entry: computation not called by anyone
+    callees = {cal for edges in control_edges.values() for cal, _ in edges}
+    candidates = [n for n in comps if n not in callees]
+    entry = candidates[0] if candidates else next(iter(comps))
+    if "main" in comps:
+        entry = "main"
+    else:
+        for n in comps:
+            if n.startswith("main"):
+                entry = n
+                break
+
+    # ---- fusion access summaries: slice-aware reads/writes ---------------
+    # For each fused computation: per-parameter effective read bytes (a
+    # parameter consumed only by dynamic-slice counts as the slice size; a
+    # parameter that is the in-place target of a root dynamic-update-slice
+    # counts 0 — it is aliased) and effective output write bytes (a root
+    # dynamic-update-slice writes only the update).
+    # "plumbing" ops that merely re-materialize a value (a TPU fuses these
+    # into producers/consumers; XLA:CPU's bf16→f32 legalization inserts
+    # whole-tensor converts that would massively overcount HBM traffic)
+    _PLUMBING = {"convert", "bitcast", "copy", "reshape", "transpose",
+                 "broadcast"}
+
+    param_reads: Dict[str, List[float]] = {}
+    out_writes: Dict[str, float] = {}
+    for cname in fused:
+        c = comps.get(cname)
+        if c is None:
+            continue
+        params: Dict[int, _Instr] = {}
+        for ins in c.instrs:
+            if ins.op == "parameter":
+                idx_m = re.match(r"(\d+)\)", ins.rest)
+                if idx_m:
+                    params[int(idx_m.group(1))] = ins
+        by_name = {ins.name: ins for ins in c.instrs}
+
+        def consumers_of(name):
+            pat = re.compile(r"%" + re.escape(name) + r"\b")
+            return [j for j in c.instrs
+                    if j.name != name and pat.search(j.rest)]
+
+        def terminal_consumers(ins, depth=0):
+            """Follow single-use plumbing chains to the real consumers."""
+            outs = []
+            for j in consumers_of(ins.name):
+                if j.op in _PLUMBING and depth < 6:
+                    outs.extend(terminal_consumers(j, depth + 1))
+                else:
+                    outs.append(j)
+            return outs
+
+        # pure plumbing / extraction fusion (transpose/convert/copy/slice
+        # chains): a TPU expresses these via layout assignment + operand
+        # fusion — free; the consumer counts the read of its output.
+        if all(ins.op in _PLUMBING
+               or ins.op in ("parameter", "constant", "dynamic-slice")
+               for ins in c.instrs):
+            out_writes[cname] = 0.0
+            param_reads[cname] = [0.0] * len(params)
+            continue
+
+        # root: look through plumbing back to the producing op
+        root = c.instrs[-1] if c.instrs else None
+        real_root = root
+        hops = 0
+        while (real_root is not None and real_root.op in _PLUMBING
+               and hops < 6):
+            ops = _OPERAND.findall(real_root.rest)
+            nxt = by_name.get(ops[0]) if ops else None
+            if nxt is None:
+                break
+            real_root = nxt
+            hops += 1
+        dus_update_src = None
+        dus_target_src = None
+        if real_root is not None and real_root.op == "dynamic-update-slice":
+            ops = _OPERAND.findall(real_root.rest)
+            if len(ops) >= 2:
+                dus_target_src = ops[0]
+                upd_t = c.symtab.get(ops[1])
+                out_writes[cname] = float(_bytes_of(upd_t)) if upd_t else 0.0
+                dus_update_src = ops[1]
+        elif real_root is not None and real_root.op == "scatter":
+            # in-place cache write: operand 0 aliased; traffic = updates
+            ops = _OPERAND.findall(real_root.rest)
+            if len(ops) >= 3:
+                dus_target_src = ops[0]
+                upd_t = c.symtab.get(ops[2])
+                out_writes[cname] = float(_bytes_of(upd_t)) if upd_t else 0.0
+
+        def reaches_through_plumbing(src_name, dst_name, depth=0):
+            if src_name == dst_name:
+                return True
+            ins = by_name.get(src_name)
+            if ins is None or depth > 6:
+                return False
+            for j in consumers_of(src_name):
+                if j.name == dst_name:
+                    return True
+                if j.op in _PLUMBING and reaches_through_plumbing(
+                        j.name, dst_name, depth + 1):
+                    return True
+            return False
+
+        reads: List[float] = []
+        for i in range(len(params)):
+            ins = params.get(i)
+            if ins is None:
+                reads.append(0.0)
+                continue
+            full = float(_bytes_of(ins.type_str))
+            # aliased in-place DUS target (reached via plumbing) → 0 reads
+            if dus_target_src is not None and reaches_through_plumbing(
+                    ins.name, dus_target_src):
+                # the param value flows into the DUS as the *big* operand;
+                # it is logically aliased, not re-read.
+                reads.append(0.0)
+                continue
+            terms = terminal_consumers(ins)
+            _EXTRACT = ("dynamic-slice", "slice", "gather")
+            if terms and all(j.op in _EXTRACT for j in terms):
+                reads.append(float(sum(_bytes_of(j.type_str)
+                                       for j in terms)))
+            else:
+                reads.append(full)
+        param_reads[cname] = reads
+
+    # per-computation local cost
+    debug_rows = []
+    local: Dict[str, HLOCost] = {}
+    for c in comps.values():
+        cost = HLOCost()
+        for ins in c.instrs:
+            if ins.op == "dot":
+                out_elems = 1
+                for _, dims in _shape_dims(ins.type_str):
+                    for d in dims:
+                        out_elems *= d
+                contract = 1
+                cm = _CONTRACT.search(ins.rest)
+                ops = _OPERAND.findall(ins.rest)
+                if cm and ops:
+                    lhs_shape = c.symtab.get(ops[0])
+                    if lhs_shape:
+                        sd = _shape_dims(lhs_shape)
+                        if sd:
+                            dims = sd[0][1]
+                            for di in cm.group(1).split(","):
+                                if di and int(di) < len(dims):
+                                    contract *= dims[int(di)]
+                cost.flops += 2.0 * out_elems * contract
+            base_op = ins.op.replace("-start", "")
+            if base_op in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                cost.coll_bytes[base_op] += _bytes_of(ins.type_str)
+            # HBM bytes: control computations only, top-level ops
+            if (c.name not in fused and ins.op not in _SKIP_HBM_OPS):
+                callee = None
+                if ins.op == "fusion":
+                    cm2 = re.search(r"calls=%?([\w.\-_]+)", ins.rest)
+                    if cm2:
+                        callee = cm2.group(1)
+                out_b = float(_bytes_of(ins.type_str))
+                if callee in out_writes:
+                    out_b = out_writes[callee]
+                operand_str = ins.rest.split(", calls=")[0].split(", body=")[0]
+                opnames = _OPERAND.findall(operand_str)
+                in_b = 0.0
+                reads = param_reads.get(callee)
+                if ins.op == "dynamic-slice":
+                    in_b = out_b  # reads only the slice
+                elif ins.op == "dynamic-update-slice":
+                    ops = _OPERAND.findall(operand_str)
+                    upd = (c.symtab.get(ops[1]) if len(ops) > 1 else None)
+                    out_b = float(_bytes_of(upd)) if upd else out_b
+                    in_b = out_b
+                else:
+                    for i, opn in enumerate(opnames):
+                        t = c.symtab.get(opn)
+                        if t is None:
+                            continue
+                        if reads is not None and i < len(reads):
+                            in_b += reads[i]
+                        else:
+                            in_b += float(_bytes_of(t))
+                cost.hbm_bytes += out_b + in_b
+                if debug_top:
+                    debug_rows.append((out_b + in_b, c.name, ins.op,
+                                       ins.name))
+        local[c.name] = cost
+
+    # propagate multipliers (call graph is a DAG)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        n = order[i]
+        i += 1
+        for cal, k in control_edges.get(n, ()):  # includes fused comps
+            mult[cal] += mult[n] * k
+            if cal not in seen:
+                seen.add(cal)
+                order.append(cal)
+    # NOTE: fused computations accumulate flops (dots can hide in fusions)
+    # but their hbm_bytes were never counted (c.name in fused → skipped).
+    total = HLOCost()
+    for n, cost in local.items():
+        m = mult.get(n, 0.0)
+        if m:
+            total += cost.scaled(m)
+    if debug_top:
+        rows = sorted(((b * mult.get(cn, 0.0), cn, op, nm)
+                       for b, cn, op, nm in debug_rows), reverse=True)
+        for b, cn, op, nm in rows[:debug_top]:
+            print(f"  {b/1e9:8.3f}GB x{mult.get(cn,0):4.0f} {op:18s} "
+                  f"{nm[:48]} in {cn[:40]}")
+    return total

@@ -1,0 +1,21 @@
+from repro.serving.request import Job, Request, RequestState, SLA
+from repro.serving.tokenizer import ByteTokenizer, EOS, PAD
+from repro.serving.kv_cache import (BlockAllocator, OutOfBlocks, PrefixCache,
+                                    hash_blocks)
+from repro.serving.scheduler import (DecodeLoadBalancer, DPStatus,
+                                     PrefillScheduler, pick_prefill_te)
+from repro.serving.dp_group import DPGroup
+from repro.serving.te_shell import TEShell
+from repro.serving.flowserve import FlowServeEngine
+from repro.serving.eplb import (ExpertLoadCollector, ExpertMap,
+                                ExpertReconfigurator, build_expert_map,
+                                place_replicas, select_redundant_experts)
+from repro.serving.mtp import MTPDecoder, MTPStats, MTPTrainer
+from repro.serving.distflow import (DistFlowInstance, TransferState,
+                                    TransferTask)
+from repro.serving.reliability import (Clock, ClusterState, HeartbeatMonitor,
+                                       HeartbeatPeer, LinkProber,
+                                       ProbeVerdict, RecoveryPlanner,
+                                       RecoveryStage, TieredHeartbeat,
+                                       mask_memory_fault)
+from repro.serving.gc_control import ProactiveGC, jitter_guard, prewarm

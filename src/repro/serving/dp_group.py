@@ -1,0 +1,256 @@
+"""Self-contained DP group (§4.2): one full serving pipeline.
+
+Each DP group owns tokenization, its jitted SPMD executors (prefill +
+decode step), a paged KV allocator, an RTC prefix cache, proactive GC,
+and an output-shortcutting worker that detokenizes and streams tokens
+straight to the caller — no cross-DP communication anywhere in the data
+path. The TE-shell only dispatches requests and reads status.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+from repro.serving.gc_control import ProactiveGC, pin_to_core
+from repro.serving.kv_cache import BlockAllocator, PrefixCache
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import DPStatus
+from repro.serving.tokenizer import EOS, PAD, ByteTokenizer
+
+PyTree = Any
+
+
+def _bucket_len(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 2048) * 2048
+
+
+def set_slot(cache: PyTree, sub: PyTree, slot: int) -> PyTree:
+    """Write a batch-1 cache pytree into batch slot ``slot``. Leaves under
+    'blocks' are layer-stacked (batch axis 1); others have batch axis 0."""
+    def one(path, full, one_leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        ax = 1 if "blocks" in keys else 0
+        # pad the incoming leaf up to the slot shape (cache len, window…)
+        target = list(full.shape)
+        target[ax] = 1
+        pads = [(0, t - s) for t, s in zip(target, one_leaf.shape)]
+        if any(p != (0, 0) for p in pads):
+            one_leaf = jnp.pad(one_leaf, pads)
+        idx = [slice(None)] * full.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return full.at[tuple(idx)].set(one_leaf.astype(full.dtype))
+    return jax.tree_util.tree_map_with_path(one, cache, sub)
+
+
+@dataclasses.dataclass
+class Slot:
+    req: Optional[Request] = None
+    next_token: int = PAD
+    position: int = 0        # position at which next_token will be written
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class DPGroup:
+    def __init__(self, dp_id: int, model: Model, params: PyTree, *,
+                 max_batch: int = 4, max_len: int = 256,
+                 n_kv_blocks: int = 512, block_size: int = 16,
+                 gc_every: int = 200, pin_core: Optional[int] = None,
+                 memory: Optional[jax.Array] = None):
+        self.dp_id = dp_id
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.memory = memory
+        self.tokenizer = ByteTokenizer()
+        self.allocator = BlockAllocator(n_kv_blocks, block_size)
+        self.prefix_cache = PrefixCache()
+        self.gc_ctl = ProactiveGC(gc_every)
+        pin_to_core(pin_core)
+
+        self.slots = [Slot() for _ in range(max_batch)]
+        self.cache = model.init_cache(max_batch, max_len)
+        self.steps = 0
+        self.finished: List[Request] = []
+
+        # jitted executors (graph-mode decode; eager-ish bucketed prefill)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=())  # bucketed lengths
+        self._sample_key = jax.random.PRNGKey(dp_id)
+
+        # output shortcutting: dedicated worker streams detokenized output
+        self._out_q: "queue.Queue" = queue.Queue()
+        self._out_thread = threading.Thread(target=self._output_worker,
+                                            daemon=True)
+        self._out_thread.start()
+
+        # token-recomputation rollback state (§6.2 stage 3)
+        self._rollback: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------------------------
+    # output shortcutting worker
+    # ------------------------------------------------------------------
+    def _output_worker(self) -> None:
+        while True:
+            item = self._out_q.get()
+            if item is None:
+                return
+            req, token = item
+            req.emit(token)
+
+    # ------------------------------------------------------------------
+    # prefill path
+    # ------------------------------------------------------------------
+    def run_prefill(self, req: Request) -> Tuple[PyTree, np.ndarray]:
+        """Returns (batch-1 cache, last-position logits [V])."""
+        toks = req.prompt_tokens
+        # context clipping: a prompt must leave room for generation inside
+        # this DP's cache (production would route it to a long-capable TE;
+        # if it still lands here, keep the TAIL of the context)
+        limit = max(self.max_len - req.max_new_tokens - 1, 16)
+        if len(toks) > limit:
+            toks = toks[-limit:]
+            req.prompt_tokens = toks
+        hit = self.prefix_cache.lookup(toks)
+        if hit is not None and hit.cache is not None:
+            return hit.cache, np.asarray(hit.last_logits)
+        n = len(toks)
+        Lp = min(_bucket_len(n), self.max_len)
+        padded = toks + [PAD] * (Lp - n)
+        arr = jnp.asarray(padded, jnp.int32)[None]
+        mem = None if self.memory is None else self.memory[:1]
+        logits, cache = self._prefill(self.params, arr, mem,
+                                      jnp.asarray([n - 1], jnp.int32))
+        logits = np.asarray(logits[0], np.float32)
+        self.prefix_cache.insert(toks, cache, logits)
+        return cache, logits
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        has_slot = any(s.free for s in self.slots)
+        return has_slot and self.allocator.can_allocate(
+            req.prompt_len + req.max_new_tokens)
+
+    def admit(self, req: Request, cache1: PyTree,
+              last_logits: np.ndarray) -> int:
+        slot_id = next(i for i, s in enumerate(self.slots) if s.free)
+        self.allocator.allocate(req.req_id,
+                                req.prompt_len + req.max_new_tokens)
+        self.cache = set_slot(self.cache, cache1, slot_id)
+        first = self._sample(last_logits, req.temperature)
+        self._out_q.put((req, int(first)))
+        req.state = RequestState.DECODING
+        req.slot = slot_id
+        req.dp_group = self.dp_id
+        self.slots[slot_id] = Slot(req=req, next_token=int(first),
+                                   position=req.prompt_len)
+        return slot_id
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _sample(self, logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        self._sample_key, sub = jax.random.split(self._sample_key)
+        g = np.asarray(jax.random.gumbel(sub, logits.shape))
+        return int(np.argmax(logits / temperature + g))
+
+    @property
+    def active(self) -> int:
+        return sum(0 if s.free else 1 for s in self.slots)
+
+    def decode_step_all(self, inject_fault: bool = False) -> int:
+        """One engine iteration over all active slots. Returns number of
+        tokens produced. ``inject_fault`` exercises the §6.2 token-
+        recomputation path: the step is rolled back and re-executed."""
+        if self.active == 0:
+            return 0
+        tokens = np.full((self.max_batch, 1), PAD, np.int32)
+        positions = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if not s.free:
+                tokens[i, 0] = s.next_token
+                positions[i] = s.position
+        # save rollback state (previous iteration boundary)
+        self._rollback = {"cache": self.cache,
+                          "slots": [dataclasses.replace(s)
+                                    for s in self.slots]}
+        logits, new_cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(positions))
+        if inject_fault:
+            # §6.2: transient network error detected → all DP groups roll
+            # back to the previous iteration and re-execute.
+            self.cache = self._rollback["cache"]
+            self.slots = self._rollback["slots"]
+            logits, new_cache = self._decode(self.params, self.cache,
+                                             jnp.asarray(tokens),
+                                             jnp.asarray(positions))
+        self.cache = new_cache
+        logits = np.asarray(logits, np.float32)
+        produced = 0
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            req = s.req
+            tok = self._sample(logits[i], req.temperature)
+            s.position += 1
+            s.next_token = tok
+            produced += 1
+            done = (len(req.output_tokens) + 1 >= req.max_new_tokens
+                    or (tok == req.eos_token and not req.ignore_eos)
+                    or s.position >= self.max_len - 1)
+            self._out_q.put((req, tok))
+            if done:
+                self._finish(i)
+        self.steps += 1
+        self.gc_ctl.step()
+        return produced
+
+    def _finish(self, slot_id: int) -> None:
+        s = self.slots[slot_id]
+        req = s.req
+        self.allocator.free(req.req_id)
+        import time as _t
+        req.t_finished = _t.monotonic()
+        req.state = RequestState.FINISHED
+        self.finished.append(req)
+        self.slots[slot_id] = Slot()
+
+    # ------------------------------------------------------------------
+    def status(self) -> DPStatus:
+        return DPStatus(
+            dp_id=self.dp_id,
+            batch_size=self.max_batch,
+            active=self.active,
+            kv_usage=self.allocator.usage,
+            kv_free_blocks=self.allocator.free_blocks,
+            block_size=self.allocator.block_size,
+        )
+
+    def drain(self) -> None:
+        while not self._out_q.empty():
+            import time as _t
+            _t.sleep(0.001)
+
+    def close(self) -> None:
+        self._out_q.put(None)
+        self.gc_ctl.close()

@@ -1,0 +1,226 @@
+"""Expert Placement Load Balancing (§4.5), the full four-step pipeline.
+
+Step 1 — collection: :class:`ExpertLoadCollector` accumulates per-layer
+token counts per time slice (the Collect kernel's output; in this repro
+the counts come from the model's routed ``expert_counts`` metric or the
+Pallas ``collect`` kernel).
+
+Step 2 — EPLB algorithm: greedy hottest-expert replication. For a
+redundancy budget R, repeatedly pick the candidate expert whose replica
+split minimizes the simulated total load  L_ℓ = Σ_t max_e count[ℓ][e][t],
+then placement assigns replicas (sorted by load, heaviest first) to the
+least-loaded NPU with a free redundancy slot.
+
+Step 3 — reconfig: :class:`ExpertMap` swaps the logical→physical mapping
+in four phases (prefetch, disable, async load, re-enable) without
+interrupting serving.
+
+Step 4 — communication-free balancing: token-position-based rotation
+across replicas (a gather, no cross-NPU coordination).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Step 1: collection
+# ---------------------------------------------------------------------------
+class ExpertLoadCollector:
+    """Accumulates token_count[layer][expert][slice]."""
+
+    def __init__(self, n_layers: int, n_experts: int, max_slices: int = 64):
+        self.n_layers = n_layers
+        self.n_experts = n_experts
+        self.max_slices = max_slices
+        self._slices: List[np.ndarray] = []
+        self._current = np.zeros((n_layers, n_experts), np.int64)
+
+    def record(self, layer_counts: np.ndarray) -> None:
+        """layer_counts: [n_layers, n_experts] token counts of one step."""
+        self._current += layer_counts.astype(np.int64)
+
+    def end_slice(self) -> None:
+        self._slices.append(self._current)
+        self._current = np.zeros_like(self._current)
+        if len(self._slices) > self.max_slices:
+            self._slices.pop(0)
+
+    @property
+    def token_count(self) -> np.ndarray:
+        """[n_layers, n_experts, n_slices]"""
+        if not self._slices:
+            return np.zeros((self.n_layers, self.n_experts, 1), np.int64)
+        return np.stack(self._slices, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Step 2: EPLB selection + placement
+# ---------------------------------------------------------------------------
+def simulated_layer_load(counts: np.ndarray,
+                         replicas: Dict[int, int]) -> float:
+    """L_ℓ with each expert's per-slice count split over its replicas.
+    counts: [E, T]; replicas: expert → replica count (≥1)."""
+    eff = counts.astype(np.float64).copy()
+    for e, r in replicas.items():
+        eff[e] = eff[e] / r
+    return float(eff.max(axis=0).sum())
+
+
+def select_redundant_experts(counts: np.ndarray, budget: int)\
+        -> List[int]:
+    """Greedy §4.5 selection for ONE layer. counts: [E, T]. Returns the
+    redundancy list (an expert may appear multiple times = more replicas).
+    """
+    E, T = counts.shape
+    replicas = {e: 1 for e in range(E)}
+    hot_candidates = set(int(np.argmax(counts[:, t])) for t in range(T))
+    chosen: List[int] = []
+    for _ in range(budget):
+        base = simulated_layer_load(counts, replicas)
+        best_e, best_load = None, base
+        for c in sorted(hot_candidates):
+            trial = dict(replicas)
+            trial[c] = trial[c] + 1
+            load = simulated_layer_load(counts, trial)
+            if load < best_load - 1e-9:
+                best_e, best_load = c, load
+        if best_e is None:
+            break
+        replicas[best_e] += 1
+        chosen.append(best_e)
+    return chosen
+
+
+def place_replicas(chosen: Sequence[int], counts: np.ndarray,
+                   n_npus: int, slots_per_npu: int,
+                   base_expert_npu: Optional[np.ndarray] = None)\
+        -> List[Tuple[int, int]]:
+    """Assign replicas (expert, npu): heaviest replica first onto the
+    least-loaded NPU with free slots. counts: [E, T]."""
+    E = counts.shape[0]
+    if base_expert_npu is None:
+        # default layout: expert e lives on npu e % n_npus
+        base_expert_npu = np.arange(E) % n_npus
+    npu_load = np.zeros(n_npus, np.float64)
+    total = counts.sum(axis=1).astype(np.float64)
+    for e in range(E):
+        npu_load[base_expert_npu[e]] += total[e]
+    free_slots = np.full(n_npus, slots_per_npu, np.int64)
+    order = sorted(chosen, key=lambda e: -total[e])
+    placement: List[Tuple[int, int]] = []
+    for e in order:
+        cands = np.where(free_slots > 0)[0]
+        if len(cands) == 0:
+            break
+        npu = int(cands[np.argmin(npu_load[cands])])
+        free_slots[npu] -= 1
+        # the replica takes (roughly) an even share of the expert's load
+        share = total[e] / (2 + sum(1 for x, _ in placement if x == e))
+        npu_load[npu] += share
+        npu_load[base_expert_npu[e]] -= share
+        placement.append((e, npu))
+    return placement
+
+
+# ---------------------------------------------------------------------------
+# Step 3+4: mapping + rotation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ExpertMap:
+    """Logical→physical expert mapping with rotation-based balancing.
+
+    Physical slots: [0, E) are the primary experts; [E, E + n_redundant)
+    are redundant slots. ``table[pos % P, logical]`` gives the physical
+    slot for a token at batch position ``pos`` — replicas are visited
+    round-robin by position, which needs no communication (§4.5 step 4,
+    Fig. 12's rotated columns).
+    """
+    n_logical: int
+    replicas: Dict[int, List[int]]        # logical → [physical slots]
+    rotation_period: int = 4
+    enabled: bool = True
+    # physical slot → hosting NPU (primaries default to e % n_npus; set
+    # by build_expert_map for redundant slots per the placement step)
+    slot_npu: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        P = self.rotation_period
+        tbl = np.zeros((P, self.n_logical), np.int32)
+        for e in range(self.n_logical):
+            slots = self.replicas.get(e, [e]) if self.enabled else [e]
+            for p in range(P):
+                tbl[p, e] = slots[p % len(slots)]
+        self.table = tbl
+
+    @property
+    def n_physical(self) -> int:
+        return 1 + max((max(s) for s in self.replicas.values()),
+                       default=self.n_logical - 1)
+
+    def map_tokens(self, positions: np.ndarray,
+                   logical: np.ndarray) -> np.ndarray:
+        """Vectorized gather (PyTorch-gather analogue, §4.5 step 4)."""
+        return self.table[positions % self.rotation_period, logical]
+
+
+def build_expert_map(counts: np.ndarray, n_experts: int, budget: int,
+                     n_npus: int, slots_per_npu: int = 1,
+                     rotation_period: int = 4) -> ExpertMap:
+    """One-layer end-to-end: select + place + map. counts: [E, T]."""
+    chosen = select_redundant_experts(counts, budget)
+    placement = place_replicas(chosen, counts, n_npus, slots_per_npu)
+    replicas: Dict[int, List[int]] = {e: [e] for e in range(n_experts)}
+    slot_npu = {e: e % n_npus for e in range(n_experts)}
+    next_slot = n_experts
+    for e, npu in placement:
+        replicas[e].append(next_slot)
+        slot_npu[next_slot] = npu
+        next_slot += 1
+    return ExpertMap(n_experts, replicas, rotation_period,
+                     slot_npu=slot_npu)
+
+
+# ---------------------------------------------------------------------------
+# Reconfig choreography (§4.5 step 3) — four phases, non-blocking
+# ---------------------------------------------------------------------------
+class ReconfigState:
+    IDLE, PREFETCHING, DISABLED, LOADING, ENABLED = range(5)
+
+
+class ExpertReconfigurator:
+    """Drives the four-phase redundant-expert swap. Weight movement is a
+    callback so the serving engine can run it asynchronously."""
+
+    def __init__(self, prefetch_fn=None, load_fn=None):
+        self.state = ReconfigState.IDLE
+        self.prefetch_fn = prefetch_fn or (lambda placement: None)
+        self.load_fn = load_fn or (lambda placement: None)
+        self.active_map: Optional[ExpertMap] = None
+        self.pending_map: Optional[ExpertMap] = None
+
+    def begin(self, new_map: ExpertMap, placement) -> None:
+        assert self.state in (ReconfigState.IDLE, ReconfigState.ENABLED)
+        self.pending_map = new_map
+        self.prefetch_fn(placement)          # 1. prefetch weights
+        self.state = ReconfigState.PREFETCHING
+
+    def step(self, placement=None) -> int:
+        if self.state == ReconfigState.PREFETCHING:
+            # 2. disable redundant slots (fall back to primaries)
+            if self.active_map is not None:
+                self.active_map.enabled = False
+                self.active_map.__post_init__()
+            self.state = ReconfigState.DISABLED
+        elif self.state == ReconfigState.DISABLED:
+            self.load_fn(placement)          # 3. async weight load
+            self.state = ReconfigState.LOADING
+        elif self.state == ReconfigState.LOADING:
+            # 4. restore mapping with the new replicas
+            self.active_map = self.pending_map
+            self.pending_map = None
+            self.state = ReconfigState.ENABLED
+        return self.state

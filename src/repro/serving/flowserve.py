@@ -1,0 +1,108 @@
+"""FlowServe engine: DP groups + TE-shell, PD-colocated mode.
+
+The disaggregated Prefill-Decode pipeline lives in core/pd_disagg.py; this
+module is the single-TE engine used by examples and as the building block
+of the disaggregated deployment (each prefill/decode TE *is* a FlowServe
+engine with a role flag).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.mesh_ctx import MeshCtx, make_smoke_ctx
+from repro.models.transformer import Model, build_model
+from repro.serving.dp_group import DPGroup
+from repro.serving.request import Request, RequestState
+from repro.serving.te_shell import TEShell
+from repro.serving.tokenizer import ByteTokenizer
+
+PyTree = Any
+
+
+class FlowServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
+                 *, n_dp_groups: int = 2, max_batch: int = 4,
+                 max_len: int = 256, ctx: Optional[MeshCtx] = None,
+                 seed: int = 0, memory=None):
+        self.cfg = cfg
+        self.ctx = ctx or make_smoke_ctx()
+        self.model = build_model(cfg, self.ctx)
+        if params is None:
+            params = self.model.init(jax.random.PRNGKey(seed))
+        self.params = params
+        self.tokenizer = ByteTokenizer()
+        self.dps = [
+            DPGroup(i, self.model, params, max_batch=max_batch,
+                    max_len=max_len, memory=memory)
+            for i in range(n_dp_groups)
+        ]
+        self.shell = TEShell(
+            self.dps,
+            n_layers=cfg.num_layers if cfg.has_moe else 1,
+            n_experts=cfg.moe.num_experts if cfg.has_moe else 0)
+        self.waiting: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.prompt_tokens is None:
+            req.prompt_tokens = self.tokenizer.encode(req.prompt)
+        self.waiting.append(req)
+
+    def submit_text(self, prompt: str, max_new_tokens: int = 32,
+                    **kw) -> Request:
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens, **kw)
+        self.submit(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit what fits, decode everywhere."""
+        still_waiting: List[Request] = []
+        for req in self.waiting:
+            dp_id = self.shell.dispatch(req)
+            dp = None if dp_id is None else next(
+                d for d in self.dps if d.dp_id == dp_id)
+            if dp is not None and dp.can_admit(req):
+                req.state = RequestState.PREFILLING
+                cache1, logits = dp.run_prefill(req)
+                dp.admit(req, cache1, logits)
+            else:
+                still_waiting.append(req)
+        self.waiting = still_waiting
+        produced = 0
+        for dp in self.dps:
+            produced += dp.decode_step_all()
+        return produced
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.waiting or any(d.active for d in self.dps)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine did not converge")
+        for d in self.dps:
+            d.drain()
+        done: List[Request] = []
+        for d in self.dps:
+            done.extend(d.finished)
+            d.finished = []
+        return done
+
+    def generate(self, prompts: Sequence[str], max_new_tokens: int = 32,
+                 temperature: float = 0.0) -> List[str]:
+        reqs = [self.submit_text(p, max_new_tokens,
+                                 temperature=temperature) for p in prompts]
+        self.run_until_done()
+        by_id = {r.req_id: r for r in reqs}
+        return [self.tokenizer.decode(by_id[r.req_id].output_tokens)
+                for r in reqs]
+
+    def close(self) -> None:
+        for d in self.dps:
+            d.close()

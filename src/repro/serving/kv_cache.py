@@ -1,0 +1,156 @@
+"""Paged KV block allocator + RTC-style prefix cache.
+
+Each DP group owns a :class:`BlockAllocator` accounting for its NPU-local
+KV memory in fixed-size blocks (decode admission control and the
+KV-usage-based DP load balancing of §4.3 read these counters), and a
+:class:`PrefixCache` (the Relational Tensor Cache role from FlowServe
+[10]): prompts are hashed block-wise; an exact-prefix hit returns the
+stored prefill artifacts so the prefill forward is skipped entirely.
+
+The tensor payloads live host-side as pytrees (the app-data area in XCCL
+terms); slot insertion copies them into the DP's dense decode cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+PyTree = Any
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class BlockAllocator:
+    """Fixed-pool block accounting (one per DP group)."""
+    n_blocks: int
+    block_size: int = 16
+
+    def __post_init__(self):
+        self._free: List[int] = list(range(self.n_blocks))
+        self._owned: Dict[int, List[int]] = {}
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def usage(self) -> float:
+        return self.used_blocks / max(self.n_blocks, 1)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.block_size)
+
+    def can_allocate(self, n_tokens: int, reserve_blocks: int = 0) -> bool:
+        return self.blocks_for(n_tokens) + reserve_blocks <= self.free_blocks
+
+    def allocate(self, owner: int, n_tokens: int) -> List[int]:
+        need = self.blocks_for(n_tokens)
+        if need > len(self._free):
+            raise OutOfBlocks(
+                f"owner {owner}: need {need}, free {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(need)]
+        self._owned.setdefault(owner, []).extend(blocks)
+        return blocks
+
+    def extend(self, owner: int, n_new_tokens_total: int) -> List[int]:
+        """Grow an owner's allocation to cover n_new_tokens_total."""
+        have = len(self._owned.get(owner, ())) * self.block_size
+        need_tokens = n_new_tokens_total - have
+        if need_tokens <= 0:
+            return []
+        return self.allocate(owner, need_tokens)
+
+    def free(self, owner: int) -> int:
+        blocks = self._owned.pop(owner, [])
+        self._free.extend(blocks)
+        return len(blocks)
+
+    def owners(self) -> List[int]:
+        return list(self._owned)
+
+
+def hash_blocks(tokens: List[int], block_size: int = 16) -> List[str]:
+    """Rolling block hashes (each hash covers the whole prefix up to and
+    including its block — standard prefix-cache keying)."""
+    out = []
+    h = hashlib.sha256()
+    n_full = len(tokens) // block_size
+    for b in range(n_full):
+        chunk = tokens[b * block_size:(b + 1) * block_size]
+        h.update(bytes(str(chunk), "utf-8"))
+        out.append(h.hexdigest()[:24])
+    return out
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    tokens: Tuple[int, ...]
+    cache: PyTree              # prefill cache pytree (host refs)
+    last_logits: PyTree
+    hits: int = 0
+
+
+class PrefixCache:
+    """Exact-prefix reuse keyed by rolling block hashes with LRU eviction.
+
+    A full RTC also supports partial-prefix continuation (prefilling only
+    the un-cached suffix); our Model.prefill is whole-prompt, so partial
+    hits contribute to the scheduler's cost model (hit-rate aware routing,
+    §4.3) but only exact hits skip compute. Noted in DESIGN.md.
+    """
+
+    def __init__(self, capacity: int = 64, block_size: int = 16):
+        self.capacity = capacity
+        self.block_size = block_size
+        self._store: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+
+    def _key(self, tokens: List[int]) -> Optional[str]:
+        hs = hash_blocks(tokens, self.block_size)
+        return hs[-1] if hs else None
+
+    def lookup(self, tokens: List[int]) -> Optional[PrefixEntry]:
+        key = self._key(tokens)
+        if key is None:
+            return None
+        e = self._store.get(key)
+        if e is not None and tuple(tokens) == e.tokens:
+            e.hits += 1
+            self._store.move_to_end(key)
+            return e
+        return None
+
+    def match_fraction(self, tokens: List[int]) -> float:
+        """Longest cached block-prefix fraction (scheduler cost model)."""
+        hs = hash_blocks(tokens, self.block_size)
+        hit = 0
+        for h in hs:
+            if h in self._store:
+                hit += 1
+            else:
+                break
+        return hit / max(len(hs), 1)
+
+    def insert(self, tokens: List[int], cache: PyTree, last_logits) -> None:
+        key = self._key(tokens)
+        if key is None:
+            return
+        # register every block prefix for match_fraction lookups
+        for h in hash_blocks(tokens, self.block_size)[:-1]:
+            self._store.setdefault(
+                h, PrefixEntry(tuple(), None, None))
+        self._store[key] = PrefixEntry(tuple(tokens), cache, last_logits)
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._store)

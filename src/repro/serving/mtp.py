@@ -1,0 +1,166 @@
+"""Multi-Token Prediction speculative decoding (§4.6).
+
+The five-step loop:
+  (1) MTP forward → k draft tokens, (2) sample drafts, (3) verify with the
+  main model, (4) sample from main outputs, (5) accept-check the logits.
+
+Per decode iteration the engine advances by 1 + (accepted drafts) tokens;
+with the paper's ~90% single-layer acceptance the effective TPOT is
+iteration_time / 1.9 (§7.1). ``MTPTrainer`` implements §4.6 "Multiple
+MTPs": training a second MTP layer with the main model and first MTP
+frozen (self-generated data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class MTPStats:
+    iterations: int = 0
+    drafts: int = 0
+    accepted: int = 0
+    tokens: int = 0
+
+    @property
+    def acceptance(self) -> float:
+        return self.accepted / max(self.drafts, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.tokens / max(self.iterations, 1)
+
+
+class MTPDecoder:
+    """Speculative decode for a single sequence (engine-level batching is
+    orthogonal; the DP group runs one MTPDecoder per slot when enabled)."""
+
+    def __init__(self, model: Model, params: PyTree, num_mtp: int = 1):
+        assert "mtp" in params, "model has no MTP head"
+        self.model = model
+        self.params = params
+        self.num_mtp = min(num_mtp, len(params["mtp"]))
+        self.stats = MTPStats()
+        self._decode = jax.jit(model.decode_step)
+        self._mtp = jax.jit(model.mtp_step, static_argnames=("mtp_index",))
+
+    def _hidden_of(self, params, cache, token, pos):
+        """Main-model step returning final hidden + logits + new cache."""
+        logits, cache = self._decode(params, cache, token, pos)
+        return logits, cache
+
+    def generate(self, cache: PyTree, first_token: int, start_pos: int,
+                 n_tokens: int, hidden: Optional[jax.Array] = None)\
+            -> Tuple[List[int], PyTree]:
+        """Greedy speculative generation of n_tokens (batch 1).
+
+        Each iteration: the MTP head drafts the NEXT token from the last
+        accepted token; the main model then runs on the accepted token
+        (producing its own next-token distribution); the draft is accepted
+        iff it matches the main model's argmax (greedy acceptance ⇒
+        lossless). Accepted drafts skip one main-model sampling round —
+        the tokens-per-iteration metric below is what sets effective TPOT.
+        """
+        model, params = self.model, self.params
+        out: List[int] = []
+        token = first_token
+        pos = start_pos
+        d = model.cfg.d_model
+        hid = (hidden if hidden is not None
+               else jnp.zeros((1, 1, d), model.dtype))
+        while len(out) < n_tokens:
+            self.stats.iterations += 1
+            # --- (1)+(2): draft from the MTP head -------------------------
+            tok_arr = jnp.asarray([[token]], jnp.int32)
+            pos_arr = jnp.asarray([pos], jnp.int32)
+            draft_logits, hid_mtp, _ = self._mtp(
+                params, 0, hid, tok_arr, pos_arr, None)
+            draft = int(np.argmax(np.asarray(draft_logits[0])))
+            self.stats.drafts += 1
+            # --- (3): verify: main model consumes `token` -----------------
+            main_logits, cache = self._decode(params, cache, tok_arr,
+                                              pos_arr)
+            main_tok = int(np.argmax(np.asarray(main_logits[0])))
+            out.append(main_tok)
+            self.stats.tokens += 1
+            pos += 1
+            token = main_tok
+            # --- (5): acceptance check ------------------------------------
+            if draft == main_tok and len(out) < n_tokens:
+                # draft pre-validated: commit it without an extra sampling
+                # round (on TPU the verify of [token, draft] is one fused
+                # two-token forward; see DESIGN.md hardware notes)
+                tok_arr = jnp.asarray([[main_tok]], jnp.int32)
+                pos_arr = jnp.asarray([pos], jnp.int32)
+                main_logits, cache = self._decode(params, cache, tok_arr,
+                                                  pos_arr)
+                nxt = int(np.argmax(np.asarray(main_logits[0])))
+                out.append(nxt)
+                self.stats.accepted += 1
+                self.stats.tokens += 1
+                pos += 1
+                token = nxt
+        return out[:n_tokens], cache
+
+
+# ---------------------------------------------------------------------------
+# §4.6 "Multiple MTPs": train MTP-2 with everything else frozen
+# ---------------------------------------------------------------------------
+class MTPTrainer:
+    def __init__(self, model: Model, params: PyTree, mtp_index: int,
+                 lr: float = 1e-3):
+        self.model = model
+        self.mtp_index = mtp_index
+        self.lr = lr
+        self.params = params
+
+        def loss_fn(mtp_params, frozen, tokens):
+            """Predict token[t+1+index] from hidden(t) + token[t+1]."""
+            p = dict(frozen)
+            mtps = list(frozen["mtp"])
+            mtps[mtp_index] = mtp_params
+            p["mtp"] = tuple(mtps)
+            B, S = tokens.shape
+            x = model._embed(p, tokens)
+            x, _, _, _ = model._apply_stack(p, x, mode="train")
+            # teacher-forced MTP pass over the sequence
+            h = x[:, :-2]
+            nxt = tokens[:, 1:-1]
+            tgt = tokens[:, 2:]
+            e = model._embed(p, nxt)
+            from repro.models.common import rms_norm
+            mp = p["mtp"][mtp_index]
+            hh = jnp.concatenate([
+                rms_norm(h, mp["norm_h"], model.cfg.norm_eps),
+                rms_norm(e, mp["norm_e"], model.cfg.norm_eps)], -1)
+            hh = jnp.einsum("bsd,de->bse", hh, mp["proj"])
+            from repro.models.transformer import block_apply, MLP, ATTN, CROSS_ATTN
+            kind = (model.pattern[-1][0], MLP)
+            if kind[0] == CROSS_ATTN:
+                kind = (ATTN, MLP)
+            hh, _, _ = block_apply(mp["block"], hh, cfg=model.cfg,
+                                   ctx=model.ctx, kind=kind, mode="train")
+            from repro.models.common import chunked_softmax_xent
+            loss, _ = chunked_softmax_xent(hh, tgt, model._unembed(p))
+            return loss
+
+        self._grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def train_step(self, tokens: jax.Array) -> float:
+        mtp_params = self.params["mtp"][self.mtp_index]
+        loss, g = self._grad(mtp_params, self.params, tokens)
+        new = jax.tree.map(lambda p, gi: p - self.lr * gi.astype(p.dtype),
+                           mtp_params, g)
+        mtps = list(self.params["mtp"])
+        mtps[self.mtp_index] = new
+        self.params = dict(self.params, mtp=tuple(mtps))
+        return float(loss)

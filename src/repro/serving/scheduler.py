@@ -1,0 +1,137 @@
+"""DP load balancing (§4.3): prefill collaborative scheduler + decode
+KV-usage balancer.
+
+Prefill: single-level collaborative scheduling. All tokenized requests sit
+in ONE shared queue; a leader (DP-0's scheduler) assembles per-DP batches
+each step using a cost model (prefix-cache hit rate, batch token budget,
+length-aware anti-straggler grouping). This replaces the two-level design
+the paper found straggler-prone.
+
+Decode: exclude DP groups at their batch limit; among the rest pick the
+lowest KV-cache usage, accounting for reserved space for long outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class DPStatus:
+    """Per-DP metrics the TE-shell tracks (§4.3): updated on dispatch and
+    completion; KV stats collected periodically."""
+    dp_id: int
+    batch_size: int              # max concurrent decode slots
+    active: int = 0              # running requests
+    pending: int = 0             # dispatched but not yet running
+    kv_usage: float = 0.0        # fraction of KV blocks in use
+    kv_free_blocks: int = 0
+    block_size: int = 16
+    healthy: bool = True
+
+    @property
+    def full(self) -> bool:
+        return self.active + self.pending >= self.batch_size
+
+
+# ---------------------------------------------------------------------------
+# Prefill: single-level collaborative scheduler
+# ---------------------------------------------------------------------------
+class PrefillScheduler:
+    def __init__(self, n_dps: int, token_budget: int = 8192,
+                 length_bucket: float = 2.0):
+        self.n_dps = n_dps
+        self.token_budget = token_budget      # per DP per step
+        self.length_bucket = length_bucket
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def schedule_step(self, hit_rate_fn=None) -> List[List[Request]]:
+        """Leader step (all-gathered DP status → global assignment).
+
+        Returns per-DP batches. Cost model: sort by (cache-hit desc,
+        length asc); fill DPs round-robin within LENGTH BUCKETS so one DP
+        doesn't draw a short batch while another draws a long one (the
+        straggler mode §4.3 calls out).
+        """
+        if not self.queue:
+            return [[] for _ in range(self.n_dps)]
+        hit = hit_rate_fn or (lambda r: 0.0)
+        self.queue.sort(key=lambda r: (-hit(r), r.prompt_len))
+        batches: List[List[Request]] = [[] for _ in range(self.n_dps)]
+        budgets = [self.token_budget] * self.n_dps
+        remaining: List[Request] = []
+        # bucket by length so co-scheduled batches are homogeneous
+        buckets: Dict[int, List[Request]] = {}
+        for r in self.queue:
+            b = 0
+            n = max(r.prompt_len, 1)
+            while n > 128:
+                n /= self.length_bucket
+                b += 1
+            buckets.setdefault(b, []).append(r)
+        dp = 0
+        for b in sorted(buckets):
+            for r in buckets[b]:
+                placed = False
+                for off in range(self.n_dps):
+                    cand = (dp + off) % self.n_dps
+                    if budgets[cand] >= r.prompt_len:
+                        batches[cand].append(r)
+                        budgets[cand] -= r.prompt_len
+                        dp = (cand + 1) % self.n_dps
+                        placed = True
+                        break
+                if not placed:
+                    remaining.append(r)
+        self.queue = remaining
+        return batches
+
+
+# ---------------------------------------------------------------------------
+# Decode: KV-usage-aware placement
+# ---------------------------------------------------------------------------
+class DecodeLoadBalancer:
+    def __init__(self, reserve_tokens: int = 256):
+        self.reserve_tokens = reserve_tokens
+
+    def pick(self, statuses: Sequence[DPStatus],
+             req: Request) -> Optional[int]:
+        """Exclude full/unhealthy groups; among the rest pick lowest KV
+        usage with room for prompt + reserved output space."""
+        best: Optional[DPStatus] = None
+        for s in statuses:
+            if not s.healthy or s.full:
+                continue
+            need_blocks = -(-(req.prompt_len + self.reserve_tokens)
+                            // s.block_size)
+            if s.kv_free_blocks < need_blocks:
+                continue
+            if best is None or s.kv_usage < best.kv_usage:
+                best = s
+        return None if best is None else best.dp_id
+
+
+# ---------------------------------------------------------------------------
+# JE-level prefill TE selection (§5.1 step 1)
+# ---------------------------------------------------------------------------
+def pick_prefill_te(tes: Sequence[Dict], req: Request,
+                    long_threshold: int = 8192) -> int:
+    """cache status + system load + request length. Long requests go to
+    TEs marked long-capable (dedicated long-sequence resources, §7.2)."""
+    scored: List[Tuple[float, int]] = []
+    for te in tes:
+        if req.prompt_len > long_threshold and not te.get("long", False):
+            continue
+        score = (2.0 * te.get("cache_hit", 0.0)
+                 - te.get("load", 0.0)
+                 - 0.2 * abs(te.get("mean_len", 512) - req.prompt_len)
+                 / max(req.prompt_len, 1))
+        scored.append((score, te["te_id"]))
+    if not scored:
+        scored = [(-te.get("load", 0.0), te["te_id"]) for te in tes]
+    return max(scored)[1]

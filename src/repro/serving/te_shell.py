@@ -1,0 +1,85 @@
+"""TE-shell (§4.2): the deliberately-thin central orchestrator.
+
+Exactly three responsibilities: dispatching requests across DP groups
+(via the §4.3 load balancers), triggering expert load balancing, and
+coordinating health checks. Scheduling of admitted work, output handling,
+caching and networking are fully decentralized in the DP groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.dp_group import DPGroup
+from repro.serving.eplb import (ExpertLoadCollector, build_expert_map,
+                                ExpertMap)
+from repro.serving.reliability import (Clock, HeartbeatPeer,
+                                       TieredHeartbeat)
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import DecodeLoadBalancer, DPStatus
+
+
+class TEShell:
+    def __init__(self, dp_groups: Sequence[DPGroup],
+                 n_layers: int = 1, n_experts: int = 0,
+                 eplb_budget: int = 2, clock: Optional[Clock] = None):
+        self.dps = list(dp_groups)
+        self.balancer = DecodeLoadBalancer()
+        self.n_experts = n_experts
+        self.collector = (ExpertLoadCollector(n_layers, n_experts)
+                          if n_experts else None)
+        self.eplb_budget = eplb_budget
+        self.expert_maps: Dict[int, ExpertMap] = {}
+        self.clock = clock or Clock()
+        self.heartbeat = TieredHeartbeat(
+            self.clock,
+            [HeartbeatPeer(f"dp{d.dp_id}") for d in self.dps])
+        self.dispatched = 0
+
+    # -- responsibility 1: request dispatch --------------------------------
+    def dispatch(self, req: Request) -> Optional[int]:
+        statuses = [d.status() for d in self.dps]
+        dp_id = self.balancer.pick(statuses, req)
+        if dp_id is not None:
+            self.dispatched += 1
+        return dp_id
+
+    # -- responsibility 2: EPLB trigger -------------------------------------
+    def record_expert_counts(self, counts: np.ndarray) -> None:
+        if self.collector is not None:
+            self.collector.record(counts)
+
+    def trigger_eplb(self, n_npus: int, slots_per_npu: int = 1)\
+            -> Dict[int, ExpertMap]:
+        """Periodic (e.g. per-minute) EPLB pass over collected loads."""
+        if self.collector is None:
+            return {}
+        self.collector.end_slice()
+        tc = self.collector.token_count          # [L, E, T]
+        for layer in range(tc.shape[0]):
+            self.expert_maps[layer] = build_expert_map(
+                tc[layer], self.n_experts, self.eplb_budget, n_npus,
+                slots_per_npu)
+        return self.expert_maps
+
+    # -- responsibility 3: health checks -------------------------------------
+    def health_tick(self) -> List[str]:
+        res = self.heartbeat.tick()
+        failed = res["dp"]
+        for name in failed:
+            dp_id = int(name[2:])
+            # reflected in status() → balancer stops routing there
+            for d in self.dps:
+                if d.dp_id == dp_id:
+                    d._healthy = False
+        return failed
+
+    def statuses(self) -> List[DPStatus]:
+        out = []
+        for d in self.dps:
+            s = d.status()
+            s.healthy = getattr(d, "_healthy", True)
+            out.append(s)
+        return out

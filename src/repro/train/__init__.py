@@ -1,0 +1,6 @@
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_adamw, lr_at)
+from repro.train.data import DataConfig, PackedLoader, SyntheticCorpus
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.train_loop import TrainConfig, Trainer

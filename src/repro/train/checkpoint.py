@@ -1,0 +1,98 @@
+"""Checkpointing: pytree save/restore with a manifest, atomic writes,
+step retention, and abstract-restore (for resuming with sharded params).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import tempfile
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree: PyTree) -> List[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    keep: int = 3) -> str:
+    """Atomic save of a pytree (params/opt state) under directory/step_N."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = [np.asarray(x) for x in leaves]
+    # npz can't store ml_dtypes (bfloat16 etc.) — widen to f32 for storage
+    # (lossless) and record the true dtype in the manifest for restore.
+    true_dtypes = [str(a.dtype) for a in arrays]
+    storable = [a.astype(np.float32) if a.dtype.kind == "V"
+                or str(a.dtype) == "bfloat16" else a for a in arrays]
+    np.savez(os.path.join(tmp, "leaves.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(storable)})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump({
+            "step": step,
+            "n_leaves": len(arrays),
+            "paths": _leaf_paths(tree),
+            "shapes": [list(a.shape) for a in arrays],
+            "dtypes": true_dtypes,
+            "treedef": str(treedef),
+        }, f, indent=1)
+    with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+        pickle.dump(treedef, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d[5:]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       shardings: Optional[PyTree] = None)\
+        -> Tuple[int, PyTree]:
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+        treedef = pickle.load(f)
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    import jax.numpy as jnp
+    leaves = []
+    for i in range(manifest["n_leaves"]):
+        a = data[f"leaf_{i}"]
+        want = manifest["dtypes"][i]
+        if str(a.dtype) != want:
+            a = jnp.asarray(a).astype(want)   # restore bf16 etc.
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return step, tree

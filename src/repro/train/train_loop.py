@@ -1,0 +1,96 @@
+"""Training loop: jitted step + data pipeline + checkpointing + metrics."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.mesh_ctx import MeshCtx, make_smoke_ctx
+from repro.models.transformer import build_model
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.data import DataConfig, PackedLoader
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_adamw)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = only at the end
+    ckpt_dir: Optional[str] = None
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 ctx: Optional[MeshCtx] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.ctx = ctx or make_smoke_ctx()
+        self.model = build_model(cfg, self.ctx)
+        self.loader = PackedLoader(tcfg.data)
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = self.model.init(key)
+        self.opt_state = init_adamw(self.params)
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+
+        def train_step(params, opt_state, tokens, labels, mask):
+            def loss_fn(p):
+                return self.model.forward_train(p, tokens, labels,
+                                                loss_mask=mask)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, om = adamw_update(tcfg.opt, params, grads,
+                                                 opt_state)
+            metrics = {k: v for k, v in metrics.items()
+                       if k != "expert_counts"}
+            metrics.update(loss=loss, **om)
+            return params, opt_state, metrics
+
+        self._step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def maybe_restore(self) -> None:
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return
+        try:
+            self.step, tree = restore_checkpoint(d)
+            self.params, self.opt_state = tree
+        except FileNotFoundError:
+            pass
+
+    def run(self, on_log: Optional[Callable[[Dict], None]] = None)\
+            -> List[Dict[str, float]]:
+        t0 = time.monotonic()
+        while self.step < self.tcfg.steps:
+            tokens, labels, mask = self.loader.next_batch()
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, jnp.asarray(tokens),
+                jnp.asarray(labels), jnp.asarray(mask))
+            self.step += 1
+            if (self.step % self.tcfg.log_every == 0
+                    or self.step == self.tcfg.steps):
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = self.step
+                row["wall_s"] = time.monotonic() - t0
+                self.history.append(row)
+                if on_log:
+                    on_log(row)
+            if (self.tcfg.ckpt_dir and self.tcfg.ckpt_every
+                    and self.step % self.tcfg.ckpt_every == 0):
+                save_checkpoint(self.tcfg.ckpt_dir, self.step,
+                                (self.params, self.opt_state))
+        if self.tcfg.ckpt_dir:
+            save_checkpoint(self.tcfg.ckpt_dir, self.step,
+                            (self.params, self.opt_state))
+        return self.history

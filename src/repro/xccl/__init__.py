@@ -1,0 +1,22 @@
+from repro.xccl.topology import (FABRICS, SuperPod, best_transfer_time,
+                                 dispatch_latency_model, dma_transfer_time,
+                                 mte_transfer_time, a2e_latency_model)
+from repro.xccl.primitives import (MetadataField, NPUMemory, P2PChannel,
+                                   RingBuffer, XCCLError, make_pair)
+from repro.xccl.routing import (capacity_rank, combine_local, dispatch_local,
+                                dequantize_tokens, e2a_local, a2e_local,
+                                make_a2e_e2a, quantize_tokens,
+                                scatter_to_buckets)
+from repro.xccl.pd_transfer import (TransferPlan, execute_transfer,
+                                    plan_transfer, pytree_bytes)
+
+__all__ = [
+    "FABRICS", "SuperPod", "best_transfer_time", "dispatch_latency_model",
+    "dma_transfer_time", "mte_transfer_time", "a2e_latency_model",
+    "MetadataField", "NPUMemory", "P2PChannel", "RingBuffer", "XCCLError",
+    "make_pair",
+    "capacity_rank", "combine_local", "dispatch_local", "dequantize_tokens",
+    "e2a_local", "a2e_local", "make_a2e_e2a", "quantize_tokens",
+    "scatter_to_buckets",
+    "TransferPlan", "execute_transfer", "plan_transfer", "pytree_bytes",
+]

@@ -1,0 +1,62 @@
+"""Device-layer KV/state transfer for disaggregated Prefill-Decode (§5.1).
+
+On CloudMatrix the bytes move through XCCL send/recv over UB (or RoCE for
+910B prefill). On a JAX deployment the analogue is ``jax.device_put`` of a
+sharded pytree onto the decode mesh's shardings (XLA emits the
+point-to-point transfers). The protocol concerns — deferred triggering,
+handshakes, ordering, backpressure, isolated failure domains — live in
+serving/distflow.py, which drives this module.
+
+Because prefill and decode use DIFFERENT shardings (TP=4-style prefill vs
+EP+DP decode; cache sequence-sharded on decode), the transfer includes a
+reshard. ``plan_transfer`` computes per-leaf byte counts so DistFlow can
+model/queue the transfer; ``execute_transfer`` performs it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.xccl.topology import best_transfer_time
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    n_leaves: int
+    total_bytes: int
+    modeled_time_s: float
+    fabric: str
+
+
+def pytree_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def plan_transfer(kv: PyTree, fabric: str = "ub") -> TransferPlan:
+    """Metadata-only registration (paper §5.1 step 3: the PD-transfer task
+    holds only metadata; data moves when the decode side triggers it)."""
+    total = pytree_bytes(kv)
+    return TransferPlan(
+        n_leaves=len(jax.tree.leaves(kv)),
+        total_bytes=total,
+        modeled_time_s=best_transfer_time(total, fabric),
+        fabric=fabric,
+    )
+
+
+def execute_transfer(kv: PyTree, dst_shardings: Optional[PyTree] = None)\
+        -> PyTree:
+    """Move/reshard the KV pytree onto the decode placement.
+
+    dst_shardings: pytree of NamedSharding on the decode mesh (None →
+    same-device handoff, used in single-host serving and tests).
+    """
+    if dst_shardings is None:
+        return kv
+    return jax.device_put(kv, dst_shardings)

@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; multi-device semantics are tested in
+subprocesses (tests/test_multidevice.py) per the dry-run isolation rule.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models.mesh_ctx import make_smoke_ctx
+from repro.models.transformer import build_model
+
+
+@pytest.fixture(scope="session")
+def smoke_ctx():
+    return make_smoke_ctx()
+
+
+_MODEL_CACHE = {}
+
+
+@pytest.fixture
+def make_model(smoke_ctx):
+    """Session-cached (model, params) per smoke arch."""
+    def _make(arch: str, seed: int = 0):
+        key = (arch, seed)
+        if key not in _MODEL_CACHE:
+            cfg = get_config(arch + "-smoke")
+            m = build_model(cfg, smoke_ctx)
+            params = m.init(jax.random.PRNGKey(seed))
+            _MODEL_CACHE[key] = (cfg, m, params)
+        return _MODEL_CACHE[key]
+    return _make

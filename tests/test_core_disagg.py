@@ -1,0 +1,116 @@
+"""Transformerless core: PD-disagg pipeline, MoE-Attention disagg
+equivalence, partition planner, DP-domain pipeline, dataflow runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (DataflowGraph, DisaggregatedMoEAttention,
+                        DisaggregatedPD, DomainPipeline, Node, Packet,
+                        Tag, paper_stage_times, plan_partition, split_model)
+from repro.serving.request import Request
+
+
+def test_pd_disagg_end_to_end():
+    cfg = get_config("internlm2-1.8b-smoke")
+    pd = DisaggregatedPD(cfg, n_prefill_te=2, n_decode_te=1, dp_per_te=2,
+                         max_batch=2, max_len=128)
+    reqs = [Request(prompt=p, max_new_tokens=5, ignore_eos=True)
+            for p in ["hello", "world", "foo bar", "a longer one here"]]
+    done = pd.run_until_done(reqs)
+    assert len(done) == 4
+    assert all(len(r.output_tokens) == 5 for r in done)
+    # every byte went through an isolated DistFlow instance
+    moved = sum(f.bytes_moved for f in pd.distflow.values())
+    assert moved > 0
+    pd.close()
+
+
+def test_pd_disagg_matches_colocated():
+    """The disaggregated pipeline must produce the same greedy tokens as
+    the colocated engine for identical prompts."""
+    from repro.serving import FlowServeEngine
+    cfg = get_config("internlm2-1.8b-smoke")
+    eng = FlowServeEngine(cfg, n_dp_groups=1, max_batch=2, max_len=128,
+                          seed=7)
+    out_co = eng.generate(["same tokens please"], max_new_tokens=6)
+    pd = DisaggregatedPD(cfg, params=eng.params, n_prefill_te=1,
+                         n_decode_te=1, dp_per_te=1, max_batch=2,
+                         max_len=128)
+    reqs = [Request(prompt="same tokens please", max_new_tokens=6)]
+    done = pd.run_until_done(reqs)
+    got = eng.tokenizer.decode(done[0].output_tokens)
+    assert got == out_co[0]
+    eng.close()
+    pd.close()
+
+
+@pytest.mark.parametrize("arch", ["deepseek-moe-16b", "llama4-maverick-400b-a17b"])
+def test_moe_attention_disagg_equivalence(arch, make_model):
+    cfg, m, params = make_model(arch)
+    B = 2
+    key = jax.random.PRNGKey(5)
+    toks = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+    logits_p, cache = m.prefill(params, toks)
+
+    def pad(c, s):
+        return jnp.pad(c, [(0, st - ct)
+                           for ct, st in zip(c.shape, s.shape)])
+    cache = jax.tree.map(pad, cache,
+                         jax.tree.map(lambda s: s, m.cache_spec(B, 16)))
+    pos = jnp.full((B,), 8, jnp.int32)
+    tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    ref, _ = m.decode_step(params, cache, tok, pos)
+    dis = DisaggregatedMoEAttention(m, params)
+    got, _ = dis.decode_step(cache, tok, pos)
+    err = (float(jnp.max(jnp.abs(ref - got)))
+           / max(float(jnp.max(jnp.abs(ref))), 1e-6))
+    assert err < 0.05, f"{arch}: disagg mismatch {err}"
+
+
+def test_partition_planner_matches_paper():
+    cfg = get_config("deepseek-v3-671b")
+    plan = plan_partition(cfg, 768)
+    assert plan.n_expert == 288 and plan.n_attention == 480
+    assert plan.n_dp_domains == 3
+    assert plan.dp_groups_per_domain == 160
+
+
+def test_domain_pipeline_reproduces_paper_latency():
+    cfg = get_config("deepseek-v3-671b")
+    plan = plan_partition(cfg, 768)
+    rep = DomainPipeline(plan, paper_stage_times(cfg), 61).schedule()
+    total = rep.iteration_time + 5e-3 + 2e-3   # + MTP + scheduling
+    tpot = total / 1.9                          # 90% MTP acceptance
+    assert 0.085 <= rep.iteration_time <= 0.100   # paper ≈ 93 ms fwd
+    assert 0.045 <= tpot <= 0.058                 # paper ≈ 50 ms TPOT
+
+
+def test_split_model_units():
+    cfg = get_config("deepseek-moe-16b")
+    units = split_model(cfg)
+    kinds = [u.kind for u in units]
+    assert kinds.count("moe") == 27 and kinds.count("ffn") == 1
+    assert kinds.count("attention") == 28
+    assert all(u.stateless for u in units if u.kind != "attention")
+
+
+def test_dataflow_no_global_barrier():
+    """A straggler node delays only its consumers; independent chains
+    proceed (the §5.3 property)."""
+    g = DataflowGraph()
+    calls = []
+    g.add(Node("a1", lambda x: calls.append("a1") or x + 1))
+    g.add(Node("a2", lambda x: calls.append("a2") or x * 2))
+    g.add(Node("b1", lambda x: calls.append("b1") or x - 1))
+    g.connect("a1", "a2")
+    g.mark_sink("a2")
+    g.mark_sink("b1")
+    for i in range(3):
+        g.inject("a1", Packet(Tag(req_id=1, iteration=i), i))
+        g.inject("b1", Packet(Tag(req_id=2, iteration=i), 10 * i))
+    fired = g.run()
+    assert fired == 9
+    assert [p.payload for p in g.sinks["a2"]] == [2, 4, 6]
+    assert [p.payload for p in g.sinks["b1"]] == [-1, 9, 19]

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps: interpret-mode Pallas vs pure-jnp oracle
+(assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# int8_matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(64, 256, 128), (100, 300, 50),
+                                   (8, 128, 128), (256, 1024, 512),
+                                   (1, 64, 17)])
+def test_int8_matmul(m, k, n):
+    from repro.kernels.int8_matmul.ops import quantized_matmul
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    xs = jnp.asarray(rng.random(m) + 0.1, jnp.float32)
+    ws = jnp.asarray(rng.random(n) + 0.1, jnp.float32)
+    got = quantized_matmul(xq, xs, wq, ws)
+    ref = int8_matmul_ref(xq, xs, wq, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gmm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("E,C,d,f", [(4, 16, 64, 128), (8, 64, 128, 256),
+                                     (2, 100, 32, 96), (1, 8, 16, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm(E, C, d, f, dtype):
+    from repro.kernels.gmm.ops import expert_ffn
+    from repro.kernels.gmm.ref import gmm_ref
+    b = jnp.asarray(rng.standard_normal((E, C, d)) * 0.3, dtype)
+    wg = jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, dtype)
+    wu = jnp.asarray(rng.standard_normal((E, d, f)) * 0.1, dtype)
+    wd = jnp.asarray(rng.standard_normal((E, f, d)) * 0.1, dtype)
+    got = expert_ffn(b, wg, wu, wd)
+    ref = gmm_ref(b, wg, wu, wd)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,hd,L,w", [
+    (2, 8, 2, 64, 512, 0), (3, 4, 4, 32, 1024, 0),
+    (2, 8, 2, 64, 512, 256), (1, 16, 1, 128, 2048, 0),
+    (2, 4, 2, 64, 384, 0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, H, KV, hd, L, w, dtype):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    q = jnp.asarray(rng.standard_normal((B, H, hd)) * 0.5, dtype)
+    k = jnp.asarray(rng.standard_normal((B, L, KV, hd)) * 0.5, dtype)
+    v = jnp.asarray(rng.standard_normal((B, L, KV, hd)) * 0.5, dtype)
+    lo = min(L, w or L) // 2
+    pos = jnp.asarray(rng.integers(lo, (w or L) - 1, B)
+                      + (100 if w else 0), jnp.int32)
+    got = decode_attention(q, k, v, pos, window=w)
+    ref = decode_attention_ref(q, k, v, pos, window=w)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# quant_dispatch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("T,d", [(64, 128), (100, 256), (1000, 64), (7, 32)])
+def test_quant_dispatch(T, d):
+    from repro.kernels.quant_dispatch.ops import fused_quantize
+    from repro.kernels.quant_dispatch.ref import quant_dispatch_ref
+    x = jnp.asarray(rng.standard_normal((T, d)) * 3, jnp.float32)
+    q, s = fused_quantize(x)
+    qr, sr = quant_dispatch_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # round trip error bound: ≤ scale/2 per element
+    deq = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+    np.testing.assert_allclose(deq, np.asarray(x),
+                               atol=float(np.max(np.asarray(s))) * 0.51)
+
+
+# ---------------------------------------------------------------------------
+# collect
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("N,E", [(512, 16), (1000, 64), (4096, 256),
+                                 (5, 8)])
+def test_collect(N, E):
+    from repro.kernels.collect.ops import expert_counts
+    from repro.kernels.collect.ref import collect_ref
+    ids = jnp.asarray(rng.integers(-1, E, N), jnp.int32)
+    got = expert_counts(ids, n_experts=E)
+    ref = collect_ref(ids, E)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert int(np.asarray(got).sum()) == int((np.asarray(ids) >= 0).sum())

@@ -1,0 +1,202 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# EPLB (§4.5)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    counts=st.lists(
+        st.lists(st.integers(0, 1000), min_size=3, max_size=3),
+        min_size=4, max_size=16),
+    budget=st.integers(0, 4),
+)
+def test_eplb_never_worse_than_native(counts, budget):
+    """Replicating experts must never increase the simulated layer load,
+    and replica counts must respect the budget."""
+    from repro.serving.eplb import (select_redundant_experts,
+                                    simulated_layer_load)
+    c = np.asarray(counts, np.int64)           # [E, T]
+    chosen = select_redundant_experts(c, budget)
+    assert len(chosen) <= budget
+    base = simulated_layer_load(c, {e: 1 for e in range(c.shape[0])})
+    reps = {e: 1 for e in range(c.shape[0])}
+    for e in chosen:
+        reps[e] += 1
+    assert simulated_layer_load(c, reps) <= base + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_exp=st.integers(2, 32),
+    budget=st.integers(0, 6),
+    n_npus=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_expert_map_rotation_covers_replicas(n_exp, budget, n_npus, seed):
+    """The rotation table must 1) only reference valid physical slots,
+    2) map a logical expert only to its own replicas, 3) visit every
+    replica of a hot expert (communication-free balancing)."""
+    from repro.serving.eplb import build_expert_map
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 500, (n_exp, 4))
+    em = build_expert_map(counts, n_exp, budget, n_npus)
+    for e in range(n_exp):
+        slots = set(em.replicas[e])
+        used = set(int(em.table[p, e]) for p in range(em.rotation_period))
+        assert used <= slots
+        if len(slots) <= em.rotation_period:
+            assert used == slots, "rotation must visit every replica"
+    # mapping is a pure gather: vectorized lookup matches the table
+    pos = rng.integers(0, 100, 64)
+    log = rng.integers(0, n_exp, 64)
+    phys = em.map_tokens(pos, log)
+    for p, l, f in zip(pos, log, phys):
+        assert f == em.table[p % em.rotation_period, l]
+
+
+# ---------------------------------------------------------------------------
+# KV block allocator
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "free"]),
+              st.integers(0, 7), st.integers(1, 300)),
+    min_size=1, max_size=60))
+def test_allocator_no_leak_no_double_free(ops):
+    from repro.serving.kv_cache import BlockAllocator, OutOfBlocks
+    a = BlockAllocator(n_blocks=64, block_size=16)
+    live = set()
+    for kind, owner, n_tok in ops:
+        if kind == "alloc" and owner not in live:
+            try:
+                blocks = a.allocate(owner, n_tok)
+                assert len(blocks) == a.blocks_for(n_tok)
+                live.add(owner)
+            except OutOfBlocks:
+                assert a.free_blocks < a.blocks_for(n_tok)
+        elif kind == "free":
+            a.free(owner)
+            live.discard(owner)
+    for o in list(live):
+        a.free(o)
+    assert a.free_blocks == 64, "leak detected"
+    assert a.usage == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Router / capacity machinery
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    n_dest=st.integers(1, 16),
+    cap=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+def test_capacity_rank_invariants(n, n_dest, cap, seed):
+    """No destination exceeds capacity; kept entries get unique (dest,
+    rank) slots; FIFO order preserved."""
+    from repro.xccl.routing import capacity_rank
+    rng = np.random.default_rng(seed)
+    dest = jnp.asarray(rng.integers(0, n_dest, n), jnp.int32)
+    rank, keep = capacity_rank(dest, n_dest, cap)
+    rank, keep, dest = map(np.asarray, (rank, keep, dest))
+    for d in range(n_dest):
+        kept = np.sum(keep & (dest == d))
+        assert kept <= cap
+        ranks = rank[(dest == d) & keep]
+        assert sorted(ranks) == list(range(kept)), "ranks must be dense"
+    # FIFO: an earlier arrival never has a larger rank than a later one
+    for d in range(n_dest):
+        rs = rank[dest == d]
+        assert all(rs[i] < rs[j] for i in range(len(rs))
+                   for j in range(i + 1, len(rs)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(2, 64), k=st.integers(1, 4), e=st.integers(2, 16),
+       seed=st.integers(0, 1000))
+def test_router_weights_normalized(t, k, e, seed):
+    from repro.models.ffn import _route
+    import jax
+    k = min(k, e)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (t, 32))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (32, e))
+    idx, wts, probs, logits = _route(x, w, k)
+    assert idx.shape == (t, k) and wts.shape == (t, k)
+    np.testing.assert_allclose(np.asarray(jnp.sum(wts, -1)), 1.0,
+                               rtol=1e-5)
+    assert int(jnp.max(idx)) < e and int(jnp.min(idx)) >= 0
+
+
+# ---------------------------------------------------------------------------
+# XCCL ring-buffer protocol (§3.1)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(msgs=st.lists(st.binary(min_size=0, max_size=300_000),
+                     min_size=1, max_size=8))
+def test_p2p_protocol_fifo_no_loss(msgs):
+    from repro.xccl.primitives import make_pair
+    a, b, ch = make_pair(ring_slots=64)
+    for i, m in enumerate(msgs):
+        ch.send(m, event_id=i)
+        got = ch.recv(event_id=i)
+        assert got == m, "payload corrupted"
+        assert ch.acked(i)
+
+
+def test_p2p_event_id_sanity_and_backpressure():
+    from repro.xccl.primitives import XCCLError, make_pair
+    a, b, ch = make_pair(ring_slots=2)
+    ch.send(b"x", event_id=1)
+    ch.recv(event_id=1)
+    with pytest.raises(XCCLError):
+        ch.send(b"y", event_id=1)        # replayed event
+    with pytest.raises(XCCLError):
+        ch.send(b"z" * (64 * 1024 * 2 + 1), event_id=2)  # ring full
+
+
+# ---------------------------------------------------------------------------
+# Quantization round trips
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(t=st.integers(1, 64), d=st.integers(1, 256),
+       scale=st.floats(0.01, 100.0), seed=st.integers(0, 1000))
+def test_tokenwise_quant_error_bound(t, d, scale, seed):
+    from repro.xccl.routing import dequantize_tokens, quantize_tokens
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, d)) * scale, jnp.float32)
+    q, s = quantize_tokens(x)
+    back = dequantize_tokens(q, s)
+    # symmetric int8: error ≤ scale/2 = amax/254 per element
+    bound = np.asarray(s) * 0.51
+    assert np.all(np.abs(np.asarray(back - x)) <= bound[:, None] + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(toks=st.lists(st.integers(0, 255), min_size=16, max_size=80))
+def test_prefix_cache_exact_hit_semantics(toks):
+    from repro.serving.kv_cache import PrefixCache
+    pc = PrefixCache(block_size=16)
+    pc.insert(toks, cache={"dummy": 1}, last_logits=[0.0])
+    n_full = len(toks) // 16
+    if n_full:
+        hit = pc.lookup(toks)
+        assert hit is not None and hit.tokens == tuple(toks)
+        assert pc.match_fraction(toks) == 1.0
+        # a different suffix must not exact-hit
+        other = toks[:-1] + [(toks[-1] + 1) % 256]
+        h2 = pc.lookup(other)
+        assert h2 is None or h2.tokens == tuple(other)
+    else:
+        assert pc.lookup(toks) is None
