@@ -1,0 +1,113 @@
+"""SuperPod-scale simulation sweep — paper §7.1 (Fig. 20 decade).
+
+Drives the deterministic discrete-event simulator over the DeepSeek-V3
+288-expert/480-attention partition (plan_partition on the 768-die
+CloudMatrix384) and emits:
+
+  * a TPOT-vs-batch curve from the roofline/XCCL cost model (the
+    Fig.-level decode scaling numbers),
+  * an end-to-end simulated serving run (real schedulers/EPLB/heartbeats)
+    with per-die decode throughput, TPOT and TTFT,
+  * the hot-expert straggler scenario: skewed expert popularity with
+    EPLB off vs on — the on-run must claw back a chunk of the TPOT
+    inflation.
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` dumps the
+deterministic metrics JSON (same seed ⇒ byte-identical file).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_sim_superpod [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import emit, header
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.sim import (FaultPlan, SimConfig, SuperPodCostModel,
+                       SuperPodSim, WorkloadConfig)
+
+ARCH = "deepseek-v3-671b"
+TOTAL_DIES = 768        # CloudMatrix384: 48 servers × 8 chips × 2 dies
+BATCH_SWEEP = (8, 16, 32, 64, 96, 128)
+
+
+def _mk(sim_kw: dict, wl_kw: dict, faults=None) -> SuperPodSim:
+    return SuperPodSim(SimConfig(arch=ARCH, total_dies=TOTAL_DIES,
+                                 **sim_kw),
+                       WorkloadConfig(**wl_kw), faults)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI")
+    ap.add_argument("--json", default=None,
+                    help="write baseline-run metrics JSON here")
+    ap.add_argument("--seed", type=int, default=7)
+    args, _ = ap.parse_known_args(argv)
+
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, TOTAL_DIES)
+    emit("sim/plan", 0.0,
+         f"attn={plan.n_attention} expert={plan.n_expert} "
+         f"domains={plan.n_dp_domains} ubatch={plan.microbatches}")
+
+    # -- 1. cost-model TPOT-vs-batch curve (steady state, full pod) -----
+    cost = SuperPodCostModel(cfg, plan)
+    for b in BATCH_SWEEP:
+        t = cost.decode_iter_time(b, mean_context=1024)
+        emit(f"sim/tpot_curve/b{b}", t * 1e6,
+             f"{b / t:.0f} tok/s/die steady-state")
+
+    # -- 2. end-to-end simulated serving run ----------------------------
+    if args.smoke:
+        sim_kw = dict(n_sim_dps=4, eplb_interval_s=0.5)
+        wl_kw = dict(arrival_rate=60.0, duration_s=0.75, seed=args.seed)
+    else:
+        sim_kw = dict(n_sim_dps=8, eplb_interval_s=0.5)
+        wl_kw = dict(arrival_rate=100.0, duration_s=1.5, seed=args.seed)
+
+    rep = _mk(sim_kw, wl_kw).run()
+    s = rep.summary
+    emit("sim/e2e/tpot_mean", s["tpot_mean_s"] * 1e6,
+         f"p99={s['tpot_p99_s'] * 1e3:.1f}ms")
+    emit("sim/e2e/ttft_mean", s["ttft_mean_s"] * 1e6,
+         f"p99={s['ttft_p99_s'] * 1e3:.1f}ms")
+    emit("sim/e2e/throughput", 0.0,
+         f"{s['throughput_tok_s_per_die']:.0f} tok/s/die over "
+         f"{TOTAL_DIES} dies; {s['n_finished']}/{s['n_requests']} done; "
+         f"kv_peak={s['kv_peak_usage']:.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(rep.to_json(include_requests=True))
+
+    # -- 3. hot-expert straggler: EPLB off vs on ------------------------
+    skew = FaultPlan(expert_skew=0.8)
+    off = _mk({**sim_kw, "eplb_enabled": False}, wl_kw, skew).run()
+    on = _mk(sim_kw, wl_kw, skew).run()
+    base, t_off, t_on = (s["tpot_mean_s"], off.summary["tpot_mean_s"],
+                         on.summary["tpot_mean_s"])
+    recovered = (t_off - t_on) / max(t_off - base, 1e-9)
+    emit("sim/straggler/tpot_no_eplb", t_off * 1e6,
+         f"+{(t_off / base - 1) * 100:.0f}% vs baseline")
+    emit("sim/straggler/tpot_eplb", t_on * 1e6,
+         f"eplb recovers {recovered * 100:.0f}% of inflation "
+         f"({on.summary['n_eplb_passes']} passes)")
+    ok = t_off > base * 1.2 and t_on < t_off * 0.9
+    emit("sim/straggler/verdict", 0.0,
+         "PASS" if ok else "FAIL: eplb did not reduce straggler TPOT")
+    if not ok:
+        # RuntimeError (not sys.exit) so benchmarks/run.py's aggregator
+        # records the failure instead of being aborted by SystemExit
+        raise RuntimeError("EPLB did not reduce straggler TPOT")
+
+
+if __name__ == "__main__":
+    header()
+    try:
+        main()
+    except RuntimeError as e:
+        print(f"FAILED: {e}", file=sys.stderr)
+        sys.exit(1)

@@ -20,6 +20,7 @@ MODULES = [
     "bench_mtp",                # Sec. 4.6
     "bench_quant",              # Sec. 4.7 / Fig. 15
     "bench_roofline",           # Roofline (dry-run artifacts)
+    "bench_sim_superpod",       # Sec. 7.1 (simulated 384-die serving)
 ]
 
 

@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.mesh_ctx import MeshCtx, make_smoke_ctx
 from repro.models.transformer import build_model
+from repro.serving.backend import JAXBackend
 from repro.serving.distflow import DistFlowInstance, TransferState
 from repro.serving.dp_group import DPGroup
 from repro.serving.request import Request, RequestState
@@ -86,7 +87,9 @@ class DisaggregatedPD:
         self.prefill_tes = [
             PrefillTE(
                 te_id=i,
-                dps=[DPGroup(100 * i + j, self.model, self.params,
+                dps=[DPGroup(100 * i + j,
+                             JAXBackend(self.model, self.params,
+                                        max_len=max_len),
                              max_batch=max_batch, max_len=max_len)
                      for j in range(dp_per_te)],
                 scheduler=PrefillScheduler(dp_per_te),
@@ -97,7 +100,9 @@ class DisaggregatedPD:
         self.decode_tes = [
             DecodeTE(
                 te_id=i,
-                dps=[DPGroup(1000 + 100 * i + j, self.model, self.params,
+                dps=[DPGroup(1000 + 100 * i + j,
+                             JAXBackend(self.model, self.params,
+                                        max_len=max_len),
                              max_batch=max_batch, max_len=max_len)
                      for j in range(dp_per_te)],
                 balancer=DecodeLoadBalancer())

@@ -1,0 +1,133 @@
+"""Execution backends: the seam between serving control plane and model
+execution.
+
+A :class:`DPGroup` owns admission, KV accounting, prefix caching, slot
+management and sampling — but the actual forward passes (prefill, decode
+step) and the cache representation go through an :class:`ExecutionBackend`.
+Two implementations exist:
+
+  * :class:`JAXBackend` — the production path: jitted SPMD executors over
+    a built ``Model`` + params (what FlowServe deploys on real devices).
+  * ``repro.sim.fabric.CostModelBackend`` — the SuperPod simulator's
+    path: no tensors, deterministic pseudo-logits, and an analytic
+    roofline/XCCL cost model supplying iteration latencies so the full
+    scheduler/EPLB/reliability stack can be exercised at 384-die scale
+    on one CPU in seconds.
+
+Keeping the cache pytree opaque to the DPGroup (``init_cache`` /
+``write_slot`` live here) is what lets the simulated backend use a
+zero-byte cache object while the JAX backend uses the real layer-stacked
+decode cache.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+
+class ExecutionBackend(abc.ABC):
+    """Model-execution contract consumed by :class:`DPGroup`."""
+
+    #: vocab size of the logits this backend produces.
+    vocab_size: int
+
+    @abc.abstractmethod
+    def init_cache(self, max_batch: int, max_len: int) -> PyTree:
+        """Allocate the decode cache for ``max_batch`` slots."""
+
+    @abc.abstractmethod
+    def prefill(self, tokens: List[int]) -> Tuple[PyTree, np.ndarray]:
+        """Run the prefill forward for one prompt.
+
+        Returns ``(batch-1 cache, last-position logits [V])``.
+        """
+
+    @abc.abstractmethod
+    def write_slot(self, cache: PyTree, cache1: PyTree,
+                   slot: int) -> PyTree:
+        """Insert a batch-1 prefill cache into batch slot ``slot``."""
+
+    @abc.abstractmethod
+    def decode(self, cache: PyTree, tokens: np.ndarray,
+               positions: np.ndarray) -> Tuple[np.ndarray, PyTree]:
+        """One decode step over all slots.
+
+        ``tokens``: int32 [B, 1]; ``positions``: int32 [B].
+        Returns ``(logits [B, V], new cache)``.
+        """
+
+
+# ---------------------------------------------------------------------------
+# Production backend: jitted JAX executors
+# ---------------------------------------------------------------------------
+def _bucket_len(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 2048) * 2048
+
+
+class JAXBackend(ExecutionBackend):
+    """Graph-mode decode + bucketed-length prefill over a built model."""
+
+    def __init__(self, model, params: PyTree, *, max_len: int = 256,
+                 memory: Optional[Any] = None):
+        import jax
+
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.memory = memory
+        self.vocab_size = model.cfg.vocab_size
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill, static_argnames=())
+
+    def init_cache(self, max_batch: int, max_len: int) -> PyTree:
+        return self.model.init_cache(max_batch, max_len)
+
+    def prefill(self, tokens: List[int]) -> Tuple[PyTree, np.ndarray]:
+        import jax.numpy as jnp
+
+        from repro.serving.tokenizer import PAD
+
+        n = len(tokens)
+        Lp = min(_bucket_len(n), self.max_len)
+        padded = list(tokens) + [PAD] * (Lp - n)
+        arr = jnp.asarray(padded, jnp.int32)[None]
+        mem = None if self.memory is None else self.memory[:1]
+        logits, cache = self._prefill(self.params, arr, mem,
+                                      jnp.asarray([n - 1], jnp.int32))
+        return cache, np.asarray(logits[0], np.float32)
+
+    def write_slot(self, cache: PyTree, cache1: PyTree,
+                   slot: int) -> PyTree:
+        import jax
+        import jax.numpy as jnp
+
+        def one(path, full, one_leaf):
+            keys = [getattr(p, "key", None) for p in path]
+            ax = 1 if "blocks" in keys else 0
+            # pad the incoming leaf up to the slot shape (cache len,
+            # window…)
+            target = list(full.shape)
+            target[ax] = 1
+            pads = [(0, t - s) for t, s in zip(target, one_leaf.shape)]
+            if any(p != (0, 0) for p in pads):
+                one_leaf = jnp.pad(one_leaf, pads)
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one_leaf.astype(full.dtype))
+        return jax.tree_util.tree_map_with_path(one, cache, cache1)
+
+    def decode(self, cache: PyTree, tokens: np.ndarray,
+               positions: np.ndarray) -> Tuple[np.ndarray, PyTree]:
+        import jax.numpy as jnp
+
+        logits, new_cache = self._decode(self.params, cache,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(positions))
+        return np.asarray(logits, np.float32), new_cache

@@ -1,24 +1,27 @@
 """Self-contained DP group (§4.2): one full serving pipeline.
 
-Each DP group owns tokenization, its jitted SPMD executors (prefill +
-decode step), a paged KV allocator, an RTC prefix cache, proactive GC,
-and an output-shortcutting worker that detokenizes and streams tokens
-straight to the caller — no cross-DP communication anywhere in the data
-path. The TE-shell only dispatches requests and reads status.
+Each DP group owns tokenization, a paged KV allocator, an RTC prefix
+cache, proactive GC, and an output-shortcutting worker that detokenizes
+and streams tokens straight to the caller — no cross-DP communication
+anywhere in the data path. The TE-shell only dispatches requests and
+reads status.
+
+Model execution (prefill forward, decode step, cache layout) is behind
+an :class:`~repro.serving.backend.ExecutionBackend`: the production
+engine injects a jitted :class:`~repro.serving.backend.JAXBackend`, the
+SuperPod simulator injects a roofline-derived cost-model backend — the
+control plane in this file is identical in both deployments.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import queue
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import Model
+from repro.serving.backend import ExecutionBackend
 from repro.serving.gc_control import ProactiveGC, pin_to_core
 from repro.serving.kv_cache import BlockAllocator, PrefixCache
 from repro.serving.request import Request, RequestState
@@ -26,31 +29,6 @@ from repro.serving.scheduler import DPStatus
 from repro.serving.tokenizer import EOS, PAD, ByteTokenizer
 
 PyTree = Any
-
-
-def _bucket_len(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return -(-n // 2048) * 2048
-
-
-def set_slot(cache: PyTree, sub: PyTree, slot: int) -> PyTree:
-    """Write a batch-1 cache pytree into batch slot ``slot``. Leaves under
-    'blocks' are layer-stacked (batch axis 1); others have batch axis 0."""
-    def one(path, full, one_leaf):
-        keys = [getattr(p, "key", None) for p in path]
-        ax = 1 if "blocks" in keys else 0
-        # pad the incoming leaf up to the slot shape (cache len, window…)
-        target = list(full.shape)
-        target[ax] = 1
-        pads = [(0, t - s) for t, s in zip(target, one_leaf.shape)]
-        if any(p != (0, 0) for p in pads):
-            one_leaf = jnp.pad(one_leaf, pads)
-        idx = [slice(None)] * full.ndim
-        idx[ax] = slice(slot, slot + 1)
-        return full.at[tuple(idx)].set(one_leaf.astype(full.dtype))
-    return jax.tree_util.tree_map_with_path(one, cache, sub)
 
 
 @dataclasses.dataclass
@@ -65,17 +43,14 @@ class Slot:
 
 
 class DPGroup:
-    def __init__(self, dp_id: int, model: Model, params: PyTree, *,
+    def __init__(self, dp_id: int, backend: ExecutionBackend, *,
                  max_batch: int = 4, max_len: int = 256,
                  n_kv_blocks: int = 512, block_size: int = 16,
-                 gc_every: int = 200, pin_core: Optional[int] = None,
-                 memory: Optional[jax.Array] = None):
+                 gc_every: int = 200, pin_core: Optional[int] = None):
         self.dp_id = dp_id
-        self.model = model
-        self.params = params
+        self.backend = backend
         self.max_batch = max_batch
         self.max_len = max_len
-        self.memory = memory
         self.tokenizer = ByteTokenizer()
         self.allocator = BlockAllocator(n_kv_blocks, block_size)
         self.prefix_cache = PrefixCache()
@@ -83,15 +58,12 @@ class DPGroup:
         pin_to_core(pin_core)
 
         self.slots = [Slot() for _ in range(max_batch)]
-        self.cache = model.init_cache(max_batch, max_len)
+        self.cache = backend.init_cache(max_batch, max_len)
         self.steps = 0
         self.finished: List[Request] = []
 
-        # jitted executors (graph-mode decode; eager-ish bucketed prefill)
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(model.prefill,
-                                static_argnames=())  # bucketed lengths
-        self._sample_key = jax.random.PRNGKey(dp_id)
+        self._sample_key = None   # lazily split jax PRNG (sampled decode)
+        self._sample_seed = dp_id
 
         # output shortcutting: dedicated worker streams detokenized output
         self._out_q: "queue.Queue" = queue.Queue()
@@ -129,14 +101,8 @@ class DPGroup:
         hit = self.prefix_cache.lookup(toks)
         if hit is not None and hit.cache is not None:
             return hit.cache, np.asarray(hit.last_logits)
-        n = len(toks)
-        Lp = min(_bucket_len(n), self.max_len)
-        padded = toks + [PAD] * (Lp - n)
-        arr = jnp.asarray(padded, jnp.int32)[None]
-        mem = None if self.memory is None else self.memory[:1]
-        logits, cache = self._prefill(self.params, arr, mem,
-                                      jnp.asarray([n - 1], jnp.int32))
-        logits = np.asarray(logits[0], np.float32)
+        cache, logits = self.backend.prefill(toks)
+        logits = np.asarray(logits, np.float32)
         self.prefix_cache.insert(toks, cache, logits)
         return cache, logits
 
@@ -153,8 +119,9 @@ class DPGroup:
         slot_id = next(i for i, s in enumerate(self.slots) if s.free)
         self.allocator.allocate(req.req_id,
                                 req.prompt_len + req.max_new_tokens)
-        self.cache = set_slot(self.cache, cache1, slot_id)
+        self.cache = self.backend.write_slot(self.cache, cache1, slot_id)
         first = self._sample(last_logits, req.temperature)
+        req.n_emitted += 1
         self._out_q.put((req, int(first)))
         req.state = RequestState.DECODING
         req.slot = slot_id
@@ -169,6 +136,9 @@ class DPGroup:
     def _sample(self, logits: np.ndarray, temperature: float) -> int:
         if temperature <= 0.0:
             return int(np.argmax(logits))
+        import jax
+        if self._sample_key is None:
+            self._sample_key = jax.random.PRNGKey(self._sample_seed)
         self._sample_key, sub = jax.random.split(self._sample_key)
         g = np.asarray(jax.random.gumbel(sub, logits.shape))
         return int(np.argmax(logits / temperature + g))
@@ -176,6 +146,9 @@ class DPGroup:
     @property
     def active(self) -> int:
         return sum(0 if s.free else 1 for s in self.slots)
+
+    def active_requests(self) -> List[Request]:
+        return [s.req for s in self.slots if not s.free]
 
     def decode_step_all(self, inject_fault: bool = False) -> int:
         """One engine iteration over all active slots. Returns number of
@@ -193,17 +166,15 @@ class DPGroup:
         self._rollback = {"cache": self.cache,
                           "slots": [dataclasses.replace(s)
                                     for s in self.slots]}
-        logits, new_cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(tokens),
-                                         jnp.asarray(positions))
+        logits, new_cache = self.backend.decode(self.cache, tokens,
+                                                positions)
         if inject_fault:
             # §6.2: transient network error detected → all DP groups roll
             # back to the previous iteration and re-execute.
             self.cache = self._rollback["cache"]
             self.slots = self._rollback["slots"]
-            logits, new_cache = self._decode(self.params, self.cache,
-                                             jnp.asarray(tokens),
-                                             jnp.asarray(positions))
+            logits, new_cache = self.backend.decode(self.cache, tokens,
+                                                    positions)
         self.cache = new_cache
         logits = np.asarray(logits, np.float32)
         produced = 0
@@ -215,7 +186,8 @@ class DPGroup:
             s.position += 1
             s.next_token = tok
             produced += 1
-            done = (len(req.output_tokens) + 1 >= req.max_new_tokens
+            req.n_emitted += 1
+            done = (req.n_emitted >= req.max_new_tokens
                     or (tok == req.eos_token and not req.ignore_eos)
                     or s.position >= self.max_len - 1)
             self._out_q.put((req, tok))
@@ -234,6 +206,20 @@ class DPGroup:
         req.state = RequestState.FINISHED
         self.finished.append(req)
         self.slots[slot_id] = Slot()
+
+    def evict(self, slot_id: int) -> Optional[Request]:
+        """Pull a request out of a slot without finishing it (dead-DP
+        failover, §6.2: the TE-shell re-dispatches it elsewhere)."""
+        s = self.slots[slot_id]
+        if s.free:
+            return None
+        req = s.req
+        self.allocator.free(req.req_id)
+        self.slots[slot_id] = Slot()
+        req.state = RequestState.QUEUED
+        req.slot = None
+        req.dp_group = None
+        return req
 
     # ------------------------------------------------------------------
     def status(self) -> DPStatus:

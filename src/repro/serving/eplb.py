@@ -64,9 +64,10 @@ def simulated_layer_load(counts: np.ndarray,
                          replicas: Dict[int, int]) -> float:
     """L_ℓ with each expert's per-slice count split over its replicas.
     counts: [E, T]; replicas: expert → replica count (≥1)."""
-    eff = counts.astype(np.float64).copy()
-    for e, r in replicas.items():
-        eff[e] = eff[e] / r
+    r = np.ones(counts.shape[0], np.float64)
+    for e, k in replicas.items():
+        r[e] = k
+    eff = counts.astype(np.float64) / r[:, None]
     return float(eff.max(axis=0).sum())
 
 

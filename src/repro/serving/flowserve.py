@@ -8,14 +8,10 @@ engine with a role flag).
 from __future__ import annotations
 
 import time
-from typing import Any, List, Optional, Sequence
-
-import jax
-import numpy as np
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
-from repro.models.mesh_ctx import MeshCtx, make_smoke_ctx
-from repro.models.transformer import Model, build_model
+from repro.serving.backend import ExecutionBackend, JAXBackend
 from repro.serving.dp_group import DPGroup
 from repro.serving.request import Request, RequestState
 from repro.serving.te_shell import TEShell
@@ -23,22 +19,41 @@ from repro.serving.tokenizer import ByteTokenizer
 
 PyTree = Any
 
+#: dp_id → backend; lets deployments inject non-JAX execution (the
+#: SuperPod simulator's cost-model backend plugs in here).
+BackendFactory = Callable[[int], ExecutionBackend]
+
 
 class FlowServeEngine:
     def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
                  *, n_dp_groups: int = 2, max_batch: int = 4,
-                 max_len: int = 256, ctx: Optional[MeshCtx] = None,
-                 seed: int = 0, memory=None):
+                 max_len: int = 256, ctx=None, seed: int = 0, memory=None,
+                 backend_factory: Optional[BackendFactory] = None):
         self.cfg = cfg
-        self.ctx = ctx or make_smoke_ctx()
-        self.model = build_model(cfg, self.ctx)
-        if params is None:
-            params = self.model.init(jax.random.PRNGKey(seed))
-        self.params = params
+        self.model = None
+        self.params = None
+        if backend_factory is None:
+            import jax
+
+            from repro.models.mesh_ctx import make_smoke_ctx
+            from repro.models.transformer import build_model
+
+            self.ctx = ctx or make_smoke_ctx()
+            self.model = build_model(cfg, self.ctx)
+            if params is None:
+                params = self.model.init(jax.random.PRNGKey(seed))
+            self.params = params
+            model = self.model
+
+            def backend_factory(dp_id: int) -> ExecutionBackend:
+                return JAXBackend(model, params, max_len=max_len,
+                                  memory=memory)
+        else:
+            self.ctx = ctx
         self.tokenizer = ByteTokenizer()
         self.dps = [
-            DPGroup(i, self.model, params, max_batch=max_batch,
-                    max_len=max_len, memory=memory)
+            DPGroup(i, backend_factory(i), max_batch=max_batch,
+                    max_len=max_len)
             for i in range(n_dp_groups)
         ]
         self.shell = TEShell(

@@ -42,6 +42,10 @@ class Request:
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
     state: RequestState = RequestState.QUEUED
     output_tokens: List[int] = dataclasses.field(default_factory=list)
+    # tokens handed to the output path, counted synchronously by the DP
+    # group (output_tokens is appended by the async output-shortcutting
+    # worker, so its length must not drive scheduling decisions)
+    n_emitted: int = 0
     t_arrival: float = dataclasses.field(default_factory=time.monotonic)
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None

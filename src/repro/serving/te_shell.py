@@ -24,24 +24,32 @@ from repro.serving.scheduler import DecodeLoadBalancer, DPStatus
 class TEShell:
     def __init__(self, dp_groups: Sequence[DPGroup],
                  n_layers: int = 1, n_experts: int = 0,
-                 eplb_budget: int = 2, clock: Optional[Clock] = None):
+                 eplb_budget: int = 2, clock: Optional[Clock] = None,
+                 dp_peers: Optional[Sequence[HeartbeatPeer]] = None,
+                 balancer: Optional[DecodeLoadBalancer] = None,
+                 eplb_max_slices: int = 64):
         self.dps = list(dp_groups)
-        self.balancer = DecodeLoadBalancer()
+        self.balancer = balancer or DecodeLoadBalancer()
         self.n_experts = n_experts
-        self.collector = (ExpertLoadCollector(n_layers, n_experts)
+        self.collector = (ExpertLoadCollector(n_layers, n_experts,
+                                              max_slices=eplb_max_slices)
                           if n_experts else None)
         self.eplb_budget = eplb_budget
         self.expert_maps: Dict[int, ExpertMap] = {}
         self.clock = clock or Clock()
-        self.heartbeat = TieredHeartbeat(
-            self.clock,
-            [HeartbeatPeer(f"dp{d.dp_id}") for d in self.dps])
+        # peers are injectable so deployments (and the SuperPod simulator)
+        # can wire real liveness probes into the tiered heartbeat; names
+        # must stay "dp<id>" — health_tick parses them back.
+        peers = (list(dp_peers) if dp_peers is not None
+                 else [HeartbeatPeer(f"dp{d.dp_id}") for d in self.dps])
+        self.heartbeat = TieredHeartbeat(self.clock, peers)
         self.dispatched = 0
 
     # -- responsibility 1: request dispatch --------------------------------
     def dispatch(self, req: Request) -> Optional[int]:
-        statuses = [d.status() for d in self.dps]
-        dp_id = self.balancer.pick(statuses, req)
+        # statuses() folds in health-check results so a DP the heartbeat
+        # declared dead stops receiving traffic immediately
+        dp_id = self.balancer.pick(self.statuses(), req)
         if dp_id is not None:
             self.dispatched += 1
         return dp_id

@@ -1,0 +1,23 @@
+"""SuperPod-scale deterministic discrete-event simulator.
+
+Drives the *real* serving control plane — ``PrefillScheduler``,
+``DecodeLoadBalancer``, ``pick_prefill_te``, ``TEShell`` EPLB triggering,
+tiered heartbeats, ``plan_partition`` — against a modeled CloudMatrix384
+fabric (roofline-derived compute, XCCL link latencies) with model
+execution replaced by cost-model stubs, so scheduler/EPLB/reliability
+behaviour at 384-die scale is testable in CI seconds.
+"""
+from repro.sim.events import EventLoop, SimClock
+from repro.sim.fabric import (CostModelBackend, DieModel, FabricModel,
+                              SuperPodCostModel)
+from repro.sim.workload import WorkloadConfig, WorkloadGen
+from repro.sim.metrics import MetricsCollector, SimReport
+from repro.sim.engine import FaultPlan, SimConfig, SuperPodSim
+
+__all__ = [
+    "EventLoop", "SimClock",
+    "CostModelBackend", "DieModel", "FabricModel", "SuperPodCostModel",
+    "WorkloadConfig", "WorkloadGen",
+    "MetricsCollector", "SimReport",
+    "FaultPlan", "SimConfig", "SuperPodSim",
+]

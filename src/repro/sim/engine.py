@@ -1,0 +1,389 @@
+"""SuperPod simulator engine.
+
+Runs the REAL serving control plane — ``PrefillScheduler`` batching,
+``pick_prefill_te`` TE selection, ``TEShell``/``DecodeLoadBalancer``
+decode dispatch, ``ExpertLoadCollector`` + ``build_expert_map`` EPLB,
+tiered heartbeats and dead-DP failover — over simulated DP groups whose
+execution backend is the roofline/XCCL cost model. The partition comes
+from the real ``plan_partition`` (DeepSeek-V3 on 768 dies ⇒ the paper's
+288-expert/480-attention split in 3 DP domains).
+
+Folding: simulating 480 one-die DP groups one event at a time is wasted
+work when they are statistically identical, so ``n_sim_dps`` groups each
+stand for ``n_attention / n_sim_dps`` physical dies; the cost model
+prices iterations per-die so latencies are unaffected, and throughput is
+scaled back up by ``die_scale``. Faults target individual sim groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.serving.dp_group import DPGroup
+from repro.serving.reliability import HeartbeatPeer
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import PrefillScheduler, pick_prefill_te
+from repro.serving.te_shell import TEShell
+from repro.sim.events import EventLoop
+from repro.sim.fabric import (CostModelBackend, DieModel, FabricModel,
+                              SuperPodCostModel)
+from repro.sim.metrics import MetricsCollector, SimReport
+from repro.sim.workload import WorkloadConfig, WorkloadGen
+
+MAX_IMBALANCE = 64.0
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Scenario injection. Times are virtual seconds."""
+    straggler_dp: Optional[int] = None
+    straggler_at: float = 1.0
+    straggler_slowdown: float = 3.0
+    dead_dp: Optional[int] = None
+    dead_at: float = 1.5
+    expert_skew: float = 0.0          # Zipf exponent of expert popularity
+
+
+@dataclasses.dataclass
+class SimConfig:
+    arch: str = "deepseek-v3-671b"
+    total_dies: int = 768             # CloudMatrix384: 384 chips × 2 dies
+    n_sim_dps: int = 16               # simulated decode DP groups
+    max_batch: int = 96               # decode slots per die (paper bpd)
+    max_len: int = 8192
+    n_kv_blocks: int = 8192
+    eplb_enabled: bool = True
+    eplb_interval_s: float = 1.0
+    heartbeat_interval_s: float = 0.2
+    kv_sample_interval_s: float = 0.1
+    schedule_interval_s: float = 0.02
+    admit_retry_s: float = 0.02
+    n_prefill_tes: int = 2
+    prefill_streams_per_te: int = 4
+    prefill_dies_per_stream: int = 16
+    drain_timeout_s: float = 120.0
+    seed: int = 0
+
+
+class _PrefillTE:
+    def __init__(self, te_id: int, n_streams: int, long_capable: bool):
+        self.te_id = te_id
+        self.scheduler = PrefillScheduler(n_dps=n_streams)
+        self.busy_until = [0.0] * n_streams
+        self.long_capable = long_capable
+        self.mean_len = 512.0
+
+    def stats(self, now: float) -> Dict:
+        busy = sum(1 for t in self.busy_until if t > now)
+        return {"te_id": self.te_id,
+                "load": len(self.scheduler.queue) + busy,
+                "cache_hit": 0.0,
+                "mean_len": self.mean_len,
+                "long": self.long_capable}
+
+
+class SuperPodSim:
+    def __init__(self, sim_cfg: SimConfig,
+                 wl_cfg: Optional[WorkloadConfig] = None,
+                 faults: Optional[FaultPlan] = None):
+        self.cfg = sim_cfg
+        self.faults = faults or FaultPlan()
+        self.model_cfg = get_config(sim_cfg.arch)
+        self.plan = plan_partition(self.model_cfg, sim_cfg.total_dies)
+        self.cost = SuperPodCostModel(self.model_cfg, self.plan,
+                                      FabricModel())
+        self.loop = EventLoop()
+
+        wl = wl_cfg or WorkloadConfig()
+        if self.faults.expert_skew > 0 and wl.expert_skew == 0:
+            wl = dataclasses.replace(wl,
+                                     expert_skew=self.faults.expert_skew)
+        n_experts = (self.model_cfg.moe.num_experts
+                     if self.model_cfg.has_moe else 0)
+        self.workload = WorkloadGen(wl, n_experts)
+
+        self.dies = [DieModel(i) for i in range(sim_cfg.n_sim_dps)]
+        self.dps = [
+            DPGroup(i, CostModelBackend(i, self.cost),
+                    max_batch=sim_cfg.max_batch, max_len=sim_cfg.max_len,
+                    n_kv_blocks=sim_cfg.n_kv_blocks)
+            for i in range(sim_cfg.n_sim_dps)
+        ]
+        peers = [HeartbeatPeer(f"dp{i}",
+                               responder=(lambda i=i: self.dies[i].alive))
+                 for i in range(sim_cfg.n_sim_dps)]
+        eplb_budget = max(1, self.plan.n_expert
+                          - (n_experts or self.plan.n_expert))
+        self.shell = TEShell(self.dps, n_layers=1, n_experts=n_experts,
+                             eplb_budget=eplb_budget,
+                             clock=self.loop.clock, dp_peers=peers,
+                             eplb_max_slices=8)
+        self.tes = [_PrefillTE(i, sim_cfg.prefill_streams_per_te,
+                               long_capable=(i == 0))
+                    for i in range(sim_cfg.n_prefill_tes)]
+
+        self.die_scale = max(self.plan.n_attention, 1) / sim_cfg.n_sim_dps
+        self.metrics = MetricsCollector(n_dies=sim_cfg.total_dies,
+                                        die_scale=self.die_scale)
+        self._step_scheduled = [False] * sim_cfg.n_sim_dps
+        self._admit_queue: List[Request] = []
+        self._admit_pending = False
+        self._recent_counts = (np.zeros(n_experts, np.float64)
+                               if n_experts else None)
+        self.n_arrivals = 0
+        self.n_finished = 0
+        self._arrivals_scheduled = False
+
+    # ------------------------------------------------------------------
+    # wiring
+    # ------------------------------------------------------------------
+    def _schedule_arrivals(self) -> None:
+        for i, (t, req) in enumerate(self.workload.requests()):
+            # renumber so req_ids (and the metrics JSON) are independent
+            # of how many Requests this process created before the sim
+            req.req_id = i
+            self.n_arrivals += 1
+            self.loop.schedule_at(t, f"arrival:{i}",
+                                  lambda t=t, req=req: self._arrive(t, req))
+        self._arrivals_scheduled = True
+
+    def _arrive(self, t: float, req: Request) -> None:
+        self.metrics.on_arrival(self.loop.now, req)
+        stats = [te.stats(self.loop.now) for te in self.tes]
+        te_id = pick_prefill_te(stats, req)
+        te = self.tes[te_id]
+        te.mean_len = 0.9 * te.mean_len + 0.1 * req.prompt_len
+        req.prefill_te = te_id
+        te.scheduler.submit(req)
+
+    def _done(self) -> bool:
+        return (self._arrivals_scheduled
+                and self.n_finished >= self.n_arrivals)
+
+    # -- prefill ----------------------------------------------------------
+    def _prefill_tick(self) -> None:
+        now = self.loop.now
+        for te in self.tes:
+            batches = te.scheduler.schedule_step()
+            for stream, batch in enumerate(batches):
+                if not batch:
+                    continue
+                t_batch = sum(
+                    self.cost.prefill_time(
+                        r.prompt_len,
+                        n_dies=self.cfg.prefill_dies_per_stream)
+                    for r in batch)
+                start = max(now, te.busy_until[stream])
+                done_at = start + t_batch
+                te.busy_until[stream] = done_at
+                for r in batch:
+                    r.state = RequestState.PREFILLING
+                self.loop.schedule_at(
+                    done_at, f"prefill_done:te{te.te_id}.s{stream}",
+                    lambda batch=batch: self._prefill_done(batch))
+        if not self._done():
+            self.loop.schedule(self.cfg.schedule_interval_s,
+                               "prefill_tick", self._prefill_tick)
+
+    def _prefill_done(self, batch: List[Request]) -> None:
+        for req in batch:
+            req.state = RequestState.TRANSFERRING
+            kv_t = self.cost.kv_transfer_time(req.prompt_len)
+            self.loop.schedule(kv_t, f"kv_done:{req.req_id}",
+                               lambda req=req: self._enqueue_admit(req))
+
+    # -- decode admission -------------------------------------------------
+    def _enqueue_admit(self, req: Request) -> None:
+        self._admit_queue.append(req)
+        if not self._admit_pending:
+            self._admit_pending = True
+            self.loop.schedule(0.0, "admit_drain", self._admit_drain)
+
+    def _admit_drain(self) -> None:
+        self._admit_pending = False
+        remaining: List[Request] = []
+        for req in self._admit_queue:
+            dp_id = self.shell.dispatch(req)
+            dp = None
+            if dp_id is not None:
+                dp = next(d for d in self.dps if d.dp_id == dp_id)
+                if not self.dies[dp_id].alive or not dp.can_admit(req):
+                    dp = None
+            if dp is None:
+                remaining.append(req)
+                continue
+            cache1, logits = dp.run_prefill(req)
+            dp.admit(req, cache1, logits)
+            self.metrics.on_first_token(self.loop.now, req)
+            self._kick(dp_id)
+        self._admit_queue = remaining
+        if remaining and not self._done():
+            self._admit_pending = True
+            self.loop.schedule(self.cfg.admit_retry_s, "admit_drain",
+                               self._admit_drain)
+
+    # -- decode loop ------------------------------------------------------
+    def _map_arrays(self, em) -> tuple:
+        """Vectorized (expert_idx, npu_idx, inv_replicas) view of an
+        ExpertMap, cached per map object (identity held via the object
+        itself — an id() key could collide after the old map is freed)."""
+        if getattr(self, "_map_cache_em", None) is em:
+            return self._map_cache
+        n_npus = max(self.plan.n_expert, 1)
+        exp_idx: List[int] = []
+        npu_idx: List[int] = []
+        inv_rep: List[float] = []
+        for e, slots in em.replicas.items():
+            for s in slots:
+                exp_idx.append(e)
+                npu_idx.append(em.slot_npu.get(s, s % n_npus) % n_npus)
+                inv_rep.append(1.0 / len(slots))
+        self._map_cache_em = em
+        self._map_cache = (np.asarray(exp_idx, np.int64),
+                           np.asarray(npu_idx, np.int64),
+                           np.asarray(inv_rep, np.float64))
+        return self._map_cache
+
+    def _moe_imbalance(self) -> float:
+        """Hottest-expert-die load over the pod mean, under the active
+        EPLB map (layer 0)."""
+        c = self._recent_counts
+        if c is None or c.sum() <= 0:
+            return 1.0
+        n_npus = max(self.plan.n_expert, 1)
+        em = self.shell.expert_maps.get(0)
+        load = np.zeros(n_npus, np.float64)
+        if em is None or not self.cfg.eplb_enabled:
+            np.add.at(load, np.arange(len(c)) % n_npus, c)
+        else:
+            exp_idx, npu_idx, inv_rep = self._map_arrays(em)
+            np.add.at(load, npu_idx, c[exp_idx] * inv_rep)
+        mean = c.sum() / n_npus
+        return float(np.clip(load.max() / max(mean, 1e-9), 1.0,
+                             MAX_IMBALANCE))
+
+    def _iter_time(self, dp_id: int) -> float:
+        dp = self.dps[dp_id]
+        positions = [s.position for s in dp.slots if not s.free]
+        ctx = int(np.mean(positions)) if positions else 0
+        return self.cost.decode_iter_time(
+            len(positions), mean_context=max(ctx, 1),
+            moe_imbalance=self._moe_imbalance(),
+            slowdown=self.dies[dp_id].slowdown)
+
+    def _kick(self, dp_id: int) -> None:
+        if self._step_scheduled[dp_id] or not self.dies[dp_id].alive:
+            return
+        if self.dps[dp_id].active == 0:
+            return
+        self._step_scheduled[dp_id] = True
+        self.loop.schedule(self._iter_time(dp_id), f"dp_step:{dp_id}",
+                           lambda: self._dp_step(dp_id))
+
+    def _dp_step(self, dp_id: int) -> None:
+        self._step_scheduled[dp_id] = False
+        dp = self.dps[dp_id]
+        if not self.dies[dp_id].alive or dp.active == 0:
+            return
+        active = dp.active_requests()
+        dp.decode_step_all()
+        now = self.loop.now
+        self.metrics.n_decode_iters += 1
+        for req in active:
+            self.metrics.on_token(now, req)
+            if req.state == RequestState.FINISHED:
+                self.metrics.on_finish(now, req)
+                self.n_finished += 1
+        if self._recent_counts is not None:
+            counts = self.workload.expert_counts(
+                len(active), self.model_cfg.moe.top_k)
+            self._recent_counts = 0.9 * self._recent_counts + counts
+            self.shell.record_expert_counts(counts[None])
+        dp.finished = []
+        self._kick(dp_id)
+
+    # -- control-plane periodics -----------------------------------------
+    def _eplb_tick(self) -> None:
+        if self.cfg.eplb_enabled and self.shell.collector is not None:
+            self.shell.trigger_eplb(
+                n_npus=self.plan.n_expert,
+                slots_per_npu=max(
+                    1, self.model_cfg.moe.redundancy_slots))
+            self.metrics.n_eplb_passes += 1
+        if not self._done():
+            self.loop.schedule(self.cfg.eplb_interval_s, "eplb_tick",
+                               self._eplb_tick)
+
+    def _health_tick(self) -> None:
+        failed = self.shell.health_tick()
+        for name in failed:
+            self._failover(int(name[2:]))
+        if not self._done():
+            self.loop.schedule(self.cfg.heartbeat_interval_s,
+                               "health_tick", self._health_tick)
+
+    def _failover(self, dp_id: int) -> None:
+        """Dead-DP recovery: evict active requests, recompute their
+        context elsewhere (§6.2 token recomputation across DP groups)."""
+        dp = self.dps[dp_id]
+        for slot_id in range(len(dp.slots)):
+            req = dp.evict(slot_id)
+            if req is None:
+                continue
+            self.metrics.on_failover(req)
+            # re-prefill prompt + tokens generated so far on the new DP.
+            # Synthesize the generated suffix from the synchronous
+            # n_emitted counter — req.output_tokens is appended by the
+            # async output worker, so reading it here would make the
+            # trace depend on thread timing.
+            req.prompt_tokens = list(req.prompt_tokens) \
+                + [2 + (req.req_id + j) % 50
+                   for j in range(req.n_emitted)]
+            t_re = self.cost.prefill_time(
+                req.prompt_len, n_dies=self.cfg.prefill_dies_per_stream)
+            self.loop.schedule(t_re, f"failover_admit:{req.req_id}",
+                               lambda req=req: self._enqueue_admit(req))
+
+    def _kv_tick(self) -> None:
+        alive = [d for d, die in zip(self.dps, self.dies) if die.alive]
+        usage = (float(np.mean([d.allocator.usage for d in alive]))
+                 if alive else 0.0)
+        self.metrics.sample_kv(self.loop.now, usage)
+        if not self._done():
+            self.loop.schedule(self.cfg.kv_sample_interval_s, "kv_tick",
+                               self._kv_tick)
+
+    def _schedule_faults(self) -> None:
+        f = self.faults
+        if f.straggler_dp is not None:
+            def slow():
+                self.dies[f.straggler_dp].slowdown = f.straggler_slowdown
+            self.loop.schedule_at(f.straggler_at,
+                                  f"fault:straggler:{f.straggler_dp}",
+                                  slow)
+        if f.dead_dp is not None:
+            def kill():
+                self.dies[f.dead_dp].alive = False
+            self.loop.schedule_at(f.dead_at, f"fault:dead:{f.dead_dp}",
+                                  kill)
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimReport:
+        self._schedule_arrivals()
+        self._schedule_faults()
+        self.loop.schedule(0.0, "prefill_tick", self._prefill_tick)
+        self.loop.schedule(0.0, "kv_tick", self._kv_tick)
+        self.loop.schedule(self.cfg.heartbeat_interval_s, "health_tick",
+                           self._health_tick)
+        self.loop.schedule(self.cfg.eplb_interval_s, "eplb_tick",
+                           self._eplb_tick)
+        deadline = self.workload.cfg.duration_s + self.cfg.drain_timeout_s
+        self.loop.run(until=deadline)
+        for d in self.dps:
+            d.drain()
+            d.close()
+        return self.metrics.report(self.loop.now, self.loop.trace)

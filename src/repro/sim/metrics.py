@@ -1,0 +1,151 @@
+"""Metric collection for the SuperPod simulator.
+
+Virtual-time TTFT/TPOT per request, pod throughput, KV occupancy
+timelines, and a sha256 event-trace digest used by the determinism
+tests (same seed ⇒ byte-identical report JSON and trace hash).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReqRecord:
+    req_id: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+    first_token: Optional[float] = None
+    finish: Optional[float] = None
+    n_tokens: int = 0
+    n_failovers: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish is None or self.n_tokens < 2:
+            return None
+        return (self.finish - self.first_token) / (self.n_tokens - 1)
+
+
+def _pct(vals: List[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    return float(np.percentile(np.asarray(vals, np.float64), q))
+
+
+@dataclasses.dataclass
+class SimReport:
+    summary: Dict
+    per_request: List[Dict]
+    kv_timeline: List[Tuple[float, float]]
+    trace_hash: str
+
+    def to_json(self, include_requests: bool = False) -> str:
+        doc = {"summary": self.summary, "trace_hash": self.trace_hash}
+        if include_requests:
+            doc["per_request"] = self.per_request
+        return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+class MetricsCollector:
+    def __init__(self, n_dies: int, die_scale: float = 1.0):
+        """``die_scale``: physical dies each simulated DP group stands
+        for (>1 when the sim folds statistically-identical groups)."""
+        self.n_dies = n_dies
+        self.die_scale = die_scale
+        self.records: Dict[int, ReqRecord] = {}
+        self.kv_samples: List[Tuple[float, float]] = []
+        self.n_eplb_passes = 0
+        self.n_failovers = 0
+        self.n_decode_iters = 0
+
+    # ------------------------------------------------------------------
+    def on_arrival(self, t: float, req) -> None:
+        self.records[req.req_id] = ReqRecord(
+            req.req_id, round(t, 9), req.prompt_len, req.max_new_tokens)
+
+    def on_first_token(self, t: float, req) -> None:
+        r = self.records[req.req_id]
+        if r.first_token is None:
+            r.first_token = round(t, 9)
+        r.n_tokens += 1
+
+    def on_token(self, t: float, req) -> None:
+        self.records[req.req_id].n_tokens += 1
+
+    def on_finish(self, t: float, req) -> None:
+        self.records[req.req_id].finish = round(t, 9)
+
+    def on_failover(self, req) -> None:
+        self.records[req.req_id].n_failovers += 1
+        self.n_failovers += 1
+
+    def sample_kv(self, t: float, usage: float) -> None:
+        self.kv_samples.append((round(t, 9), round(usage, 6)))
+
+    # ------------------------------------------------------------------
+    def report(self, t_end: float, trace: List[Tuple[float, str]],
+               window: Optional[Tuple[float, float]] = None) -> SimReport:
+        recs = list(self.records.values())
+        done = [r for r in recs if r.finish is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        total_tokens = sum(r.n_tokens for r in recs) * self.die_scale
+        span = max(t_end, 1e-9)
+        win_tpots = tpots
+        if window is not None:
+            lo, hi = window
+            win_tpots = [r.tpot for r in done
+                         if r.tpot is not None
+                         and lo <= (r.first_token or 0.0) <= hi]
+
+        h = hashlib.sha256()
+        for t, name in trace:
+            h.update(f"{t:.9f}:{name}\n".encode())
+
+        summary = {
+            "n_requests": len(recs),
+            "n_finished": len(done),
+            "total_tokens": int(total_tokens),
+            "sim_duration_s": round(span, 9),
+            "throughput_tok_s": round(total_tokens / span, 3),
+            "throughput_tok_s_per_die": round(
+                total_tokens / span / max(self.n_dies, 1), 3),
+            "ttft_mean_s": round(float(np.mean(ttfts)) if ttfts else 0.0,
+                                 6),
+            "ttft_p99_s": round(_pct(ttfts, 99), 6),
+            "tpot_mean_s": round(float(np.mean(tpots)) if tpots else 0.0,
+                                 6),
+            "tpot_p50_s": round(_pct(tpots, 50), 6),
+            "tpot_p99_s": round(_pct(tpots, 99), 6),
+            "tpot_window_mean_s": round(
+                float(np.mean(win_tpots)) if win_tpots else 0.0, 6),
+            "kv_peak_usage": round(
+                max((u for _, u in self.kv_samples), default=0.0), 6),
+            "kv_mean_usage": round(
+                float(np.mean([u for _, u in self.kv_samples]))
+                if self.kv_samples else 0.0, 6),
+            "n_eplb_passes": self.n_eplb_passes,
+            "n_failovers": self.n_failovers,
+            "n_decode_iters": self.n_decode_iters,
+        }
+        per_request = [
+            {"req_id": r.req_id, "arrival": r.arrival,
+             "prompt_len": r.prompt_len, "n_tokens": r.n_tokens,
+             "ttft": round(r.ttft, 9) if r.ttft is not None else None,
+             "tpot": round(r.tpot, 9) if r.tpot is not None else None,
+             "failovers": r.n_failovers}
+            for r in sorted(recs, key=lambda r: r.req_id)]
+        return SimReport(summary, per_request, self.kv_samples,
+                         h.hexdigest())

@@ -1,0 +1,90 @@
+"""Deterministic workload generation for the SuperPod simulator.
+
+Poisson arrivals with a two-component prompt-length mix (short chat /
+long document, the §7.2 traffic split) and lognormal output lengths.
+Every request also carries an *expert-affinity seed*: the sim derives
+per-iteration expert routing counts from it, so a skewed corpus (Zipf
+``expert_skew``) produces the hot-expert imbalance EPLB exists to fix.
+All randomness flows from one ``numpy`` Generator — same seed, same
+trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class WorkloadConfig:
+    arrival_rate: float = 400.0       # requests/s across the pod
+    duration_s: float = 4.0           # arrival window (sim runs to drain)
+    short_len: int = 256              # mean short-prompt tokens
+    long_len: int = 2048              # mean long-prompt tokens
+    long_fraction: float = 0.15
+    mean_output: int = 128            # mean generated tokens
+    max_output: int = 512
+    min_prompt: int = 16
+    max_prompt: int = 6144
+    expert_skew: float = 0.0          # Zipf exponent; 0 → uniform experts
+    seed: int = 0
+
+
+class WorkloadGen:
+    def __init__(self, cfg: WorkloadConfig, n_experts: int = 0):
+        self.cfg = cfg
+        self.n_experts = n_experts
+        self.rng = np.random.default_rng(cfg.seed)
+        self._expert_popularity = self._make_popularity()
+
+    def _make_popularity(self) -> Optional[np.ndarray]:
+        if not self.n_experts:
+            return None
+        if self.cfg.expert_skew <= 0:
+            return np.full(self.n_experts, 1.0 / self.n_experts)
+        ranks = np.arange(1, self.n_experts + 1, dtype=np.float64)
+        p = ranks ** (-self.cfg.expert_skew)
+        self.rng.shuffle(p)          # hot experts at random indices
+        return p / p.sum()
+
+    # ------------------------------------------------------------------
+    def requests(self) -> Iterator[tuple]:
+        """Yield ``(arrival_time, Request)`` in arrival order."""
+        c = self.cfg
+        t = 0.0
+        while t < c.duration_s:
+            t += float(self.rng.exponential(1.0 / c.arrival_rate))
+            if t >= c.duration_s:
+                return
+            yield t, self._one_request()
+
+    def _one_request(self) -> Request:
+        c = self.cfg
+        if self.rng.random() < c.long_fraction:
+            mean = c.long_len
+        else:
+            mean = c.short_len
+        plen = int(np.clip(self.rng.lognormal(np.log(mean), 0.5),
+                           c.min_prompt, c.max_prompt))
+        out = int(np.clip(self.rng.lognormal(np.log(c.mean_output), 0.6),
+                          4, c.max_output))
+        toks = self.rng.integers(2, 60, plen).tolist()
+        return Request(prompt_tokens=toks, max_new_tokens=out,
+                       ignore_eos=True, temperature=0.0)
+
+    # ------------------------------------------------------------------
+    def expert_counts(self, n_tokens: int, top_k: int) -> np.ndarray:
+        """Routed token counts [n_experts] for one decode iteration."""
+        if self._expert_popularity is None:
+            return np.zeros(0, np.int64)
+        draws = n_tokens * top_k
+        return self.rng.multinomial(draws, self._expert_popularity)\
+            .astype(np.int64)
+
+    def set_skew(self, skew: float) -> None:
+        """Flip expert popularity mid-run (scenario: traffic shift)."""
+        self.cfg = dataclasses.replace(self.cfg, expert_skew=skew)
+        self._expert_popularity = self._make_popularity()

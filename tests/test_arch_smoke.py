@@ -6,6 +6,8 @@ import pytest
 
 from repro.configs import ALL_ARCHS, get_config
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 ARCHS = ALL_ARCHS  # 10 assigned + the paper's deepseek-v3-671b
 
 

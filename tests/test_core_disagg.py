@@ -11,6 +11,8 @@ from repro.core import (DataflowGraph, DisaggregatedMoEAttention,
                         Tag, paper_stage_times, plan_partition, split_model)
 from repro.serving.request import Request
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 
 def test_pd_disagg_end_to_end():
     cfg = get_config("internlm2-1.8b-smoke")

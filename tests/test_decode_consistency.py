@@ -8,6 +8,8 @@ import pytest
 
 from repro.configs import ALL_ARCHS
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 
 def _pad_cache(cache, spec):
     def pad(c, s):

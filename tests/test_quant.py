@@ -11,6 +11,8 @@ from repro.quant import (QTensor, gptq_quantize, hessian_from_calibration,
                          smooth_quant_pair)
 from repro.quant.int8 import quantization_error
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 
 @pytest.fixture(scope="module")
 def calib():

@@ -10,6 +10,8 @@ from repro.configs import get_config
 from repro.serving import (DecodeLoadBalancer, DPStatus, FlowServeEngine,
                            PrefillScheduler, Request)
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 
 @pytest.fixture(scope="module")
 def engine():

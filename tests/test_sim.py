@@ -1,0 +1,154 @@
+"""SuperPod simulator: determinism, fault scenarios, throughput sanity.
+
+These run the real control plane (schedulers, TE-shell, EPLB,
+heartbeats) over the cost-model backend — no JAX compute — so the whole
+module is fast-tier.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.sim import (EventLoop, FaultPlan, SimConfig, SuperPodCostModel,
+                       SuperPodSim, WorkloadConfig)
+
+ARCH = "deepseek-v3-671b"
+SMALL = dict(n_sim_dps=4, eplb_interval_s=0.5)
+WL = dict(arrival_rate=40.0, duration_s=0.6)
+
+
+def run_sim(sim_kw=None, wl_kw=None, faults=None):
+    sim = SuperPodSim(SimConfig(arch=ARCH, **{**SMALL, **(sim_kw or {})}),
+                      WorkloadConfig(**{**WL, "seed": 5, **(wl_kw or {})}),
+                      faults)
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# event loop
+# ---------------------------------------------------------------------------
+def test_event_loop_ordering_and_ties():
+    loop = EventLoop()
+    fired = []
+    loop.schedule(0.2, "b", lambda: fired.append("b"))
+    loop.schedule(0.1, "a1", lambda: fired.append("a1"))
+    loop.schedule(0.1, "a2", lambda: fired.append("a2"))  # same instant
+    loop.run()
+    assert fired == ["a1", "a2", "b"], "ties must fire in schedule order"
+    assert loop.now == pytest.approx(0.2)
+
+
+def test_event_loop_until_leaves_future_events():
+    loop = EventLoop()
+    fired = []
+    loop.schedule(1.0, "x", lambda: fired.append("x"))
+    loop.schedule(5.0, "y", lambda: fired.append("y"))
+    loop.run(until=2.0)
+    assert fired == ["x"] and not loop.empty()
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_same_seed_identical_trace_and_metrics():
+    a = run_sim()
+    b = run_sim()
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json(include_requests=True) \
+        == b.to_json(include_requests=True)
+
+
+def test_different_seed_different_trace():
+    a = run_sim()
+    b = run_sim(wl_kw={"seed": 6})
+    assert a.trace_hash != b.trace_hash
+
+
+# ---------------------------------------------------------------------------
+# the 288/480 DeepSeek plan: partition + throughput band
+# ---------------------------------------------------------------------------
+def test_plan_reproduces_paper_split():
+    plan = plan_partition(get_config(ARCH), 768)
+    assert plan.n_expert == 288 and plan.n_attention == 480
+    assert plan.n_dp_domains == 3 and plan.dp_groups_per_domain == 160
+
+
+def test_per_die_throughput_band():
+    """Steady-state decode at the paper's batch-per-die 96 must land in
+    a sane band: tens-of-ms TPOT, ~10^3 tok/s per die (§7.1)."""
+    cfg = get_config(ARCH)
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    t = cost.decode_iter_time(96, mean_context=1024)
+    assert 0.02 <= t <= 0.25, f"TPOT {t * 1e3:.1f}ms out of band"
+    per_die = 96 / t
+    assert 300 <= per_die <= 5000, f"{per_die:.0f} tok/s/die out of band"
+    # batch curve must be monotone in latency and in throughput
+    ts = [cost.decode_iter_time(b, 1024) for b in (8, 32, 96)]
+    assert ts == sorted(ts)
+    tp = [b / t for b, t in zip((8, 32, 96), ts)]
+    assert tp == sorted(tp)
+
+
+def test_e2e_sim_finishes_and_reports():
+    rep = run_sim()
+    s = rep.summary
+    assert s["n_finished"] == s["n_requests"] > 0
+    assert 0.01 <= s["tpot_mean_s"] <= 0.3
+    assert s["ttft_mean_s"] > 0 and s["kv_peak_usage"] > 0
+    assert s["throughput_tok_s_per_die"] > 0
+
+
+# ---------------------------------------------------------------------------
+# fault scenarios
+# ---------------------------------------------------------------------------
+def test_straggler_raises_tpot():
+    base = run_sim()
+    slow = run_sim(faults=FaultPlan(straggler_dp=1, straggler_at=0.1,
+                                    straggler_slowdown=4.0))
+    assert slow.summary["tpot_p99_s"] > base.summary["tpot_p99_s"] * 1.5
+    assert slow.summary["tpot_mean_s"] > base.summary["tpot_mean_s"]
+    # straggler slows requests down but must not lose any
+    assert slow.summary["n_finished"] == base.summary["n_finished"]
+
+
+def test_dead_dp_failover_drains():
+    rep = run_sim(faults=FaultPlan(dead_dp=1, dead_at=0.15))
+    s = rep.summary
+    assert s["n_finished"] == s["n_requests"], "failover must drain all"
+    assert s["n_failovers"] > 0, "dead DP had active requests to move"
+    failed_over = [r for r in rep.per_request if r["failovers"] > 0]
+    assert failed_over and all(r["tpot"] is not None for r in failed_over)
+
+
+def test_eplb_reduces_skew_tpot():
+    skew = FaultPlan(expert_skew=1.0)
+    off = run_sim(sim_kw={"eplb_enabled": False}, faults=skew)
+    on = run_sim(faults=skew)
+    base = run_sim()
+    t_base = base.summary["tpot_mean_s"]
+    t_off = off.summary["tpot_mean_s"]
+    t_on = on.summary["tpot_mean_s"]
+    assert t_off > t_base * 1.2, "skew must inflate TPOT"
+    assert t_on < t_off * 0.9, "EPLB must claw back part of it"
+    assert on.summary["n_eplb_passes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# cost-model backend (the injectable execution seam)
+# ---------------------------------------------------------------------------
+def test_cost_backend_deterministic_decode():
+    from repro.sim.fabric import CostModelBackend
+    cfg = get_config(ARCH)
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    be = CostModelBackend(0, cost)
+    toks = np.array([[3], [9]], np.int32)
+    pos = np.array([4, 7], np.int32)
+    cache = be.init_cache(2, 64)
+    l1, _ = be.decode(cache, toks, pos)
+    l2, _ = be.decode(cache, toks, pos)
+    np.testing.assert_array_equal(l1, l2)
+    assert l1.shape == (2, be.vocab_size)
+    c1, p1 = be.prefill([1, 2, 3])
+    c2, p2 = be.prefill([1, 2, 3])
+    np.testing.assert_array_equal(p1, p2)
+    assert be.n_prefills == 2 and be.n_decode_steps == 2

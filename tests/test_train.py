@@ -12,6 +12,8 @@ from repro.train import (AdamWConfig, DataConfig, PackedLoader, TrainConfig,
                          Trainer, latest_step, restore_checkpoint,
                          save_checkpoint)
 
+pytestmark = pytest.mark.slow  # compile-heavy: see tests/README.md
+
 
 def test_loss_decreases(tmp_path):
     cfg = get_config("internlm2-1.8b-smoke")
