@@ -1,21 +1,49 @@
-"""Benchmark utilities: timing + CSV emission.
+"""Benchmark utilities: timing + CSV emission + machine-readable JSON.
 
 Every benchmark prints ``name,us_per_call,derived`` rows; ``derived``
-carries the paper-comparison figure (ratio, tokens/s, etc.).
+carries the paper-comparison figure (ratio, tokens/s, etc.). Calling
+:func:`write_json` at the end of a benchmark dumps the same rows to a
+``BENCH_<name>.json`` file that ``SuperPodCostModel.from_calibration``
+(and CI artifacts) consume — the bridge from measured kernel times back
+into the simulator's cost stubs.
 """
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
 ROWS: List[Tuple[str, float, str]] = []
 
 
+def reset() -> None:
+    ROWS.clear()
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def write_json(benchmark: str, path: Optional[str] = None) -> str:
+    """Dump the emitted rows as ``BENCH_<benchmark>.json`` (or ``path``).
+
+    Schema: ``{"benchmark": str, "schema": "name,us_per_call,derived",
+    "rows": [{"name", "us_per_call", "derived"}, ...]}``.
+    """
+    path = path or f"BENCH_{benchmark}.json"
+    payload = {
+        "benchmark": benchmark,
+        "schema": "name,us_per_call,derived",
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in ROWS],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path} ({len(ROWS)} rows)", flush=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

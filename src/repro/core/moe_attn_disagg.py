@@ -35,7 +35,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.transformerless import PartitionPlan, plan_partition
 from repro.models import ffn as F
-from repro.models.common import rms_norm
+from repro.models.common import microbatch_sizes, rms_norm
 from repro.models.mesh_ctx import MeshCtx
 from repro.models.transformer import Model, block_apply
 from repro.xccl.routing import quantize_tokens, dequantize_tokens
@@ -93,29 +93,27 @@ def combine_half(x, routed_out, shared_out):
 
 def pack_dispatch(hn, idx, w, n_experts: int, capacity: int,
                   quantize: bool = True):
-    """A2E payload packing on the attention die (fused quantization)."""
+    """A2E payload packing on the attention die: one fused route-pack
+    pass (capacity rank + INT8 wire quantization + bucket scatter)."""
     B, S, d = hn.shape
     hf = hn.reshape(B * S, d)
     k = idx.shape[-1]
     n = B * S * k
     flat_idx = idx.reshape(n)
     tok_of = jnp.repeat(jnp.arange(B * S), k)
-    from repro.xccl.routing import capacity_rank, scatter_to_buckets
-    rank, keep = capacity_rank(flat_idx, n_experts, capacity)
-    payload = hf[tok_of]
+    from repro.kernels.route_pack.ops import fused_route_pack
+    pack = fused_route_pack(hf, flat_idx, k=k, n_dest=n_experts,
+                            capacity=capacity, quantize=quantize)
     if quantize:
-        qv, sc = quantize_tokens(payload)
-        buckets = scatter_to_buckets(qv, flat_idx, rank, keep, n_experts,
-                                     capacity)
-        scales = scatter_to_buckets(sc, flat_idx, rank, keep, n_experts,
-                                    capacity)
-        buckets = dequantize_tokens(buckets.reshape(-1, d),
-                                    scales.reshape(-1)).reshape(
+        # the expert half consumes dequantized activations (the wire —
+        # A2E on hardware — carries the int8 + scales form)
+        buckets = dequantize_tokens(
+            pack.buckets.reshape(-1, d),
+            pack.scales.reshape(-1)).reshape(
             n_experts, capacity, d).astype(hn.dtype)
     else:
-        buckets = scatter_to_buckets(payload, flat_idx, rank, keep,
-                                     n_experts, capacity)
-    state = (flat_idx, rank, keep, tok_of, w.reshape(n))
+        buckets = pack.buckets
+    state = (flat_idx, pack.rank, pack.keep, tok_of, w.reshape(n))
     return buckets, state
 
 
@@ -139,12 +137,17 @@ class DisaggregatedMoEAttention:
     (verified in tests/test_core_disagg.py)."""
 
     def __init__(self, model: Model, params: PyTree,
-                 capacity_factor: float = 8.0, quantize: bool = False):
+                 capacity_factor: float = 8.0, quantize: bool = False,
+                 microbatches: int = 1):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.quantize = quantize
         self.capacity_factor = capacity_factor
+        # §4.4 ping-pong: split the decode batch so the A2E/E2A of one
+        # micro-batch overlaps the expert GMM of the other (each stage
+        # is its own async jit dispatch; the host never syncs between)
+        self.microbatches = max(1, int(microbatches))
         self._attn = jax.jit(self._attention_stage,
                              static_argnames=("layer_i",))
         self._experts = jax.jit(self._expert_stage,
@@ -181,8 +184,11 @@ class DisaggregatedMoEAttention:
         new_cache = jax.tree.map(lambda a: a, cache)
         B, S, d = x.shape
         e = cfg.moe
-        cap = max(int(B * S * e.top_k / max(e.num_experts, 1)
-                      * self.capacity_factor), 4)
+
+        def chunk_cap(n_tokens: int) -> int:
+            return max(int(n_tokens * e.top_k / max(e.num_experts, 1)
+                           * self.capacity_factor), 4)
+
         for layer_i, (mixer, ffn_kind) in enumerate(kinds):
             params_layer, loc = self._block_params(layer_i)
             if loc[0] == "prefix":
@@ -197,14 +203,30 @@ class DisaggregatedMoEAttention:
                 x, hn, idx, w, shared, nref = self._attn(
                     params_layer, x, stack, layer_idx, positions,
                     layer_i=layer_i)
-                buckets, state = pack_dispatch(hn, idx, w, e.num_experts,
-                                               cap, self.quantize)
-                # A2E (trampoline two-stage on hardware) → expert dies
-                out_b = self._experts(params_layer, buckets,
-                                      layer_i=layer_i)
-                # E2A → back on the attention die
-                routed = unpack_combine(out_b, state, B * S, d, cap)
-                x = combine_half(x, routed.reshape(B, S, d), shared)
+                # §4.4 ping-pong over micro-batches: pack+dispatch of
+                # micro-batch m+1 is issued while the expert stage of
+                # micro-batch m is still in flight (async jit dispatch —
+                # the host blocks only at the final combine)
+                routed_parts, off, pending = [], 0, []
+                for sz in microbatch_sizes(B, self.microbatches):
+                    hn_c = hn[off:off + sz]
+                    cap_c = chunk_cap(sz * S)   # buckets sized per chunk
+                    buckets, state = pack_dispatch(
+                        hn_c, idx[off * S:(off + sz) * S],
+                        w[off * S:(off + sz) * S], e.num_experts, cap_c,
+                        self.quantize)
+                    # A2E (trampoline two-stage on hardware) → experts
+                    out_b = self._experts(params_layer, buckets,
+                                          layer_i=layer_i)
+                    pending.append((out_b, state, sz, cap_c))
+                    off += sz
+                for out_b, state, sz, cap_c in pending:
+                    # E2A → back on the attention die
+                    routed_parts.append(
+                        unpack_combine(out_b, state, sz * S, d, cap_c)
+                        .reshape(sz, S, d))
+                routed = jnp.concatenate(routed_parts, axis=0)
+                x = combine_half(x, routed, shared)
             else:
                 from repro.models.cache_ref import CacheRef
                 ref = CacheRef(stack, layer_idx)

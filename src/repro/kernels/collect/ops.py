@@ -8,12 +8,14 @@ import jax.numpy as jnp
 
 from repro.kernels.collect.kernel import collect as _k
 from repro.kernels.collect.ref import collect_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_experts", "use_pallas", "interpret"))
 def expert_counts(expert_ids, *, n_experts: int, use_pallas: bool = True,
-                  interpret: bool = True):
+                  interpret=None):
+    interpret = resolve_interpret(interpret)
     if not use_pallas:
         return collect_ref(expert_ids, n_experts)
     n = expert_ids.shape[0]

@@ -8,12 +8,14 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention as _k
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit,
                    static_argnames=("window", "use_pallas", "interpret"))
 def decode_attention(q, k, v, positions, *, window: int = 0,
-                     use_pallas: bool = True, interpret: bool = True):
+                     use_pallas: bool = True, interpret=None):
+    interpret = resolve_interpret(interpret)
     if not use_pallas:
         return decode_attention_ref(q, k, v, positions, window=window)
     B, L = k.shape[0], k.shape[1]

@@ -8,11 +8,13 @@ import jax.numpy as jnp
 
 from repro.kernels.gmm.kernel import gmm as _gmm
 from repro.kernels.gmm.ref import gmm_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def expert_ffn(buckets, we_gate, we_up, we_down, *, use_pallas: bool = True,
-               interpret: bool = True):
+               interpret=None):
+    interpret = resolve_interpret(interpret)
     if not use_pallas:
         return gmm_ref(buckets, we_gate, we_up, we_down)
     E, C, d = buckets.shape

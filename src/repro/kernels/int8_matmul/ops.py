@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.kernels.int8_matmul.kernel import int8_matmul as _kernel_call
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 def _pad_to(x, m, axis):
@@ -24,9 +25,10 @@ def _pad_to(x, m, axis):
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def quantized_matmul(x_q, x_scale, w_q, w_scale, *, use_pallas: bool = True,
-                     interpret: bool = True):
+                     interpret=None):
     """Shape-flexible entry: pads to (8,128)-aligned tiles, dispatches to
     the Pallas kernel, slices back."""
+    interpret = resolve_interpret(interpret)
     if not use_pallas:
         return int8_matmul_ref(x_q, x_scale, w_q, w_scale)
     m, k = x_q.shape

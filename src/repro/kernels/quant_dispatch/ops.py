@@ -8,10 +8,12 @@ import jax.numpy as jnp
 
 from repro.kernels.quant_dispatch.kernel import quant_dispatch as _k
 from repro.kernels.quant_dispatch.ref import quant_dispatch_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def fused_quantize(x, *, use_pallas: bool = True, interpret: bool = True):
+def fused_quantize(x, *, use_pallas: bool = True, interpret=None):
+    interpret = resolve_interpret(interpret)
     if not use_pallas:
         return quant_dispatch_ref(x)
     T = x.shape[0]

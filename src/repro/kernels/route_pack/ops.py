@@ -1,0 +1,67 @@
+"""jit'd wrapper: pads the assignment dim, exposes use_pallas switch.
+
+``use_pallas=None`` (default) picks the execution automatically: the
+compiled Pallas kernel off-CPU, the fused-equivalent jnp oracle on CPU
+(where the interpreter would only add overhead inside jitted serving
+steps). Tests pin ``use_pallas=True`` to validate the kernel in
+interpret mode against the oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.route_pack.kernel import route_pack_kernel
+from repro.kernels.route_pack.ref import RoutePack, route_pack_ref
+from repro.kernels.runtime import on_cpu, resolve_interpret
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_dest", "capacity",
+                                             "quantize", "use_pallas",
+                                             "interpret"))
+def _dispatch(x, dest, valid, eid, *, k, n_dest, capacity, quantize,
+              use_pallas, interpret):
+    if not use_pallas:
+        return route_pack_ref(x, dest, valid, eid, k=k, n_dest=n_dest,
+                              capacity=capacity, quantize=quantize)
+    T, d = x.shape
+    N = dest.shape[0]
+    bn = k * max(1, 128 // k)
+    pad_n = (-N) % bn
+    has_eid = eid is not None
+    if valid is None:
+        valid = jnp.ones((N,), jnp.int32)
+    dest_p = jnp.concatenate(
+        [dest.astype(jnp.int32), jnp.full((pad_n,), n_dest, jnp.int32)])
+    valid_p = jnp.concatenate(
+        [valid.astype(jnp.int32), jnp.zeros((pad_n,), jnp.int32)])
+    eid_p = (jnp.concatenate([eid.astype(jnp.int32),
+                              jnp.zeros((pad_n,), jnp.int32)])
+             if has_eid else jnp.zeros((N + pad_n,), jnp.int32))
+    x_p = jnp.pad(x, ((0, pad_n // k), (0, 0)))
+    buckets, scales, eids, rank, keep = route_pack_kernel(
+        x_p, dest_p[:, None], valid_p[:, None], eid_p[:, None],
+        k=k, n_dest=n_dest, capacity=capacity, quantize=quantize,
+        has_eid=has_eid, bn=bn, interpret=interpret)
+    return RoutePack(buckets, scales, eids, rank[:N], keep[:N])
+
+
+def fused_route_pack(x, dest, valid=None, eid=None, *, k: int = 1,
+                     n_dest: int, capacity: int, quantize: bool = False,
+                     use_pallas=None, interpret=None) -> RoutePack:
+    """Fused capacity rank + INT8 quantize + bucket scatter.
+
+    x [T, d] payload rows (assignment ``r`` carries row ``r // k``);
+    dest [N = T*k] int32 destinations already clamped to [0, n_dest)
+    (rows masked out by ``valid`` still consume a rank slot of their
+    clamped destination, exactly like the reference chain); eid [N]
+    optional int32 side payload bucketed with fill -1.
+    """
+    if use_pallas is None:
+        use_pallas = not on_cpu()
+    return _dispatch(x, dest, valid, eid, k=k, n_dest=n_dest,
+                     capacity=capacity, quantize=quantize,
+                     use_pallas=bool(use_pallas),
+                     interpret=resolve_interpret(interpret))

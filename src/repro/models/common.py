@@ -14,6 +14,15 @@ def dtype_of(name: str):
             "float16": jnp.float16}[name]
 
 
+def microbatch_sizes(n: int, mb: int) -> Tuple[int, ...]:
+    """Split ``n`` rows into ``mb`` contiguous §4.4 ping-pong
+    micro-batches (earlier chunks take the remainder). Shared by the
+    decode MoE paths in models/ffn.py and core/moe_attn_disagg.py so
+    both split batches identically."""
+    mb = max(1, min(int(mb), n)) if n else 1
+    return tuple(n // mb + (1 if i < n % mb else 0) for i in range(mb))
+
+
 # ---------------------------------------------------------------------------
 # Initializers. Params are plain nested dicts of jnp arrays.
 # ---------------------------------------------------------------------------

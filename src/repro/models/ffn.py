@@ -31,7 +31,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.models.common import dense_init
+from repro.kernels.route_pack.ops import fused_route_pack
+from repro.models.common import dense_init, microbatch_sizes
 from repro.models.mesh_ctx import MeshCtx
 
 
@@ -76,31 +77,11 @@ def moe_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# Capacity machinery (shared by both strategies and by the local oracle)
+# Capacity machinery: both strategies pack buckets through the fused
+# route-pack op (kernels/route_pack — capacity rank + quantize + scatter
+# in one pass); the reference capacity_rank/scatter_to_buckets semantics
+# live in xccl/routing.py, validated bit-identical in the test suite.
 # ---------------------------------------------------------------------------
-def capacity_rank(dest: jax.Array, n_dest: int, capacity: int):
-    """dest: [N] int32 in [0, n_dest). Returns (rank_within_dest [N],
-    keep [N] bool). FIFO ranking: earlier assignments win slots (matches
-    capacity-based MoE semantics)."""
-    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)      # [N, n_dest]
-    ranks = jnp.cumsum(onehot, axis=0) - 1
-    my_rank = jnp.take_along_axis(ranks, dest[:, None], axis=1)[:, 0]
-    keep = my_rank < capacity
-    return my_rank, keep
-
-
-def scatter_to_buckets(values: jax.Array, dest: jax.Array, rank: jax.Array,
-                       keep: jax.Array, n_dest: int, capacity: int,
-                       fill=0):
-    """values: [N, ...] → buckets [n_dest, capacity, ...]; dropped entries
-    go to a sacrificial slot that is sliced away."""
-    safe_rank = jnp.where(keep, rank, capacity)
-    buf_shape = (n_dest, capacity + 1) + values.shape[1:]
-    buf = jnp.full(buf_shape, fill, values.dtype)
-    buf = buf.at[dest, safe_rank].set(values, mode="drop")
-    return buf[:, :capacity]
-
-
 def _route(x_flat: jax.Array, router_w: jax.Array, top_k: int):
     """Returns (expert idx [T,k], weights [T,k] f32, probs [T,E] f32,
     logits [T,E] f32)."""
@@ -158,13 +139,15 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
     tok_of = jnp.repeat(jnp.arange(T), k)
 
     # ---- stage 1: pack per-destination-rank capacity buffers -------------
+    # fused route-pack: capacity rank + bucket scatter in one streaming
+    # pass (the top-k payload repeat happens inside the kernel, never as
+    # a materialized [N, d] gather)
     dest_rank = flat_idx // E_local
     cap_s = max(int(N / ep_size * e.capacity_factor), 4)
-    rank1, keep1 = capacity_rank(dest_rank, ep_size, cap_s)
-    send_tok = scatter_to_buckets(xf[tok_of], dest_rank, rank1, keep1,
-                                  ep_size, cap_s)                  # [R,C,d]
-    send_eid = scatter_to_buckets(flat_idx % E_local, dest_rank, rank1,
-                                  keep1, ep_size, cap_s, fill=-1)  # [R,C]
+    pack1 = fused_route_pack(xf, dest_rank, eid=flat_idx % E_local, k=k,
+                             n_dest=ep_size, capacity=cap_s)
+    send_tok, send_eid = pack1.buckets, pack1.eids       # [R,C,d], [R,C]
+    rank1, keep1 = pack1.rank, pack1.keep
     # ---- dispatch (all_to_all over the EP axis) ---------------------------
     recv_tok = jax.lax.all_to_all(send_tok, ep_axis, 0, 0, tiled=True)
     recv_eid = jax.lax.all_to_all(send_eid, ep_axis, 0, 0, tiled=True)
@@ -173,11 +156,10 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
     flat_eid = recv_eid.reshape(ep_size * cap_s)
     valid = flat_eid >= 0
     cap_e = max(int(ep_size * cap_s / E_local * e.capacity_factor), 4)
-    rank2, keep2 = capacity_rank(jnp.where(valid, flat_eid, 0), E_local,
-                                 cap_e)
-    keep2 = keep2 & valid
-    buckets = scatter_to_buckets(flat_tok, jnp.where(valid, flat_eid, 0),
-                                 rank2, keep2, E_local, cap_e)
+    pack2 = fused_route_pack(flat_tok, jnp.where(valid, flat_eid, 0),
+                             valid=valid, n_dest=E_local, capacity=cap_e)
+    buckets = pack2.buckets
+    rank2, keep2 = pack2.rank, pack2.keep
     local_params = {
         n: params[n] for n in ("we_gate", "we_up", "we_down")
     }
@@ -204,7 +186,8 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
 # ---------------------------------------------------------------------------
 def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
                       ep_size: int, batch_axes: Tuple[str, ...],
-                      mesh_shape: Dict[str, int], train: bool):
+                      mesh_shape: Dict[str, int], train: bool,
+                      microbatches: int = 1):
     """x: [B_l, S, d]. Each rank pulls the tokens routed to its local
     experts and psum combines (the pull-based dispatch analogue).
 
@@ -215,7 +198,13 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
     shard is sliced back after the psum combine (E2A).
 
     ``ep_size`` is the *effective* EP degree: 1 when experts are
-    replicated (indivisible expert count or 1×1 mesh)."""
+    replicated (indivisible expert count or 1×1 mesh).
+
+    ``microbatches >= 2`` is the §4.4 decode ping-pong: the batch is
+    split and each micro-batch runs the full gather→GMM→combine chain
+    independently, issued back to back so the A2E/E2A collectives of one
+    micro-batch overlap the expert GMM of the other under XLA's async
+    collective scheduling (aux stats become token-weighted averages)."""
     e = cfg.moe
     if isinstance(ep_axes, str):
         ep_axes = (ep_axes,)
@@ -223,62 +212,82 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
     overlap = tuple(a for a in ep_axes if a in batch_axes) \
         if not replicated_experts else ()
 
-    B, S, d = x.shape
-    if overlap:
-        for a in overlap:              # A2E: fan tokens in to expert dies
-            x = jax.lax.all_gather(x, a, axis=0, tiled=True)
-    T = x.shape[0] * S
-    k = e.top_k
-    E = e.num_experts
-    E_local = E if replicated_experts else E // ep_size
+    def run(x):
+        """Full gather-compute-reduce for one (micro-)batch [B, S, d]."""
+        B, S, d = x.shape
+        if overlap:
+            for a in overlap:          # A2E: fan tokens in to expert dies
+                x = jax.lax.all_gather(x, a, axis=0, tiled=True)
+        T = x.shape[0] * S
+        k = e.top_k
+        E = e.num_experts
+        E_local = E if replicated_experts else E // ep_size
 
-    xf = x.reshape(T, d)
-    idx, w, probs, logits = _route(xf, params["router"], k)
-    lb, z, counts = _aux_stats(probs, idx, E, logits)
+        xf = x.reshape(T, d)
+        idx, w, probs, logits = _route(xf, params["router"], k)
+        lb, z, counts = _aux_stats(probs, idx, E, logits)
 
-    N = T * k
-    flat_idx = idx.reshape(N)
-    flat_w = w.reshape(N)
-    tok_of = jnp.repeat(jnp.arange(T), k)
+        N = T * k
+        flat_idx = idx.reshape(N)
+        flat_w = w.reshape(N)
+        tok_of = jnp.repeat(jnp.arange(T), k)
 
-    if replicated_experts:
-        my_eid, mine = flat_idx, jnp.ones((N,), bool)
+        if replicated_experts:
+            my_eid, mine = flat_idx, jnp.ones((N,), bool)
+        else:
+            r = jnp.int32(0)
+            for a in ep_axes:
+                r = r * mesh_shape[a] + jax.lax.axis_index(a)
+            mine = (flat_idx // E_local) == r
+            my_eid = flat_idx % E_local
+        # expected assignments PER EXPERT = N/E (buckets are per expert);
+        # a 4× skew margin covers routing imbalance in the sharded case
+        # (EPLB keeps the tail bounded)
+        cap = max(int(N / E * e.capacity_factor
+                      * (1 if replicated_experts else 4)), 4)
+        pack = fused_route_pack(xf, jnp.where(mine, my_eid, 0),
+                                valid=mine, k=k, n_dest=E_local,
+                                capacity=cap)
+        rank, keep = pack.rank, pack.keep
+        out_b = _expert_ffn(params, pack.buckets)
+        y_assign = out_b[jnp.where(mine, my_eid, 0),
+                         jnp.clip(rank, 0, cap - 1)]
+        y_assign = jnp.where(keep[:, None], y_assign, 0.0)
+        y = jnp.zeros((T, d), jnp.float32).at[tok_of].add(
+            y_assign.astype(jnp.float32) * flat_w[:, None])
+        if not replicated_experts:
+            y = jax.lax.psum(y, ep_axes)        # combine (E2A analogue)
+        if overlap:
+            # E2A slice-back: keep only this rank's batch shard
+            ro = jnp.int32(0)
+            for a in overlap:
+                ro = ro * mesh_shape[a] + jax.lax.axis_index(a)
+            y = jax.lax.dynamic_slice_in_dim(
+                y.reshape(-1, S, d), ro * B, B, axis=0).reshape(B * S, d)
+        return y.reshape(B, S, d), (lb, z, counts)
+
+    B = x.shape[0]
+    sizes = microbatch_sizes(B, microbatches)
+    if len(sizes) == 1:
+        y, (lb, z, counts) = run(x)
     else:
-        r = jnp.int32(0)
-        for a in ep_axes:
-            r = r * mesh_shape[a] + jax.lax.axis_index(a)
-        mine = (flat_idx // E_local) == r
-        my_eid = flat_idx % E_local
-    # expected assignments PER EXPERT = N/E (buckets are per expert); a
-    # 4× skew margin covers routing imbalance in the sharded case (EPLB
-    # keeps the tail bounded)
-    cap = max(int(N / E * e.capacity_factor
-                  * (1 if replicated_experts else 4)), 4)
-    rank, keep = capacity_rank(jnp.where(mine, my_eid, 0), E_local, cap)
-    keep = keep & mine
-    buckets = scatter_to_buckets(xf[tok_of], jnp.where(mine, my_eid, 0),
-                                 rank, keep, E_local, cap)
-    out_b = _expert_ffn(params, buckets)
-    y_assign = out_b[jnp.where(mine, my_eid, 0), jnp.clip(rank, 0, cap - 1)]
-    y_assign = jnp.where(keep[:, None], y_assign, 0.0)
-    y = jnp.zeros((T, d), jnp.float32).at[tok_of].add(
-        y_assign.astype(jnp.float32) * flat_w[:, None])
-    if not replicated_experts:
-        y = jax.lax.psum(y, ep_axes)            # combine (E2A analogue)
-    if overlap:
-        # E2A slice-back: keep only this rank's batch shard
-        ro = jnp.int32(0)
-        for a in overlap:
-            ro = ro * mesh_shape[a] + jax.lax.axis_index(a)
-        y = jax.lax.dynamic_slice_in_dim(
-            y.reshape(-1, S, d), ro * B, B, axis=0).reshape(B * S, d)
+        chunks, off = [], 0
+        for sz in sizes:
+            chunks.append(x[off:off + sz])
+            off += sz
+        outs = [run(c) for c in chunks]
+        y = jnp.concatenate([o[0] for o in outs], axis=0)
+        wts = jnp.asarray([float(sz) / B for sz in sizes], jnp.float32)
+        lb = sum(o[1][0] * wt for o, wt in zip(outs, wts))
+        z = sum(o[1][1] * wt for o, wt in zip(outs, wts))
+        counts = sum(o[1][2] for o in outs)
     # stats: reduce over batch axes not already covered by the EP gather
     stat_axes = tuple(a for a in batch_axes if a not in overlap)
     if stat_axes:
         lb = jax.lax.pmean(lb, stat_axes)
         z = jax.lax.pmean(z, stat_axes)
         counts = jax.lax.psum(counts, stat_axes)
-    return y.astype(x.dtype).reshape(B, S, d), (lb, z, counts)
+    return y.astype(x.dtype), (lb, z, counts)
 
 
 # ---------------------------------------------------------------------------
@@ -324,7 +333,9 @@ def moe_apply(
                                  ep_axes=ep_axis, ep_size=eff_ep,
                                  batch_axes=tuple(ctx.batch_axes),
                                  mesh_shape=dict(ctx.mesh.shape),
-                                 train=train)
+                                 train=train,
+                                 microbatches=(ctx.decode_microbatches
+                                               if mode == "decode" else 1))
 
     y, (lb, z, counts) = shard_map(
         body, mesh=mesh,

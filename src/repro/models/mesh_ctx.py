@@ -31,6 +31,10 @@ class MeshCtx:
     # remat policy for scanned superblocks: "none" | "full"
     remat: str = "full"
     use_pallas: bool = False    # route hot ops through Pallas kernels
+    # §4.4 decode ping-pong: split each decode MoE batch into this many
+    # micro-batches so dispatch/combine of one overlaps expert compute
+    # of the other (1 = off; 2 = the paper's setting)
+    decode_microbatches: int = 1
 
     # ------------------------------------------------------------------
     @property

@@ -5,6 +5,8 @@ from repro.serving.kv_cache import (BlockAllocator, OutOfBlocks, PrefixCache,
 from repro.serving.scheduler import (DecodeLoadBalancer, DPStatus,
                                      PrefillScheduler, pick_prefill_te)
 from repro.serving.backend import ExecutionBackend, JAXBackend
+from repro.serving.sampling import (sample_host, sample_tokens,
+                                    top_k_mask)
 from repro.serving.dp_group import DPGroup
 from repro.serving.te_shell import TEShell
 from repro.serving.flowserve import FlowServeEngine

@@ -18,6 +18,30 @@ Keeping the cache pytree opaque to the DPGroup (``init_cache`` /
 ``write_slot`` live here) is what lets the simulated backend use a
 zero-byte cache object while the JAX backend uses the real layer-stacked
 decode cache.
+
+The ``decode_sample`` contract — the zero-sync decode fast path
+---------------------------------------------------------------
+
+``decode_sample(cache, tokens, positions, temperatures, step)`` runs ONE
+decode iteration **and** the token sampling in a single backend-side
+program, returning ``(next_tokens, new_cache)`` where ``next_tokens`` is
+an ``[B]`` int32 array (device-resident for :class:`JAXBackend` — the
+caller fetches it when needed, so dispatch is asynchronous and the
+transfer is 4 bytes/slot instead of a ``[B, V]`` f32 logits plane).
+Contract details every implementation must honor:
+
+* ``tokens`` int32 ``[B, 1]``, ``positions`` int32 ``[B]``,
+  ``temperatures`` f32 ``[B]`` (``<= 0`` ⇒ greedy per slot), ``step`` an
+  int identifying the engine iteration — the PRNG stream is a pure
+  function of ``(backend seed, step)`` so replays are deterministic.
+* The returned ``new_cache`` replaces the caller's handle. With
+  ``donate=True`` (default) the JAX path donates the cache pytree to the
+  XLA executable (``donate_argnums``), so KV is updated in place and the
+  *old* handle must never be reused; callers that need the previous
+  cache for §6.2 rollback/re-execution pass ``donate=False``.
+* Host traffic per step must stay ≤ ``4 * B`` bytes (token ids only) —
+  guarded by tests; the legacy ``decode`` (full-logits) entry remains
+  for diagnostics and for callers that genuinely need distributions.
 """
 from __future__ import annotations
 
@@ -54,10 +78,21 @@ class ExecutionBackend(abc.ABC):
     @abc.abstractmethod
     def decode(self, cache: PyTree, tokens: np.ndarray,
                positions: np.ndarray) -> Tuple[np.ndarray, PyTree]:
-        """One decode step over all slots.
+        """One decode step over all slots (diagnostic / logits path).
 
         ``tokens``: int32 [B, 1]; ``positions``: int32 [B].
         Returns ``(logits [B, V], new cache)``.
+        """
+
+    @abc.abstractmethod
+    def decode_sample(self, cache: PyTree, tokens: np.ndarray,
+                      positions: np.ndarray, temperatures: np.ndarray,
+                      step: int, *, donate: bool = True
+                      ) -> Tuple[Any, PyTree]:
+        """One decode iteration + on-device sampling (fast path).
+
+        Returns ``(next_tokens [B] int32, new cache)`` — see the module
+        docstring for the full contract.
         """
 
 
@@ -72,19 +107,55 @@ def _bucket_len(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
 
 
 class JAXBackend(ExecutionBackend):
-    """Graph-mode decode + bucketed-length prefill over a built model."""
+    """Graph-mode decode + bucketed-length prefill over a built model.
+
+    The decode hot loop is :meth:`decode_sample`: forward + sampling in
+    one jitted program with the cache pytree donated, so each iteration
+    updates KV in place and returns only ``[B]`` int32 token ids.
+    """
 
     def __init__(self, model, params: PyTree, *, max_len: int = 256,
-                 memory: Optional[Any] = None):
+                 memory: Optional[Any] = None, seed: int = 0,
+                 top_k: int = 0):
         import jax
+
+        from repro.serving.sampling import sample_tokens
 
         self.model = model
         self.params = params
         self.max_len = max_len
         self.memory = memory
+        self.seed = seed
+        self.top_k = top_k
         self.vocab_size = model.cfg.vocab_size
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill, static_argnames=())
+
+        import jax.numpy as jnp
+
+        self._base_key = jax.random.PRNGKey(seed)
+
+        def _step(params, cache, tokens, positions, temperatures,
+                  base_key, step, stochastic):
+            logits, new_cache = model.decode_step(params, cache, tokens,
+                                                  positions)
+            if stochastic:
+                key = jax.random.fold_in(base_key, step)
+                toks = sample_tokens(logits, temperatures, key,
+                                     top_k=self.top_k)
+            else:
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return toks, new_cache
+
+        # donated fast path (in-place KV) + undonated safe path (the §6.2
+        # rollback keeps a live handle to the pre-step cache); greedy
+        # batches compile without the Gumbel draw
+        self._decode_sample = jax.jit(_step, donate_argnums=(1,),
+                                      static_argnames=("stochastic",))
+        self._decode_sample_safe = jax.jit(
+            _step, static_argnames=("stochastic",))
+        self._write_slot = jax.jit(self._write_slot_impl,
+                                   donate_argnums=(0,))
 
     def init_cache(self, max_batch: int, max_len: int) -> PyTree:
         return self.model.init_cache(max_batch, max_len)
@@ -103,8 +174,11 @@ class JAXBackend(ExecutionBackend):
                                       jnp.asarray([n - 1], jnp.int32))
         return cache, np.asarray(logits[0], np.float32)
 
-    def write_slot(self, cache: PyTree, cache1: PyTree,
-                   slot: int) -> PyTree:
+    @staticmethod
+    def _write_slot_impl(cache: PyTree, cache1: PyTree, slot):
+        """Jitted once per (cache1 shape bucket): a dynamic-slice insert
+        at traced ``slot`` — no per-admission retrace, and the full cache
+        is donated so the write is in place."""
         import jax
         import jax.numpy as jnp
 
@@ -112,16 +186,23 @@ class JAXBackend(ExecutionBackend):
             keys = [getattr(p, "key", None) for p in path]
             ax = 1 if "blocks" in keys else 0
             # pad the incoming leaf up to the slot shape (cache len,
-            # window…)
+            # window…) — pad widths are static, shapes are trace-time
             target = list(full.shape)
             target[ax] = 1
             pads = [(0, t - s) for t, s in zip(target, one_leaf.shape)]
             if any(p != (0, 0) for p in pads):
                 one_leaf = jnp.pad(one_leaf, pads)
-            idx = [slice(None)] * full.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return full.at[tuple(idx)].set(one_leaf.astype(full.dtype))
+            starts = [0] * full.ndim
+            starts[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                full, one_leaf.astype(full.dtype), tuple(starts))
         return jax.tree_util.tree_map_with_path(one, cache, cache1)
+
+    def write_slot(self, cache: PyTree, cache1: PyTree,
+                   slot: int) -> PyTree:
+        import jax.numpy as jnp
+
+        return self._write_slot(cache, cache1, jnp.int32(slot))
 
     def decode(self, cache: PyTree, tokens: np.ndarray,
                positions: np.ndarray) -> Tuple[np.ndarray, PyTree]:
@@ -131,3 +212,18 @@ class JAXBackend(ExecutionBackend):
                                          jnp.asarray(tokens),
                                          jnp.asarray(positions))
         return np.asarray(logits, np.float32), new_cache
+
+    def decode_sample(self, cache: PyTree, tokens: np.ndarray,
+                      positions: np.ndarray, temperatures: np.ndarray,
+                      step: int, *, donate: bool = True
+                      ) -> Tuple[Any, PyTree]:
+        import jax.numpy as jnp
+
+        stochastic = bool(np.any(np.asarray(temperatures) > 0.0))
+        fn = self._decode_sample if donate else self._decode_sample_safe
+        toks, new_cache = fn(self.params, cache, jnp.asarray(tokens),
+                             jnp.asarray(positions),
+                             jnp.asarray(temperatures, jnp.float32),
+                             self._base_key, jnp.int32(step),
+                             stochastic=stochastic)
+        return toks, new_cache

@@ -11,6 +11,12 @@ an :class:`~repro.serving.backend.ExecutionBackend`: the production
 engine injects a jitted :class:`~repro.serving.backend.JAXBackend`, the
 SuperPod simulator injects a roofline-derived cost-model backend — the
 control plane in this file is identical in both deployments.
+
+The decode hot loop is the zero-sync fast path: ``decode_launch()``
+issues the backend's fused decode+sample program (cache donated, async
+dispatch) and ``decode_complete()`` fetches only the ``[B]`` int32
+next-token vector — 4 bytes per slot crossing device→host per
+iteration, never a ``[B, V]`` logits plane (guarded by tests).
 """
 from __future__ import annotations
 
@@ -62,8 +68,11 @@ class DPGroup:
         self.steps = 0
         self.finished: List[Request] = []
 
-        self._sample_key = None   # lazily split jax PRNG (sampled decode)
+        self._sample_key = None   # lazily split jax PRNG (admit sampling)
         self._sample_seed = dp_id
+        # zero-sync fast path: in-flight (device tokens, [(slot, req)])
+        self._pending: Optional[Tuple[Any, List[Tuple[int, Request]]]] \
+            = None
 
         # output shortcutting: dedicated worker streams detokenized output
         self._out_q: "queue.Queue" = queue.Queue()
@@ -150,39 +159,30 @@ class DPGroup:
     def active_requests(self) -> List[Request]:
         return [s.req for s in self.slots if not s.free]
 
-    def decode_step_all(self, inject_fault: bool = False) -> int:
-        """One engine iteration over all active slots. Returns number of
-        tokens produced. ``inject_fault`` exercises the §6.2 token-
-        recomputation path: the step is rolled back and re-executed."""
-        if self.active == 0:
-            return 0
+    def _gather_step_inputs(self):
         tokens = np.full((self.max_batch, 1), PAD, np.int32)
         positions = np.zeros((self.max_batch,), np.int32)
+        temps = np.zeros((self.max_batch,), np.float32)
+        active: List[Tuple[int, Request]] = []
         for i, s in enumerate(self.slots):
             if not s.free:
                 tokens[i, 0] = s.next_token
                 positions[i] = s.position
-        # save rollback state (previous iteration boundary)
-        self._rollback = {"cache": self.cache,
-                          "slots": [dataclasses.replace(s)
-                                    for s in self.slots]}
-        logits, new_cache = self.backend.decode(self.cache, tokens,
-                                                positions)
-        if inject_fault:
-            # §6.2: transient network error detected → all DP groups roll
-            # back to the previous iteration and re-execute.
-            self.cache = self._rollback["cache"]
-            self.slots = self._rollback["slots"]
-            logits, new_cache = self.backend.decode(self.cache, tokens,
-                                                    positions)
-        self.cache = new_cache
-        logits = np.asarray(logits, np.float32)
+                temps[i] = s.req.temperature
+                active.append((i, s.req))
+        return tokens, positions, temps, active
+
+    def _apply_sampled(self, toks: np.ndarray,
+                       active: List[Tuple[int, Request]]) -> int:
+        """Host bookkeeping for one completed iteration: ``toks`` is the
+        ``[B]`` int32 next-token vector from ``decode_sample``."""
         produced = 0
-        for i, s in enumerate(self.slots):
-            if s.free:
-                continue
+        for i, req_at_launch in active:
+            s = self.slots[i]
+            if s.free or s.req is not req_at_launch:
+                continue        # evicted/replaced between launch+complete
             req = s.req
-            tok = self._sample(logits[i], req.temperature)
+            tok = int(toks[i])
             s.position += 1
             s.next_token = tok
             produced += 1
@@ -196,6 +196,60 @@ class DPGroup:
         self.steps += 1
         self.gc_ctl.step()
         return produced
+
+    def decode_launch(self) -> bool:
+        """Issue one decode iteration without waiting for its result.
+
+        The backend's ``decode_sample`` dispatches asynchronously (JAX:
+        the jitted program is enqueued, the cache pytree donated, and
+        only a ``[B]`` int32 token handle returned), so the caller can
+        launch other DP groups / do host work while the device computes.
+        """
+        if self.active == 0 or self._pending is not None:
+            return False
+        tokens, positions, temps, active = self._gather_step_inputs()
+        toks_dev, new_cache = self.backend.decode_sample(
+            self.cache, tokens, positions, temps, self.steps)
+        self.cache = new_cache
+        self._pending = (toks_dev, active)
+        return True
+
+    def decode_complete(self) -> int:
+        """Fetch the launched iteration's tokens (4·B bytes device→host)
+        and run the host-side slot bookkeeping."""
+        if self._pending is None:
+            return 0
+        toks_dev, active = self._pending
+        self._pending = None
+        return self._apply_sampled(np.asarray(toks_dev), active)
+
+    def decode_step_all(self, inject_fault: bool = False) -> int:
+        """One engine iteration over all active slots. Returns number of
+        tokens produced. ``inject_fault`` exercises the §6.2 token-
+        recomputation path: the step is rolled back and re-executed (on
+        the undonated safe path, which keeps the pre-step cache alive)."""
+        if self.active == 0:
+            return 0
+        if not inject_fault:
+            self.decode_launch()
+            return self.decode_complete()
+        tokens, positions, temps, active = self._gather_step_inputs()
+        # save rollback state (previous iteration boundary); donation is
+        # off so the pre-step cache handle stays valid for re-execution
+        self._rollback = {"cache": self.cache,
+                          "slots": [dataclasses.replace(s)
+                                    for s in self.slots]}
+        self.backend.decode_sample(self.cache, tokens, positions, temps,
+                                   self.steps, donate=False)
+        # §6.2: transient network error detected → all DP groups roll
+        # back to the previous iteration and re-execute.
+        self.cache = self._rollback["cache"]
+        self.slots = self._rollback["slots"]
+        toks, new_cache = self.backend.decode_sample(
+            self.cache, tokens, positions, temps, self.steps,
+            donate=False)
+        self.cache = new_cache
+        return self._apply_sampled(np.asarray(toks), active)
 
     def _finish(self, slot_id: int) -> None:
         s = self.slots[slot_id]

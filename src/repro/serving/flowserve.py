@@ -46,8 +46,10 @@ class FlowServeEngine:
             model = self.model
 
             def backend_factory(dp_id: int) -> ExecutionBackend:
+                # per-group sampling seed: DP groups step in lockstep, so
+                # a shared seed would draw identical Gumbel noise
                 return JAXBackend(model, params, max_len=max_len,
-                                  memory=memory)
+                                  memory=memory, seed=seed * 1000 + dp_id)
         else:
             self.ctx = ctx
         self.tokenizer = ByteTokenizer()
@@ -76,7 +78,15 @@ class FlowServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit what fits, decode everywhere."""
+        """One engine iteration: admit what fits, decode everywhere.
+
+        Decode uses the zero-sync fast path in two phases: every DP
+        group's jitted decode+sample program is *launched* first (async
+        dispatch — the host does not block), then the ``[B]`` int32
+        token vectors are collected. Each group's device compute thereby
+        overlaps the others' host-side dispatch and bookkeeping instead
+        of serializing on a per-group ``[B, V]`` logits sync.
+        """
         still_waiting: List[Request] = []
         for req in self.waiting:
             dp_id = self.shell.dispatch(req)
@@ -89,9 +99,11 @@ class FlowServeEngine:
             else:
                 still_waiting.append(req)
         self.waiting = still_waiting
+        for dp in self.dps:
+            dp.decode_launch()
         produced = 0
         for dp in self.dps:
-            produced += dp.decode_step_all()
+            produced += dp.decode_complete()
         return produced
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:

@@ -1,0 +1,69 @@
+"""On-device token sampling for the zero-sync decode fast path.
+
+The paper's decode loop never ships logits back to the host: sampling
+runs on-die inside the same graph as the forward, and only the chosen
+token ids (``[B]`` int32 — 4 bytes per slot) cross the device→host
+boundary per iteration. :func:`sample_tokens` is the jit-fusable batch
+sampler the :class:`~repro.serving.backend.JAXBackend` folds into its
+donated decode step; :func:`sample_host` is the numpy oracle used for
+admit-time sampling from prefill logits and for parity tests
+(greedy exact-match; stochastic paths checked at distribution level).
+
+Semantics (per slot ``i``):
+
+* ``temperatures[i] <= 0``  → greedy ``argmax``.
+* ``temperatures[i] > 0``   → Gumbel-max categorical over
+  ``logits / temperature``, optionally truncated to the ``top_k``
+  highest logits (``top_k=0`` disables truncation).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def top_k_mask(logits: jax.Array, top_k: int) -> jax.Array:
+    """Mask logits below the k-th largest per row to -inf. [.., V]."""
+    if top_k <= 0 or top_k >= logits.shape[-1]:
+        return logits
+    kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, NEG_INF)
+
+
+def sample_tokens(logits: jax.Array, temperatures: jax.Array,
+                  key: jax.Array, *, top_k: int = 0) -> jax.Array:
+    """logits [B, V] f32, temperatures [B] f32 → token ids [B] int32.
+
+    Pure and jit-friendly; meant to be fused into the decode step so the
+    ``[B, V]`` logits never leave the device.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None]
+    g = jax.random.gumbel(key, logits.shape, jnp.float32)
+    stoch = jnp.argmax(top_k_mask(logits, top_k) / t + g,
+                       axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures <= 0.0, greedy, stoch)
+
+
+def sample_host(logits: np.ndarray, temperature: float,
+                rng: Optional[np.random.Generator] = None,
+                *, top_k: int = 0) -> int:
+    """Numpy oracle with the same semantics as :func:`sample_tokens`
+    for one row (distribution-level equivalent on the stochastic path)."""
+    logits = np.asarray(logits, np.float32)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    if rng is None:
+        rng = np.random.default_rng(0)
+    masked = logits.copy()
+    if 0 < top_k < logits.shape[-1]:
+        kth = np.sort(logits)[-top_k]
+        masked[masked < kth] = NEG_INF
+    g = rng.gumbel(size=masked.shape)
+    return int(np.argmax(masked / max(temperature, 1e-6) + g))

@@ -19,7 +19,9 @@ each forward would have taken.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -27,7 +29,8 @@ from repro.configs.base import MOE, ModelConfig
 from repro.core.transformerless import PartitionPlan
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 from repro.serving.backend import ExecutionBackend
-from repro.xccl.topology import (SuperPod, best_transfer_time,
+from repro.xccl.topology import (SuperPod, a2e_latency_model,
+                                 best_transfer_time,
                                  dispatch_latency_model)
 
 # Achievable fractions of peak (decode batches are small and latency
@@ -70,7 +73,15 @@ class FabricModel:
 
 class SuperPodCostModel:
     """Prices prefill forwards and decode iterations for one config +
-    partition plan at SuperPod scale."""
+    partition plan at SuperPod scale.
+
+    The hand-calibrated constants (``DECODE_MFU``, ``HBM_EFF``,
+    ``INT8_MOE_SPEEDUP``, ``ITER_OVERHEAD``) are instance attributes so
+    :meth:`from_calibration` can replace them — and the dispatch/combine
+    latency curve — with numbers measured by the repo's own benchmarks
+    (``BENCH_dispatch_combine.json`` / ``BENCH_decode_iteration.json``),
+    keeping the simulator tracking the real kernels as they improve.
+    """
 
     def __init__(self, cfg: ModelConfig, plan: PartitionPlan,
                  fabric: Optional[FabricModel] = None,
@@ -79,7 +90,101 @@ class SuperPodCostModel:
         self.plan = plan
         self.fabric = fabric or FabricModel()
         self.mean_context = mean_context
+        self.decode_mfu = DECODE_MFU
+        self.prefill_mfu = PREFILL_MFU
+        self.hbm_eff = HBM_EFF
+        self.int8_moe_speedup = INT8_MOE_SPEEDUP
+        self.iter_overhead = ITER_OVERHEAD
+        # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
+        # t_comb_s)] interpolated in decode_iter_time when present
+        self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
         self._derive()
+
+    # ------------------------------------------------------------------
+    # calibration from benchmark JSON (ROADMAP: "calibrate cost stubs
+    # against real kernel benches")
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_calibration(cls, cfg: ModelConfig, plan: PartitionPlan,
+                         paths: Union[str, Sequence[str]],
+                         fabric: Optional[FabricModel] = None,
+                         mean_context: int = 4096,
+                         **const_overrides: float) -> "SuperPodCostModel":
+        """Build a cost model whose kernel times come from measured
+        benchmark emissions (``benchmarks.common.write_json`` files).
+
+        Recognized rows:
+
+        * ``fig6/dispatch/bpd<N>`` — dispatch µs (``us_per_call``) and
+          combine µs (``combine_us=`` in ``derived``) at batch-per-die
+          ``N`` → replaces ``dispatch_latency_model`` by interpolation.
+        * ``decode/iter_overhead`` — measured host-side per-iteration
+          overhead in µs → replaces ``ITER_OVERHEAD``.
+
+        Extra keyword args override constants directly
+        (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
+        """
+        self = cls(cfg, plan, fabric, mean_context)
+        if isinstance(paths, (str, os.PathLike)):
+            paths = [paths]
+        rows: List[Dict[str, Any]] = []
+        for p in paths:
+            with open(p) as f:
+                rows.extend(json.load(f).get("rows", []))
+        comm: List[Tuple[float, float, float]] = []
+        for row in rows:
+            name = row.get("name", "")
+            if name.startswith("fig6/dispatch/bpd"):
+                bpd = float(name.rsplit("bpd", 1)[1])
+                t_disp = float(row["us_per_call"]) * 1e-6
+                t_comb = t_disp
+                for part in str(row.get("derived", "")).split():
+                    if part.startswith("combine_us="):
+                        t_comb = float(part.split("=", 1)[1]) * 1e-6
+                comm.append((bpd, t_disp, t_comb))
+            elif name == "decode/iter_overhead":
+                self.iter_overhead = float(row["us_per_call"]) * 1e-6
+        if comm:
+            self._calib_comm = sorted(comm)
+        for k, v in const_overrides.items():
+            if not hasattr(self, k):
+                raise AttributeError(f"unknown cost constant {k!r}")
+            setattr(self, k, float(v))
+        return self
+
+    def _comm_times(self, batch_per_die: float) -> Tuple[float, float]:
+        """(dispatch, combine) seconds at this batch — measured curve if
+        calibrated, analytic XCCL model otherwise.
+
+        The 288/480 plans are the §3.3 MoE-Attention disaggregated
+        deployment, so the analytic path prices A2E/E2A with the
+        trampoline-forward model (metadata O(n_attn + n_expert)), not
+        the colocated EP-scatter ``dispatch_latency_model`` (metadata
+        O(E) — the scalar-throughput wall the trampoline exists to
+        avoid). The colocated model is kept for plans with no separate
+        attention dies."""
+        e = self.cfg.moe
+        if self._calib_comm:
+            xs = [c[0] for c in self._calib_comm]
+            t_disp = float(np.interp(batch_per_die, xs,
+                                     [c[1] for c in self._calib_comm]))
+            t_comb = float(np.interp(batch_per_die, xs,
+                                     [c[2] for c in self._calib_comm]))
+            return t_disp, t_comb
+        plan = self.plan
+        if plan.n_attention > 0 and plan.dp_groups_per_domain > 0:
+            t_a2e = a2e_latency_model(plan.dp_groups_per_domain,
+                                      plan.n_expert, batch_per_die,
+                                      self.cfg.d_model, e.top_k)
+            # E2A reverses the two stages; bf16 payload back ≈ 1.15×
+            return t_a2e, t_a2e * 1.15
+        t_disp = dispatch_latency_model(
+            batch_per_die, self.cfg.d_model, plan.n_expert, e.top_k,
+            quantized=True)
+        t_comb = dispatch_latency_model(
+            batch_per_die, self.cfg.d_model, plan.n_expert, e.top_k,
+            quantized=False)
+        return t_disp, t_comb
 
     # -- per-layer analytic terms (mirrors plan_partition's FLOP model) --
     def _derive(self) -> None:
@@ -129,7 +234,7 @@ class SuperPodCostModel:
                      slowdown: float = 1.0) -> float:
         """Chunked prefill of one prompt over a TP group of dies."""
         flops = 2.0 * self.active_params * max(n_tokens, 1)
-        t = flops / (n_dies * PEAK_FLOPS * PREFILL_MFU)
+        t = flops / (n_dies * PEAK_FLOPS * self.prefill_mfu)
         return (t + 2e-3) * slowdown
 
     def kv_transfer_time(self, n_tokens: int) -> float:
@@ -140,9 +245,55 @@ class SuperPodCostModel:
         return self.fabric.transfer_time(int(total))
 
     # ------------------------------------------------------------------
+    def _attn_time(self, b: float, ctx: float,
+                   weight_amort: float = 1.0) -> float:
+        """Attention term (per attention die, per layer): weight read +
+        KV sweep vs projection/attend FLOPs — roofline max.
+
+        ``weight_amort`` > 1 spreads the weight read across that many
+        microbatches (the parameters stream from HBM once per layer; the
+        per-microbatch KV sweep and FLOPs still scale with ``b``)."""
+        attn_comp = b * (2.0 * self.attn_params
+                         + ctx * self.attn_flops_per_ctx_tok) \
+            / (PEAK_FLOPS * self.decode_mfu)
+        attn_mem = (self.attn_params * 2.0 / weight_amort
+                    + b * ctx * self.kv_bytes_per_token) \
+            / (HBM_BW * self.hbm_eff)
+        return max(attn_comp, attn_mem)
+
+    def _moe_time(self, b: float, moe_imbalance: float,
+                  weight_amort: float = 1.0) -> float:
+        e = self.cfg.moe
+        global_tokens = b * max(self.plan.n_attention, 1)
+        tokens_per_exp_die = global_tokens * e.top_k / self.plan.n_expert
+        moe_comp = (tokens_per_exp_die * moe_imbalance
+                    * self.moe_flops_per_token / max(e.top_k, 1)) \
+            / (PEAK_FLOPS * self.decode_mfu * self.int8_moe_speedup)
+        moe_mem = self.moe_weight_bytes_per_die / weight_amort \
+            / (HBM_BW * self.hbm_eff)
+        return max(moe_comp, moe_mem)
+
+    @staticmethod
+    def _pingpong_layer_time(mb: int, t_attn: float, t_disp: float,
+                             t_moe: float, t_comb: float) -> float:
+        """§4.4 ping-pong: ``mb`` microbatches alternate between the
+        compute streams (attention die, expert die) and the
+        communication engines (dispatch/combine run on SDMA/MTE streams
+        concurrently with compute, the §5.2 persistent-kernel model).
+        Compute runs back to back — each microbatch's dispatch+combine
+        hides under the other microbatches' compute — and only the
+        communication that exceeds that shadow stays exposed (the
+        fill/drain of the last microbatch). Inputs are per-microbatch
+        stage times; returns the layer time."""
+        compute_mb = t_attn + t_moe
+        comm_mb = t_disp + t_comb
+        exposed = max(0.0, comm_mb - (mb - 1) * compute_mb)
+        return mb * compute_mb + exposed
+
     def decode_iter_time(self, batch_per_die: int, mean_context: int = 0,
                          moe_imbalance: float = 1.0,
-                         slowdown: float = 1.0) -> float:
+                         slowdown: float = 1.0,
+                         microbatches: Optional[int] = None) -> float:
         """One decode iteration of a DP group (batch ``batch_per_die``
         per attention die), with the pod's other DP domains loading the
         shared expert dies symmetrically.
@@ -150,58 +301,51 @@ class SuperPodCostModel:
         moe_imbalance ≥ 1: hottest-expert-die load over the mean (from
         live expert counts + the active EPLB map); the hottest die sets
         the all-to-all critical path.
+
+        ``microbatches`` overrides the plan's microbatch count: ≥ 2
+        prices the §4.4 ping-pong overlap (per-microbatch stage times at
+        ``b / mb``, dispatch/combine hidden under the other microbatch's
+        expert GMM); 1 prices the serial attn→dispatch→MoE→combine
+        chain.
         """
         if batch_per_die <= 0:
-            return ITER_OVERHEAD
+            return self.iter_overhead
         plan = self.plan
         ctx = mean_context or self.mean_context
         b = batch_per_die
+        mb = plan.microbatches if microbatches is None else microbatches
+        mb = max(int(mb), 1)
 
-        # attention term (per attention die, per layer): weight read +
-        # KV sweep vs projection/attend FLOPs — roofline max
-        attn_comp = b * (2.0 * self.attn_params
-                         + ctx * self.attn_flops_per_ctx_tok) \
-            / (PEAK_FLOPS * DECODE_MFU)
-        attn_mem = (self.attn_params * 2.0
-                    + b * ctx * self.kv_bytes_per_token) \
-            / (HBM_BW * HBM_EFF)
-        t_attn = max(attn_comp, attn_mem)
+        t_attn = self._attn_time(b, ctx)
 
-        t_moe = 0.0
-        t_comm = 0.0
         e = self.cfg.moe
         if e.enabled and plan.n_expert > 0:
-            # every DP group's tokens land on the shared expert dies
-            global_tokens = b * max(plan.n_attention, 1)
-            tokens_per_exp_die = global_tokens * e.top_k / plan.n_expert
-            moe_comp = (tokens_per_exp_die * moe_imbalance
-                        * self.moe_flops_per_token / max(e.top_k, 1)) \
-                / (PEAK_FLOPS * DECODE_MFU * INT8_MOE_SPEEDUP)
-            moe_mem = self.moe_weight_bytes_per_die / (HBM_BW * HBM_EFF)
-            t_moe = max(moe_comp, moe_mem)
-            t_disp = dispatch_latency_model(
-                b, self.cfg.d_model, plan.n_expert, e.top_k,
-                quantized=True)
-            t_comb = dispatch_latency_model(
-                b, self.cfg.d_model, plan.n_expert, e.top_k,
-                quantized=False)
-            t_comm = t_disp + t_comb
-
-        if plan.microbatches >= 2:
-            # §4.4: two microbatches ping-pong so comm hides under compute
-            t_layer_moe = max(t_attn + t_moe, t_comm) + 2e-6
+            if mb >= 2:
+                # per-microbatch stage times at b/mb; the fixed metadata
+                # fan-out of dispatch/combine is paid per microbatch
+                b_mb = b / mb
+                t_disp, t_comb = self._comm_times(b_mb)
+                t_layer_moe = self._pingpong_layer_time(
+                    mb, self._attn_time(b_mb, ctx, weight_amort=mb),
+                    t_disp,
+                    self._moe_time(b_mb, moe_imbalance, weight_amort=mb),
+                    t_comb) + 2e-6
+            else:
+                t_disp, t_comb = self._comm_times(b)
+                t_layer_moe = (t_attn + self._moe_time(b, moe_imbalance)
+                               + t_disp + t_comb)
         else:
-            t_layer_moe = t_attn + t_moe + t_comm
+            t_layer_moe = t_attn
 
         t_ffn = max(b * self.dense_ffn_flops_per_token
-                    / (PEAK_FLOPS * DECODE_MFU),
+                    / (PEAK_FLOPS * self.decode_mfu),
                     3.0 * self.cfg.d_model * self.cfg.d_ff * 2.0
-                    / (HBM_BW * HBM_EFF))
+                    / (HBM_BW * self.hbm_eff))
         t_dense = t_attn + t_ffn
 
         t_iter = (self.n_moe_layers * t_layer_moe
                   + self.n_dense_layers * t_dense
-                  + ITER_OVERHEAD)
+                  + self.iter_overhead)
         return t_iter * slowdown
 
 
@@ -239,13 +383,40 @@ class CostModelBackend(ExecutionBackend):
     def write_slot(self, cache, cache1, slot: int):
         return cache
 
+    def _next_tokens(self, tokens: np.ndarray,
+                     positions: np.ndarray) -> np.ndarray:
+        v = self.vocab_size
+        return ((tokens[:, 0].astype(np.int64) * 5
+                 + positions.astype(np.int64) * 3 + 11) % v)
+
     def decode(self, cache, tokens: np.ndarray,
                positions: np.ndarray) -> Tuple[np.ndarray, dict]:
         self.n_decode_steps += 1
-        v = self.vocab_size
         b = tokens.shape[0]
-        nxt = (tokens[:, 0].astype(np.int64) * 5
-               + positions.astype(np.int64) * 3 + 11) % v
-        logits = np.zeros((b, v), np.float32)
+        nxt = self._next_tokens(tokens, positions)
+        logits = np.zeros((b, self.vocab_size), np.float32)
         logits[np.arange(b), nxt] = 1.0
         return logits, cache
+
+    def decode_sample(self, cache, tokens: np.ndarray,
+                      positions: np.ndarray, temperatures: np.ndarray,
+                      step: int, *, donate: bool = True):
+        """Fast-path contract: [B] int32 tokens, never a logits plane.
+
+        Greedy slots take the deterministic pseudo-argmax; sampled slots
+        draw Gumbel noise from a generator seeded purely by
+        ``(dp_id, step)`` so simulated traces stay byte-reproducible.
+        """
+        self.n_decode_steps += 1
+        nxt = self._next_tokens(tokens, positions).astype(np.int32)
+        temps = np.asarray(temperatures, np.float32)
+        if np.any(temps > 0):
+            rng = np.random.default_rng((self.dp_id, int(step)))
+            g = rng.gumbel(size=(temps.shape[0], self.vocab_size))
+            onehot = np.zeros_like(g)
+            onehot[np.arange(len(nxt)), nxt] = 1.0
+            stoch = np.argmax(
+                onehot / np.maximum(temps, 1e-6)[:, None] + g,
+                axis=-1).astype(np.int32)
+            nxt = np.where(temps > 0, stoch, nxt)
+        return nxt, cache

@@ -18,6 +18,12 @@ Executable (shard_map) implementations of the paper's all-to-all layer:
 The models' MoE layer (models/ffn.py) uses the same capacity machinery;
 these standalone ops are used by core/moe_attn_disagg.py, the serving
 engine, tests, and benchmarks.
+
+The packing stages route through ``kernels/route_pack`` — capacity rank
++ INT8 quantize + bucket scatter fused into one streaming pass (Pallas
+off-CPU, a bit-identical jnp oracle on CPU). ``capacity_rank`` /
+``scatter_to_buckets`` below remain the reference semantics the kernel
+is validated against (tests/test_properties.py).
 """
 from __future__ import annotations
 
@@ -28,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.route_pack.ops import fused_route_pack
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +64,7 @@ def scatter_to_buckets(values, dest, rank, keep, n_dest, capacity, fill=0):
 def quantize_tokens(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Token-wise INT8: x [..., d] → (int8 values, f32 scale per token)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.maximum(amax, 1e-8) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
     return q.astype(jnp.int8), scale[..., 0]
 
@@ -78,25 +86,15 @@ class DispatchResult(NamedTuple):
 
 
 def _pack_stage1(xf, flat_idx, ep_size, e_local, cap_s, quantize):
-    """Bucket assignments by destination EP rank."""
-    n = flat_idx.shape[0]
+    """Bucket assignments by destination EP rank — one fused route-pack
+    pass (capacity rank + INT8 quantize + bucket scatter; the Pallas
+    kernel off-CPU, its bit-identical jnp oracle on CPU)."""
     dest_rank = flat_idx // e_local
-    rank1, keep1 = capacity_rank(dest_rank, ep_size, cap_s)
-    tok_of = jnp.arange(n)  # caller pre-gathers token payloads per assign
-    payload = xf
-    if quantize:
-        qv, sc = quantize_tokens(payload)
-        send_tok = scatter_to_buckets(qv, dest_rank, rank1, keep1, ep_size,
-                                      cap_s)
-        send_sc = scatter_to_buckets(sc, dest_rank, rank1, keep1, ep_size,
-                                     cap_s)
-    else:
-        send_tok = scatter_to_buckets(payload, dest_rank, rank1, keep1,
-                                      ep_size, cap_s)
-        send_sc = None
-    send_eid = scatter_to_buckets(flat_idx % e_local, dest_rank, rank1,
-                                  keep1, ep_size, cap_s, fill=-1)
-    return send_tok, send_sc, send_eid, dest_rank, rank1, keep1
+    pack = fused_route_pack(xf, dest_rank, eid=flat_idx % e_local,
+                            n_dest=ep_size, capacity=cap_s,
+                            quantize=quantize)
+    return (pack.buckets, pack.scales, pack.eids, dest_rank, pack.rank,
+            pack.keep)
 
 
 def dispatch_local(x_assign, flat_idx, *, ep_axis: str, ep_size: int,
@@ -125,11 +123,9 @@ def dispatch_local(x_assign, flat_idx, *, ep_axis: str, ep_size: int,
     flat_eid = recv_eid.reshape(-1)
     valid = flat_eid >= 0
     cap_e = max(int(flat.shape[0] / e_local * capacity_factor), 4)
-    rank2, keep2 = capacity_rank(jnp.where(valid, flat_eid, 0), e_local,
-                                 cap_e)
-    keep2 = keep2 & valid
-    buckets = scatter_to_buckets(flat, jnp.where(valid, flat_eid, 0),
-                                 rank2, keep2, e_local, cap_e)
+    pack2 = fused_route_pack(flat, jnp.where(valid, flat_eid, 0),
+                             valid=valid, n_dest=e_local, capacity=cap_e)
+    buckets, rank2, keep2 = pack2.buckets, pack2.rank, pack2.keep
     state = (flat_eid, rank2, keep2, dest_rank, rank1, keep1, cap_s, cap_e)
     return buckets, state
 

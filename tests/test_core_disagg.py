@@ -48,8 +48,11 @@ def test_pd_disagg_matches_colocated():
     pd.close()
 
 
+@pytest.mark.parametrize("microbatches", [1, 2])
 @pytest.mark.parametrize("arch", ["deepseek-moe-16b", "llama4-maverick-400b-a17b"])
-def test_moe_attention_disagg_equivalence(arch, make_model):
+def test_moe_attention_disagg_equivalence(arch, microbatches, make_model):
+    """Disagg split (and its §4.4 ping-pong micro-batching) must match
+    the monolithic decode step."""
     cfg, m, params = make_model(arch)
     B = 2
     key = jax.random.PRNGKey(5)
@@ -64,11 +67,37 @@ def test_moe_attention_disagg_equivalence(arch, make_model):
     pos = jnp.full((B,), 8, jnp.int32)
     tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
     ref, _ = m.decode_step(params, cache, tok, pos)
-    dis = DisaggregatedMoEAttention(m, params)
+    dis = DisaggregatedMoEAttention(m, params, microbatches=microbatches)
     got, _ = dis.decode_step(cache, tok, pos)
     err = (float(jnp.max(jnp.abs(ref - got)))
            / max(float(jnp.max(jnp.abs(ref))), 1e-6))
-    assert err < 0.05, f"{arch}: disagg mismatch {err}"
+    assert err < 0.05, f"{arch} mb={microbatches}: disagg mismatch {err}"
+
+
+def test_decode_microbatch_pingpong_matches_unsplit(make_model):
+    """models/ffn.py gather-path decode with decode_microbatches=2 must
+    match the unsplit decode step (generous smoke capacity ⇒ no drops)."""
+    from repro.models.mesh_ctx import make_smoke_ctx
+    from repro.models.transformer import build_model
+    cfg, m, params = make_model("deepseek-moe-16b")
+    B = 4
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, 6), 0,
+                              cfg.vocab_size)
+    logits_p, cache = m.prefill(params, toks)
+
+    def pad(c, s):
+        return jnp.pad(c, [(0, st - ct)
+                           for ct, st in zip(c.shape, s.shape)])
+    cache = jax.tree.map(pad, cache,
+                         jax.tree.map(lambda s: s, m.cache_spec(B, 16)))
+    pos = jnp.full((B,), 6, jnp.int32)
+    tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    ref, _ = m.decode_step(params, cache, tok, pos)
+    m2 = build_model(cfg, make_smoke_ctx(decode_microbatches=2))
+    got, _ = m2.decode_step(params, cache, tok, pos)
+    err = (float(jnp.max(jnp.abs(ref - got)))
+           / max(float(jnp.max(jnp.abs(ref))), 1e-6))
+    assert err < 0.02, f"mb=2 decode mismatch {err}"
 
 
 def test_partition_planner_matches_paper():

@@ -140,6 +140,64 @@ def test_router_weights_normalized(t, k, e, seed):
 
 
 # ---------------------------------------------------------------------------
+# Fused route-pack vs the reference capacity_rank/scatter path
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    k=st.integers(1, 4),
+    e=st.integers(1, 12),
+    cap=st.integers(1, 24),
+    d=st.integers(1, 48),
+    quantize=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_route_pack_matches_reference_chain(t, k, e, cap, d, quantize,
+                                            seed):
+    """The fused route-pack kernel (interpret mode) must be bit-identical
+    to the live reference path — ``capacity_rank`` + ``quantize_tokens``
+    + ``scatter_to_buckets`` from ``xccl.routing`` — for buckets, keep
+    masks, ranks and combine weights."""
+    import jax
+    from repro.kernels.route_pack.ops import fused_route_pack
+    from repro.xccl.routing import (capacity_rank, quantize_tokens,
+                                    scatter_to_buckets)
+    rng = np.random.default_rng(seed)
+    n = t * k
+    x = jnp.asarray(rng.standard_normal((t, d)) * 3, jnp.float32)
+    dest = jnp.asarray(rng.integers(0, e, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) > 0.25)
+    w = jnp.asarray(rng.random(n), jnp.float32)     # combine weights
+
+    got = fused_route_pack(x, dest, valid, k=k, n_dest=e, capacity=cap,
+                           quantize=quantize, use_pallas=True,
+                           interpret=True)
+
+    # live reference chain (exactly what routing.py / ffn.py used to do)
+    payload = x[jnp.arange(n) // k]
+    rank, keep = capacity_rank(dest, e, cap)
+    keep = keep & valid
+    if quantize:
+        qv, sc = quantize_tokens(payload)
+        ref_buckets = scatter_to_buckets(qv, dest, rank, keep, e, cap)
+        ref_scales = scatter_to_buckets(sc, dest, rank, keep, e, cap)
+        np.testing.assert_array_equal(np.asarray(got.scales),
+                                      np.asarray(ref_scales))
+    else:
+        ref_buckets = scatter_to_buckets(payload, dest, rank, keep, e,
+                                         cap)
+    np.testing.assert_array_equal(np.asarray(got.buckets),
+                                  np.asarray(ref_buckets))
+    np.testing.assert_array_equal(np.asarray(got.rank), np.asarray(rank))
+    np.testing.assert_array_equal(np.asarray(got.keep), np.asarray(keep))
+    # combine weights ride outside the packed payload: masking by the
+    # fused keep must equal masking by the reference keep
+    np.testing.assert_array_equal(
+        np.asarray(jnp.where(got.keep, w, 0.0)),
+        np.asarray(jnp.where(keep, w, 0.0)))
+
+
+# ---------------------------------------------------------------------------
 # XCCL ring-buffer protocol (§3.1)
 # ---------------------------------------------------------------------------
 @settings(max_examples=30, deadline=None)
