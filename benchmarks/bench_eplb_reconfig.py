@@ -1,0 +1,125 @@
+"""EPLB live-reconfiguration study (§4.5 step 3) — migration cost.
+
+Drives the full collect → select → place → migrate pipeline over two
+traffic intervals of a skewed (Fig. 11a-style) workload whose hot
+experts DRIFT between intervals, per layer, and measures what a live
+reconfiguration actually moves:
+
+  * per-layer migration: how many replica weight loads the second EPLB
+    pass requires versus the placement the first pass installed,
+  * migration bytes (int8 expert weights of the paper's DeepSeek plan)
+    and the UB-fabric time of the phased prefetch + shadow-load,
+  * steps-to-converge of the :class:`ExpertReconfigurator` state
+    machine (begin → prefetch → shadow-load → swap), asserting the swap
+    lands exactly once and only after every phase was paid.
+
+``--smoke`` shrinks layers/experts for CI; ``--json PATH`` (or the
+default ``BENCH_eplb_reconfig.json``) dumps the rows next to the decode
+bench JSON so the simulator's calibration loop can consume them.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_eplb_reconfig [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, header, write_json
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.serving.eplb import (ExpertReconfigurator, ReconfigState,
+                                build_expert_map, migration_plan)
+from repro.sim.fabric import FabricModel, SuperPodCostModel
+
+ARCH = "deepseek-v3-671b"
+TOTAL_DIES = 768
+
+
+def drifting_counts(rng, n_layers: int, n_experts: int, n_slices: int,
+                    drift: float) -> np.ndarray:
+    """[L, E, T] skewed counts; ``drift`` ∈ [0, 1] reshuffles that
+    fraction of each layer's popularity between calls via the shared
+    rng stream (traffic shift between EPLB intervals)."""
+    ranks = np.arange(1, n_experts + 1, dtype=np.float64)
+    base = ranks ** -1.2
+    out = np.empty((n_layers, n_experts, n_slices))
+    for li in range(n_layers):
+        p = base.copy()
+        rng.shuffle(p)
+        n_drift = int(drift * n_experts)
+        if n_drift:
+            sel = rng.choice(n_experts, n_drift, replace=False)
+            p[sel] = p[rng.permutation(sel)]
+        noise = rng.lognormal(0.0, 0.25, size=(n_experts, n_slices))
+        c = p[:, None] * noise
+        out[li] = c / c.sum(0, keepdims=True) * 100_000
+    return out.astype(np.int64)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small layer/expert counts for CI")
+    ap.add_argument("--json", default="BENCH_eplb_reconfig.json")
+    ap.add_argument("--seed", type=int, default=7)
+    args, _ = ap.parse_known_args(argv)
+
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, TOTAL_DIES)
+    cost = SuperPodCostModel(cfg, plan, FabricModel())
+    n_layers = 4 if args.smoke else 16
+    n_experts = 64 if args.smoke else cfg.moe.num_experts
+    n_npus = min(plan.n_expert, n_experts + n_experts // 8)
+    budget = max(1, n_npus - n_experts) if n_npus > n_experts \
+        else n_experts // 8
+    rng = np.random.default_rng(args.seed)
+
+    def eplb_pass(counts):
+        return {li: build_expert_map(counts[li], n_experts, budget,
+                                     n_npus, slots_per_npu=1)
+                for li in range(n_layers)}
+
+    maps1 = eplb_pass(drifting_counts(rng, n_layers, n_experts, 8, 0.0))
+    maps2 = eplb_pass(drifting_counts(rng, n_layers, n_experts, 8, 0.5))
+
+    # cold start: first pass loads every redundant replica
+    cold = migration_plan({}, maps1, cost.expert_weight_bytes)
+    emit("eplb_reconfig/cold/replica_loads", 0.0,
+         f"n={cold.n_replica_loads} bytes={cold.total_bytes}")
+
+    # live drift: only CHANGED (layer, expert, npu) replicas move
+    plan2 = migration_plan(maps1, maps2, cost.expert_weight_bytes)
+    frac = plan2.n_replica_loads / max(cold.n_replica_loads, 1)
+    emit("eplb_reconfig/drift/replica_loads", 0.0,
+         f"n={plan2.n_replica_loads} ({frac:.0%} of cold)")
+    emit("eplb_reconfig/drift/migration_bytes", 0.0,
+         f"bytes={plan2.total_bytes} "
+         f"hottest_npu_loads={plan2.hottest_npu_loads}")
+    t_phase = cost.reconfig_transfer_time(plan2.hottest_npu_loads)
+    emit("eplb_reconfig/drift/fabric_us", 2.0 * t_phase * 1e6,
+         "prefetch+shadow_load on UB, hottest-NPU critical path")
+
+    # phased state machine: swap must land exactly once, after 3 steps
+    swaps = []
+    rc = ExpertReconfigurator(apply_fn=lambda m: swaps.append(len(m)),
+                              bytes_per_replica=cost.expert_weight_bytes)
+    rc.begin(maps1)
+    steps = 0
+    while rc.state != ReconfigState.ENABLED:
+        rc.step()
+        steps += 1
+    assert steps == rc.steps_to_converge and swaps == [n_layers]
+    rc.begin(maps2)
+    while rc.step() != ReconfigState.ENABLED:
+        pass
+    emit("eplb_reconfig/steps_to_converge", 0.0,
+         f"steps={steps} swaps={len(swaps)} "
+         f"migrated_bytes_total={rc.total_migrated_bytes}")
+
+    write_json("eplb_reconfig", args.json)
+
+
+if __name__ == "__main__":
+    header()
+    main()

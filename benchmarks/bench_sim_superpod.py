@@ -15,11 +15,20 @@ CloudMatrix384) and emits:
 ``--smoke`` shrinks the workload for CI; ``--json PATH`` dumps the
 deterministic metrics JSON (same seed ⇒ byte-identical file).
 
+Calibration auto-load: when measured benchmark emissions
+(``BENCH_dispatch_combine.json`` / ``BENCH_decode_iteration.json``,
+written by the kernel benches' ``--json``) are present in the working
+directory, the cost model is built with
+``SuperPodCostModel.from_calibration`` so the whole sweep — the TPOT
+curve AND the end-to-end serving runs — prices iterations from measured
+kernel times instead of the analytic stubs.
+
 Run: ``PYTHONPATH=src python -m benchmarks.bench_sim_superpod [--smoke]``
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 from benchmarks.common import emit, header
@@ -31,10 +40,15 @@ from repro.sim import (FaultPlan, SimConfig, SuperPodCostModel,
 ARCH = "deepseek-v3-671b"
 TOTAL_DIES = 768        # CloudMatrix384: 48 servers × 8 chips × 2 dies
 BATCH_SWEEP = (8, 16, 32, 64, 96, 128)
+CALIBRATION_FILES = ("BENCH_dispatch_combine.json",
+                     "BENCH_decode_iteration.json")
+
+_CALIB: tuple = ()
 
 
 def _mk(sim_kw: dict, wl_kw: dict, faults=None) -> SuperPodSim:
     return SuperPodSim(SimConfig(arch=ARCH, total_dies=TOTAL_DIES,
+                                 calibration_paths=_CALIB or None,
                                  **sim_kw),
                        WorkloadConfig(**wl_kw), faults)
 
@@ -54,8 +68,16 @@ def main(argv=None) -> None:
          f"attn={plan.n_attention} expert={plan.n_expert} "
          f"domains={plan.n_dp_domains} ubatch={plan.microbatches}")
 
+    # -- 0. auto-load measured calibration when the files are present ---
+    global _CALIB
+    _CALIB = tuple(p for p in CALIBRATION_FILES if os.path.exists(p))
+    emit("sim/calibration", 0.0,
+         f"measured:{','.join(_CALIB)}" if _CALIB
+         else "analytic (no BENCH_*.json found)")
+
     # -- 1. cost-model TPOT-vs-batch curve (steady state, full pod) -----
-    cost = SuperPodCostModel(cfg, plan)
+    cost = (SuperPodCostModel.from_calibration(cfg, plan, list(_CALIB))
+            if _CALIB else SuperPodCostModel(cfg, plan))
     for b in BATCH_SWEEP:
         t = cost.decode_iter_time(b, mean_context=1024)
         emit(f"sim/tpot_curve/b{b}", t * 1e6,

@@ -15,6 +15,7 @@ MODULES = [
     "bench_dispatch_combine",   # Fig. 6
     "bench_a2e_e2a",            # Sec. 3.3
     "bench_eplb",               # Fig. 11
+    "bench_eplb_reconfig",      # Sec. 4.5 step 3 (live migration cost)
     "bench_decode_iteration",   # Fig. 20 + Sec. 7.1
     "bench_production",         # Sec. 7.2
     "bench_mtp",                # Sec. 4.6

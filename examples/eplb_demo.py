@@ -40,13 +40,20 @@ def main() -> None:
     print(f"simulated layer load: {base:.0f} -> "
           f"{simulated_layer_load(layer0, reps):.0f}")
 
-    # steps 3+4: four-phase reconfig + rotation mapping
+    # steps 3+4: phased reconfig (prefetch → shadow-load → swap) +
+    # rotation mapping
     em = build_expert_map(layer0, E, budget=8, n_npus=NPUS)
-    rc = ExpertReconfigurator()
-    rc.begin(em, placement=None)
+    swapped = []
+    rc = ExpertReconfigurator(apply_fn=swapped.append,
+                              bytes_per_replica=1)
+    plan = rc.begin(em)
+    print(f"migration: {plan.n_replica_loads} replica loads "
+          f"(hottest NPU {plan.hottest_npu_loads})")
     while rc.step() != 4:
         pass
-    print(f"reconfig complete; physical slots: {em.n_physical}")
+    assert swapped, "swap phase must install the new placement"
+    print(f"reconfig complete in {rc.steps_to_converge} phases; "
+          f"physical slots: {em.n_physical}")
 
     # communication-free rotation: tokens at different batch positions hit
     # different replicas of the same logical expert (Fig. 12)

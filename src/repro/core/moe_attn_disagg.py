@@ -78,10 +78,18 @@ def attention_half(block_params, x, *, cfg: ModelConfig, ctx: MeshCtx,
     return x, hn, idx, w, shared, new_cache
 
 
-def expert_half(ffn_params, buckets: jax.Array) -> jax.Array:
+def expert_half(ffn_params, buckets: jax.Array,
+                phys_owner: Optional[jax.Array] = None) -> jax.Array:
     """Expert-die computation: the routed expert FFN on capacity buckets
-    [E, C, d] (A2E delivers them; E2A takes the result back)."""
+    [E, C, d] (A2E delivers them; E2A takes the result back).
+
+    ``phys_owner`` [n_phys] activates EPLB placement: buckets are per
+    *physical replica slot* and each slot computes with its owning
+    logical expert's weights (the redundant slot's shadow-loaded copy on
+    hardware)."""
     routed = {n: ffn_params[n] for n in ("we_gate", "we_up", "we_down")}
+    if phys_owner is not None:
+        routed = {n: w[phys_owner] for n, w in routed.items()}
     return F._expert_ffn(routed, buckets)
 
 
@@ -92,16 +100,26 @@ def combine_half(x, routed_out, shared_out):
 
 
 def pack_dispatch(hn, idx, w, n_experts: int, capacity: int,
-                  quantize: bool = True):
+                  quantize: bool = True, placement=None):
     """A2E payload packing on the attention die: one fused route-pack
-    pass (capacity rank + INT8 wire quantization + bucket scatter)."""
+    pass (capacity rank + INT8 wire quantization + bucket scatter).
+
+    ``placement`` = (replica_slots [E, R], n_replicas [E]) remaps the
+    logical routed ids to EPLB physical replica slots (round-robin of
+    token position) BEFORE packing — ``n_experts`` must then be the
+    physical slot count and the expert half consumes owner-gathered
+    weights (:func:`expert_half` with ``phys_owner``)."""
     B, S, d = hn.shape
     hf = hn.reshape(B * S, d)
     k = idx.shape[-1]
     n = B * S * k
     flat_idx = idx.reshape(n)
     tok_of = jnp.repeat(jnp.arange(B * S), k)
-    from repro.kernels.route_pack.ops import fused_route_pack
+    from repro.kernels.route_pack.ops import (fused_route_pack,
+                                              placement_route)
+    if placement is not None:
+        flat_idx = placement_route(flat_idx, tok_of, placement[0],
+                                   placement[1])
     pack = fused_route_pack(hf, flat_idx, k=k, n_dest=n_experts,
                             capacity=capacity, quantize=quantize)
     if quantize:
@@ -138,7 +156,7 @@ class DisaggregatedMoEAttention:
 
     def __init__(self, model: Model, params: PyTree,
                  capacity_factor: float = 8.0, quantize: bool = False,
-                 microbatches: int = 1):
+                 microbatches: int = 1, placement=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -148,6 +166,10 @@ class DisaggregatedMoEAttention:
         # micro-batch overlaps the expert GMM of the other (each stage
         # is its own async jit dispatch; the host never syncs between)
         self.microbatches = max(1, int(microbatches))
+        # EPLB data plane: a PlacementTable routes each layer's A2E
+        # payload to physical replica slots; the expert stage computes
+        # redundant slots with owner-gathered weights
+        self.placement = placement
         self._attn = jax.jit(self._attention_stage,
                              static_argnames=("layer_i",))
         self._experts = jax.jit(self._expert_stage,
@@ -172,8 +194,10 @@ class DisaggregatedMoEAttention:
                               ctx=self.model.ctx, cache_ref=ref,
                               positions=positions)
 
-    def _expert_stage(self, params_layer, buckets, layer_i: int):
-        return expert_half(params_layer["ffn"], buckets)
+    def _expert_stage(self, params_layer, buckets, phys_owner,
+                      layer_i: int):
+        return expert_half(params_layer["ffn"], buckets,
+                           phys_owner=phys_owner)
 
     # -- full decode step -----------------------------------------------------
     def decode_step(self, cache: PyTree, tokens, positions):
@@ -185,8 +209,8 @@ class DisaggregatedMoEAttention:
         B, S, d = x.shape
         e = cfg.moe
 
-        def chunk_cap(n_tokens: int) -> int:
-            return max(int(n_tokens * e.top_k / max(e.num_experts, 1)
+        def chunk_cap(n_tokens: int, n_dest: int) -> int:
+            return max(int(n_tokens * e.top_k / max(n_dest, 1)
                            * self.capacity_factor), 4)
 
         for layer_i, (mixer, ffn_kind) in enumerate(kinds):
@@ -207,16 +231,22 @@ class DisaggregatedMoEAttention:
                 # micro-batch m+1 is issued while the expert stage of
                 # micro-batch m is still in flight (async jit dispatch —
                 # the host blocks only at the final combine)
+                lp = (None if self.placement is None
+                      else self.placement.layer(layer_i))
+                n_dest = e.num_experts if lp is None \
+                    else int(lp[2].shape[0])
+                owner = None if lp is None else lp[2]
                 routed_parts, off, pending = [], 0, []
                 for sz in microbatch_sizes(B, self.microbatches):
                     hn_c = hn[off:off + sz]
-                    cap_c = chunk_cap(sz * S)   # buckets sized per chunk
+                    cap_c = chunk_cap(sz * S, n_dest)  # per-chunk buckets
                     buckets, state = pack_dispatch(
                         hn_c, idx[off * S:(off + sz) * S],
-                        w[off * S:(off + sz) * S], e.num_experts, cap_c,
-                        self.quantize)
+                        w[off * S:(off + sz) * S], n_dest, cap_c,
+                        self.quantize,
+                        placement=None if lp is None else (lp[0], lp[1]))
                     # A2E (trampoline two-stage on hardware) → experts
-                    out_b = self._experts(params_layer, buckets,
+                    out_b = self._experts(params_layer, buckets, owner,
                                           layer_i=layer_i)
                     pending.append((out_b, state, sz, cap_c))
                     off += sz

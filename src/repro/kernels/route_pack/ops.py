@@ -5,6 +5,14 @@ compiled Pallas kernel off-CPU, the fused-equivalent jnp oracle on CPU
 (where the interpreter would only add overhead inside jitted serving
 steps). Tests pin ``use_pallas=True`` to validate the kernel in
 interpret mode against the oracle bit-for-bit.
+
+The pass also provides EPLB *physical-slot indirection*:
+:func:`placement_route` remaps destinations logical→physical-replica-
+slot by round-robin of token position; callers (``models/ffn.py``,
+``core/moe_attn_disagg.py``) apply it to their routed ids before the
+rank/quantize/scatter pass, so redundant experts (§4.5) split their
+load across capacity buckets and the remap gather fuses into the same
+jitted program as the pack itself.
 """
 from __future__ import annotations
 
@@ -48,6 +56,29 @@ def _dispatch(x, dest, valid, eid, *, k, n_dest, capacity, quantize,
     return RoutePack(buckets, scales, eids, rank[:N], keep[:N])
 
 
+def placement_route(dest: jax.Array, positions: jax.Array,
+                    replica_slots: jax.Array,
+                    n_replicas: jax.Array) -> jax.Array:
+    """EPLB physical-slot indirection (§4.5 step 4).
+
+    Maps logical expert ids to physical replica slots by *exact*
+    round-robin of token position — the communication-free balancing
+    rule the device-resident :class:`~repro.serving.eplb.PlacementTable`
+    encodes::
+
+        slot = replica_slots[dest, positions % n_replicas[dest]]
+
+    ``dest`` [N] int32 logical ids; ``positions`` [N] int32 token
+    positions (any monotone per-token counter works — the flattened
+    token index in the decode batch here); ``replica_slots`` [E, R]
+    int32 cyclically padded; ``n_replicas`` [E] int32 ≥ 1. With
+    ``n_replicas == 1`` everywhere this is the identity bit-for-bit.
+    """
+    dest = dest.astype(jnp.int32)
+    r = positions.astype(jnp.int32) % n_replicas[dest]
+    return replica_slots[dest, r]
+
+
 def fused_route_pack(x, dest, valid=None, eid=None, *, k: int = 1,
                      n_dest: int, capacity: int, quantize: bool = False,
                      use_pallas=None, interpret=None) -> RoutePack:
@@ -57,7 +88,9 @@ def fused_route_pack(x, dest, valid=None, eid=None, *, k: int = 1,
     dest [N = T*k] int32 destinations already clamped to [0, n_dest)
     (rows masked out by ``valid`` still consume a rank slot of their
     clamped destination, exactly like the reference chain); eid [N]
-    optional int32 side payload bucketed with fill -1.
+    optional int32 side payload bucketed with fill -1. Under EPLB
+    placement, ``dest`` carries PHYSICAL slot ids (callers remap via
+    :func:`placement_route`) and ``n_dest`` is the physical slot count.
     """
     if use_pallas is None:
         use_pallas = not on_cpu()

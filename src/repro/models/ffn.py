@@ -19,6 +19,20 @@ code runs on the 1×1 smoke mesh and on 256/512-device meshes):
 
 Shared experts (DeepSeek-MoE / DeepSeek-V3 / Llama-4) run as a dense MLP
 outside the routed path.
+
+EPLB placement (§4.5): ``moe_apply`` optionally takes a per-layer
+``placement`` — ``(replica_slots [E, R], n_replicas [E], phys_owner
+[n_phys])`` sliced from the device-resident
+:class:`~repro.serving.eplb.PlacementTable` — and the decode gather
+strategy then routes each token assignment to a *physical replica slot*
+(round-robin of token position across the logical expert's replicas),
+computing the slot's bucket against the owning expert's weights. With no
+redundancy (budget 0) this is bit-identical to logical routing; with
+redundancy, a hot expert's load genuinely splits across its replica
+buckets. Placement applies to the replicated-expert gather regime (the
+decode pull path); the sharded-EP regimes keep logical routing — their
+slot-ownership-aware dispatch is priced in the simulator
+(``sim/engine.py``) and is future work on the execution side.
 """
 from __future__ import annotations
 
@@ -31,7 +45,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.kernels.route_pack.ops import fused_route_pack
+from repro.kernels.route_pack.ops import fused_route_pack, placement_route
 from repro.models.common import dense_init, microbatch_sizes
 from repro.models.mesh_ctx import MeshCtx
 
@@ -187,7 +201,7 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
 def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
                       ep_size: int, batch_axes: Tuple[str, ...],
                       mesh_shape: Dict[str, int], train: bool,
-                      microbatches: int = 1):
+                      microbatches: int = 1, placement=None):
     """x: [B_l, S, d]. Each rank pulls the tokens routed to its local
     experts and psum combines (the pull-based dispatch analogue).
 
@@ -204,7 +218,13 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
     split and each micro-batch runs the full gather→GMM→combine chain
     independently, issued back to back so the A2E/E2A collectives of one
     micro-batch overlap the expert GMM of the other under XLA's async
-    collective scheduling (aux stats become token-weighted averages)."""
+    collective scheduling (aux stats become token-weighted averages).
+
+    ``placement`` (replicated-experts regime only) activates EPLB
+    physical-slot routing: buckets are per *physical slot* — replicas
+    included — and the expert GMM runs against owner-gathered weights.
+    Rotation position is the flattened token index within the
+    (micro-)batch, so replica selection needs no communication."""
     e = cfg.moe
     if isinstance(ep_axes, str):
         ep_axes = (ep_axes,)
@@ -232,24 +252,38 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
         flat_w = w.reshape(N)
         tok_of = jnp.repeat(jnp.arange(T), k)
 
-        if replicated_experts:
-            my_eid, mine = flat_idx, jnp.ones((N,), bool)
+        if replicated_experts and placement is not None:
+            # EPLB physical-slot indirection: replica selected by
+            # round-robin of the token index (§4.5 step 4); buckets and
+            # the GMM are per physical slot, weights gathered by owner
+            rep_slots, n_rep, owner = placement
+            my_eid = placement_route(flat_idx, tok_of, rep_slots, n_rep)
+            mine = jnp.ones((N,), bool)
+            n_slots = owner.shape[0]
+            cap = max(int(N / n_slots * e.capacity_factor), 4)
+            ffn_params = {n: params[n][owner]
+                          for n in ("we_gate", "we_up", "we_down")}
         else:
-            r = jnp.int32(0)
-            for a in ep_axes:
-                r = r * mesh_shape[a] + jax.lax.axis_index(a)
-            mine = (flat_idx // E_local) == r
-            my_eid = flat_idx % E_local
-        # expected assignments PER EXPERT = N/E (buckets are per expert);
-        # a 4× skew margin covers routing imbalance in the sharded case
-        # (EPLB keeps the tail bounded)
-        cap = max(int(N / E * e.capacity_factor
-                      * (1 if replicated_experts else 4)), 4)
+            if replicated_experts:
+                my_eid, mine = flat_idx, jnp.ones((N,), bool)
+            else:
+                r = jnp.int32(0)
+                for a in ep_axes:
+                    r = r * mesh_shape[a] + jax.lax.axis_index(a)
+                mine = (flat_idx // E_local) == r
+                my_eid = flat_idx % E_local
+            # expected assignments PER EXPERT = N/E (buckets are per
+            # expert); a 4× skew margin covers routing imbalance in the
+            # sharded case (EPLB keeps the tail bounded)
+            n_slots = E_local
+            cap = max(int(N / E * e.capacity_factor
+                          * (1 if replicated_experts else 4)), 4)
+            ffn_params = params
         pack = fused_route_pack(xf, jnp.where(mine, my_eid, 0),
-                                valid=mine, k=k, n_dest=E_local,
+                                valid=mine, k=k, n_dest=n_slots,
                                 capacity=cap)
         rank, keep = pack.rank, pack.keep
-        out_b = _expert_ffn(params, pack.buckets)
+        out_b = _expert_ffn(ffn_params, pack.buckets)
         y_assign = out_b[jnp.where(mine, my_eid, 0),
                          jnp.clip(rank, 0, cap - 1)]
         y_assign = jnp.where(keep[:, None], y_assign, 0.0)
@@ -300,6 +334,8 @@ def moe_apply(
     cfg: ModelConfig,
     ctx: MeshCtx,
     mode: str,                      # train | prefill | decode
+    placement=None,                 # per-layer (replica_slots, n_replicas,
+                                    # phys_owner) from a PlacementTable
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     e = cfg.moe
     impl = "gather" if mode == "decode" else ctx.moe_impl
@@ -326,6 +362,7 @@ def moe_apply(
         body = functools.partial(_moe_alltoall_local, cfg=cfg,
                                  ep_axis=ep_tuple[0], ep_size=eff_ep,
                                  all_axes=all_axes, train=train)
+        placement = None          # EPLB placement is a decode-path plane
     else:
         # pull-based gather-compute-reduce (also the 1×1-mesh degenerate)
         x_spec = P(ctx.bspec, None, None)
@@ -336,13 +373,31 @@ def moe_apply(
                                  train=train,
                                  microbatches=(ctx.decode_microbatches
                                                if mode == "decode" else 1))
+        if eff_ep != 1:
+            # sharded-EP placement routing needs slot-ownership-aware
+            # dispatch (priced in the sim; not executed here yet)
+            placement = None
 
-    y, (lb, z, counts) = shard_map(
-        body, mesh=mesh,
-        in_specs=(x_spec, w_spec),
-        out_specs=(x_spec, (P(), P(), P())),
-        check_rep=False,
-    )(x, routed)
+    if placement is not None:
+        pl = tuple(jnp.asarray(a) for a in placement)
+        gather_body = body
+
+        def body_with_placement(x, w, p):
+            return gather_body(x, w, placement=p)
+
+        y, (lb, z, counts) = shard_map(
+            body_with_placement, mesh=mesh,
+            in_specs=(x_spec, w_spec, (P(), P(), P())),
+            out_specs=(x_spec, (P(), P(), P())),
+            check_rep=False,
+        )(x, routed, pl)
+    else:
+        y, (lb, z, counts) = shard_map(
+            body, mesh=mesh,
+            in_specs=(x_spec, w_spec),
+            out_specs=(x_spec, (P(), P(), P())),
+            check_rep=False,
+        )(x, routed)
 
     if "shared" in params:
         y = y + mlp_apply(params["shared"], x)

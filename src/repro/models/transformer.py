@@ -87,8 +87,12 @@ def block_cache_spec(cfg: ModelConfig, kind, batch: int, max_len: int,
 
 def block_apply(params, x, *, cfg: ModelConfig, ctx: MeshCtx, kind,
                 mode: str, cache=None, positions=None, memory=None,
-                window_override: int = 0):
-    """Returns (x_out, new_cache, expert_counts[E] or zeros[1])."""
+                window_override: int = 0, placement=None):
+    """Returns (x_out, new_cache, expert_counts[E] or zeros[1]).
+
+    ``placement``: this layer's EPLB slice ``(replica_slots, n_replicas,
+    phys_owner)`` from a :class:`~repro.serving.eplb.PlacementTable`
+    (decode path; ``None`` ⇒ logical expert routing)."""
     mixer, ffn = kind
     h = rms_norm(x, params["mixer_norm"], cfg.norm_eps)
     if mixer == ATTN:
@@ -126,7 +130,7 @@ def block_apply(params, x, *, cfg: ModelConfig, ctx: MeshCtx, kind,
     elif ffn == MOE:
         h = rms_norm(x, params["ffn_norm"], cfg.norm_eps)
         y, moe_aux = F.moe_apply(params["ffn"], h, cfg=cfg, ctx=ctx,
-                                 mode=mode)
+                                 mode=mode, placement=placement)
         x = x + y
         counts = moe_aux["expert_counts"]
         aux = jnp.stack([moe_aux["moe_lb_loss"], moe_aux["moe_z_loss"]])
@@ -255,7 +259,7 @@ class Model:
     # core stack application
     # ------------------------------------------------------------------
     def _apply_stack(self, params, x, *, mode, caches=None, positions=None,
-                     memory=None):
+                     memory=None, placement=None):
         cfg, ctx = self.cfg, self.ctx
         apply = functools.partial(block_apply, cfg=cfg, ctx=ctx, mode=mode,
                                   positions=positions, memory=memory,
@@ -263,20 +267,33 @@ class Model:
         new_caches: Dict[str, PyTree] = {}
         aux_sum = jnp.zeros((2,), jnp.float32)
         counts_list: List[jax.Array] = []
+        np_, pl_len = len(self.prefix_kinds), len(self.pattern)
+
+        def layer_placement(layer_idx: int):
+            """Per-layer EPLB slice at a PYTHON layer index (prefix/tail
+            unrolled sections; the scan slices its own xs)."""
+            if placement is None:
+                return None
+            return placement.layer(layer_idx)
 
         def get(c, key, i):
             return None if c is None or key not in c else c[key][i]
 
         def run_unrolled(section, i, kind, x):
             c = get(caches, section, i)
+            gl = i if section == "prefix" \
+                else np_ + self.n_sb * pl_len + i
+            lp = layer_placement(gl)
             if mode == "decode" and c is not None:
                 ref = cache_ref.wrap_single(c)
                 x, nref, (aux, counts) = apply(params[section][i], x,
-                                               kind=kind, cache=ref)
+                                               kind=kind, cache=ref,
+                                               placement=lp)
                 nc = cache_ref.unwrap_single(nref)
             else:
                 x, nc, (aux, counts) = apply(params[section][i], x,
-                                             kind=kind, cache=c)
+                                             kind=kind, cache=c,
+                                             placement=lp)
             new_caches.setdefault(section, []).append(nc)
             return x, aux, counts
 
@@ -285,17 +302,30 @@ class Model:
             aux_sum += aux
             counts_list.append(counts)
 
+        # superblock placement slices rearranged [n_sb, pattern_len, ...]
+        # and scanned as xs next to the stacked params
+        pl_blocks = None
+        if placement is not None and self.n_sb:
+            sl = slice(np_, np_ + self.n_sb * pl_len)
+            pl_blocks = tuple(
+                a[sl].reshape((self.n_sb, pl_len) + a.shape[1:])
+                for a in (placement.replica_slots, placement.n_replicas,
+                          placement.phys_owner))
+
         if self.n_sb and mode == "decode":
             # caches are carried (not scanned xs/ys) so that the per-step
             # cache write is an in-place scatter of the new token only.
             def superblock_dec(carry, xs):
                 x, aux_acc, cstacks = carry
-                sb_params, idx = xs
+                sb_params, idx, sb_pl = xs
                 cts = []
                 for i, kind in enumerate(self.pattern):
                     ref = cache_ref.CacheRef(cstacks[f"pos{i}"], idx)
+                    lp = None if sb_pl is None \
+                        else tuple(a[i] for a in sb_pl)
                     x, nref, (aux, counts) = apply(sb_params[f"pos{i}"], x,
-                                                   kind=kind, cache=ref)
+                                                   kind=kind, cache=ref,
+                                                   placement=lp)
                     cstacks = dict(cstacks)
                     cstacks[f"pos{i}"] = nref.stack
                     aux_acc = aux_acc + aux
@@ -304,7 +334,7 @@ class Model:
 
             (x, aux_sum, nc_stack), counts_sb = jax.lax.scan(
                 superblock_dec, (x, aux_sum, caches["blocks"]),
-                (params["blocks"], jnp.arange(self.n_sb)))
+                (params["blocks"], jnp.arange(self.n_sb), pl_blocks))
             new_caches["blocks"] = nc_stack
             counts_list.append(counts_sb.sum(axis=(0, 1)))
         elif self.n_sb:
@@ -422,13 +452,19 @@ class Model:
                             self._unembed(params).astype(jnp.float32))
         return logits, caches
 
-    def decode_step(self, params, cache, tokens, positions, memory=None):
-        """tokens: [B, 1]; positions: [B]. → (logits [B, V], new cache)."""
+    def decode_step(self, params, cache, tokens, positions, memory=None,
+                    placement=None):
+        """tokens: [B, 1]; positions: [B]. → (logits [B, V], new cache).
+
+        ``placement``: optional device-resident
+        :class:`~repro.serving.eplb.PlacementTable` (leading dim =
+        n_layers) — the EPLB data plane each MoE layer routes through."""
         x = self._embed(params, tokens)
         x, new_caches, _, _ = self._apply_stack(params, x, mode="decode",
                                                 caches=cache,
                                                 positions=positions,
-                                                memory=memory)
+                                                memory=memory,
+                                                placement=placement)
         logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
                             self._unembed(params).astype(jnp.float32))
         return logits, new_caches

@@ -11,7 +11,10 @@ from repro.serving.dp_group import DPGroup
 from repro.serving.te_shell import TEShell
 from repro.serving.flowserve import FlowServeEngine
 from repro.serving.eplb import (ExpertLoadCollector, ExpertMap,
-                                ExpertReconfigurator, build_expert_map,
+                                ExpertReconfigurator, MigrationPlan,
+                                PlacementTable, ReconfigState,
+                                build_expert_map, build_placement_table,
+                                identity_placement, migration_plan,
                                 place_replicas, select_redundant_experts)
 from repro.serving.mtp import MTPDecoder, MTPStats, MTPTrainer
 from repro.serving.distflow import (DistFlowInstance, TransferState,

@@ -42,6 +42,23 @@ Contract details every implementation must honor:
 * Host traffic per step must stay ≤ ``4 * B`` bytes (token ids only) —
   guarded by tests; the legacy ``decode`` (full-logits) entry remains
   for diagnostics and for callers that genuinely need distributions.
+
+The ``apply_placement`` contract — the EPLB data plane
+------------------------------------------------------
+
+``apply_placement(table)`` installs a device-resident
+:class:`~repro.serving.eplb.PlacementTable` (stacked per-layer
+logical→physical expert slot maps) that every subsequent decode
+iteration routes through. It is the *swap* phase of the §4.5 live
+reconfiguration: the reconfigurator prefetches and shadow-loads replica
+weights first, then calls this between decode iterations. Callers must
+never invoke it while a donated-cache ``decode_sample`` is in flight —
+:class:`~repro.serving.dp_group.DPGroup.apply_placement` defers the
+swap to the next ``decode_complete`` boundary for exactly this reason.
+``apply_placement(None)`` reverts to logical routing. Implementations
+should keep table shapes stable across swaps (the builder's
+``pad_physical``/``pad_replicas``) so the jitted decode program is
+reused rather than retraced.
 """
 from __future__ import annotations
 
@@ -95,6 +112,13 @@ class ExecutionBackend(abc.ABC):
         docstring for the full contract.
         """
 
+    def apply_placement(self, table: Optional[Any]) -> None:
+        """Install the EPLB :class:`~repro.serving.eplb.PlacementTable`
+        subsequent decode iterations route through (``None`` ⇒ logical
+        routing). Must only be called between decode iterations — see
+        the module docstring. Default: no-op (backends without an
+        expert data plane)."""
+
 
 # ---------------------------------------------------------------------------
 # Production backend: jitted JAX executors
@@ -130,15 +154,21 @@ class JAXBackend(ExecutionBackend):
         self.vocab_size = model.cfg.vocab_size
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill, static_argnames=())
+        # EPLB data plane: the active PlacementTable (None ⇒ logical
+        # routing). Swapped by apply_placement between decode steps;
+        # passed into the jitted programs as a traced pytree so swaps
+        # with stable shapes reuse the compiled executable.
+        self._placement = None
 
         import jax.numpy as jnp
 
         self._base_key = jax.random.PRNGKey(seed)
 
         def _step(params, cache, tokens, positions, temperatures,
-                  base_key, step, stochastic):
+                  base_key, step, placement, stochastic):
             logits, new_cache = model.decode_step(params, cache, tokens,
-                                                  positions)
+                                                  positions,
+                                                  placement=placement)
             if stochastic:
                 key = jax.random.fold_in(base_key, step)
                 toks = sample_tokens(logits, temperatures, key,
@@ -204,13 +234,30 @@ class JAXBackend(ExecutionBackend):
 
         return self._write_slot(cache, cache1, jnp.int32(slot))
 
+    def apply_placement(self, table: Optional[Any]) -> None:
+        """Swap the EPLB placement the jitted decode programs consume.
+        Safe only between decode iterations (the caller — ``DPGroup`` —
+        guarantees no donated-cache step is in flight)."""
+        if table is None:
+            self._placement = None
+            return
+        import jax.numpy as jnp
+
+        from repro.serving.eplb import PlacementTable
+
+        self._placement = PlacementTable(
+            jnp.asarray(table.replica_slots, jnp.int32),
+            jnp.asarray(table.n_replicas, jnp.int32),
+            jnp.asarray(table.phys_owner, jnp.int32))
+
     def decode(self, cache: PyTree, tokens: np.ndarray,
                positions: np.ndarray) -> Tuple[np.ndarray, PyTree]:
         import jax.numpy as jnp
 
         logits, new_cache = self._decode(self.params, cache,
                                          jnp.asarray(tokens),
-                                         jnp.asarray(positions))
+                                         jnp.asarray(positions),
+                                         None, self._placement)
         return np.asarray(logits, np.float32), new_cache
 
     def decode_sample(self, cache: PyTree, tokens: np.ndarray,
@@ -225,5 +272,5 @@ class JAXBackend(ExecutionBackend):
                              jnp.asarray(positions),
                              jnp.asarray(temperatures, jnp.float32),
                              self._base_key, jnp.int32(step),
-                             stochastic=stochastic)
+                             self._placement, stochastic=stochastic)
         return toks, new_cache

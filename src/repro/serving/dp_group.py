@@ -73,6 +73,9 @@ class DPGroup:
         # zero-sync fast path: in-flight (device tokens, [(slot, req)])
         self._pending: Optional[Tuple[Any, List[Tuple[int, Request]]]] \
             = None
+        # EPLB swap deferred while a donated-cache step is in flight
+        self._pending_placement: Optional[Any] = None
+        self._has_pending_placement = False
 
         # output shortcutting: dedicated worker streams detokenized output
         self._out_q: "queue.Queue" = queue.Queue()
@@ -221,7 +224,30 @@ class DPGroup:
             return 0
         toks_dev, active = self._pending
         self._pending = None
-        return self._apply_sampled(np.asarray(toks_dev), active)
+        produced = self._apply_sampled(np.asarray(toks_dev), active)
+        if self._has_pending_placement:
+            # deferred EPLB swap: the donated-cache step has retired, so
+            # the placement can change before the next launch (§4.5
+            # reconfiguration never lands mid-iteration)
+            table = self._pending_placement
+            self._pending_placement = None
+            self._has_pending_placement = False
+            self.backend.apply_placement(table)
+        return produced
+
+    # ------------------------------------------------------------------
+    # EPLB placement swap (§4.5 step 3, the "swap" phase)
+    # ------------------------------------------------------------------
+    def apply_placement(self, table: Optional[Any]) -> None:
+        """Install a new expert placement on this group's backend. If a
+        donated-cache decode step is in flight, the swap is deferred to
+        the ``decode_complete`` boundary (the reconfiguration contract:
+        placement never changes mid-iteration)."""
+        if self._pending is not None:
+            self._pending_placement = table
+            self._has_pending_placement = True
+            return
+        self.backend.apply_placement(table)
 
     def decode_step_all(self, inject_fault: bool = False) -> int:
         """One engine iteration over all active slots. Returns number of

@@ -106,6 +106,27 @@ class FlowServeEngine:
             produced += dp.decode_complete()
         return produced
 
+    def run_eplb(self, n_npus: Optional[int] = None,
+                 slots_per_npu: int = 1):
+        """One EPLB pass over the shell's collected routing stats: build
+        per-layer maps and install the stacked PlacementTable on every
+        DP group's backend (each group swaps at its next decode-
+        iteration boundary — the §4.5 live-reconfiguration contract).
+        Returns the activated per-layer maps ({} when the model has no
+        routed experts or nothing was collected yet)."""
+        if self.shell.collector is None:
+            return {}
+        maps = self.shell.plan_eplb(
+            n_npus or max(len(self.dps), 1), slots_per_npu)
+        if maps:
+            self.shell.activate_maps(maps)
+        return maps
+
+    def record_expert_counts(self, counts) -> None:
+        """Feed per-layer routed token counts [n_layers, n_experts]
+        (the model's ``expert_counts`` metric) into the EPLB collector."""
+        self.shell.record_expert_counts(counts)
+
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0
         while (self.waiting or any(d.active for d in self.dps)):

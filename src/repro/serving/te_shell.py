@@ -13,7 +13,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.dp_group import DPGroup
-from repro.serving.eplb import (ExpertLoadCollector, build_expert_map,
+from repro.serving.eplb import (ExpertLoadCollector, PlacementTable,
+                                build_expert_map, build_placement_table,
                                 ExpertMap)
 from repro.serving.reliability import (Clock, HeartbeatPeer,
                                        TieredHeartbeat)
@@ -59,18 +60,66 @@ class TEShell:
         if self.collector is not None:
             self.collector.record(counts)
 
-    def trigger_eplb(self, n_npus: int, slots_per_npu: int = 1)\
+    def plan_eplb(self, n_npus: int, slots_per_npu: int = 1)\
             -> Dict[int, ExpertMap]:
-        """Periodic (e.g. per-minute) EPLB pass over collected loads."""
+        """Compute fresh per-layer maps from collected loads WITHOUT
+        activating them — the phased reconfiguration (prefetch →
+        shadow-load → swap) decides when they go live."""
         if self.collector is None:
             return {}
         self.collector.end_slice()
         tc = self.collector.token_count          # [L, E, T]
-        for layer in range(tc.shape[0]):
-            self.expert_maps[layer] = build_expert_map(
-                tc[layer], self.n_experts, self.eplb_budget, n_npus,
-                slots_per_npu)
+        return {layer: build_expert_map(tc[layer], self.n_experts,
+                                        self.eplb_budget, n_npus,
+                                        slots_per_npu)
+                for layer in range(tc.shape[0])}
+
+    def trigger_eplb(self, n_npus: int, slots_per_npu: int = 1)\
+            -> Dict[int, ExpertMap]:
+        """Periodic (e.g. per-minute) EPLB pass over collected loads:
+        plan + immediate activation (deployments that price the phased
+        migration use :meth:`plan_eplb` + :meth:`activate_maps`)."""
+        maps = self.plan_eplb(n_npus, slots_per_npu)
+        if maps:
+            self.expert_maps = maps
         return self.expert_maps
+
+    def activate_maps(self, maps: Dict[int, ExpertMap],
+                      push_to_dps: bool = True) -> Optional[PlacementTable]:
+        """The swap phase: make ``maps`` the active placement and (by
+        default) install the stacked :class:`PlacementTable` on every DP
+        group's backend — each group defers to its next decode-iteration
+        boundary (see ``DPGroup.apply_placement``)."""
+        self.expert_maps = dict(maps)
+        table = self.placement_table()
+        if push_to_dps:
+            # table may be None (no layer has redundancy): push anyway
+            # so backends revert from a previously active placement
+            for d in self.dps:
+                d.apply_placement(table)
+        return table
+
+    def placement_table(self) -> Optional[PlacementTable]:
+        """Stack the active per-layer maps into the device-resident
+        placement pytree. Shapes are padded to the redundancy budget so
+        successive EPLB passes keep the decode executable warm.
+
+        Returns ``None`` when NO layer carries a redundant replica: an
+        all-identity table would make the forward path pay the
+        owner-gather of expert weights for nothing, so the backends are
+        reverted to plain logical routing instead."""
+        if not self.expert_maps or self.collector is None:
+            return None
+        maps = [self.expert_maps.get(layer)
+                for layer in range(self.collector.n_layers)]
+        if not any(m is not None and m.enabled
+                   and any(len(s) > 1 for s in m.replicas.values())
+                   for m in maps):
+            return None
+        return build_placement_table(
+            maps, self.n_experts,
+            pad_physical=self.n_experts + self.eplb_budget,
+            pad_replicas=1 + self.eplb_budget)
 
     # -- responsibility 3: health checks -------------------------------------
     def health_tick(self) -> List[str]:

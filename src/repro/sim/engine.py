@@ -13,17 +13,30 @@ work when they are statistically identical, so ``n_sim_dps`` groups each
 stand for ``n_attention / n_sim_dps`` physical dies; the cost model
 prices iterations per-die so latencies are unaffected, and throughput is
 scaled back up by ``die_scale``. Faults target individual sim groups.
+
+EPLB is simulated PER LAYER: ``n_sim_expert_layers`` representative MoE
+layers (each standing for ``n_moe_layers / L`` physical layers) collect
+independent routing counts, get independent maps from
+``TEShell.plan_eplb``, and price the decode iteration layer by layer —
+a hot expert in layer 5 lengthens exactly layer 5's share of the
+iteration. Reconfiguration is phased (§4.5: prefetch → shadow-load →
+swap) through :class:`~repro.serving.eplb.ExpertReconfigurator`: new
+maps only take routing effect after the migration's weight traffic has
+been paid on the UB fabric, each DP group's next iteration is charged
+the migration's fabric contention, and the swap lands on every
+simulated backend through the ``apply_placement`` contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.transformerless import plan_partition
 from repro.serving.dp_group import DPGroup
+from repro.serving.eplb import ExpertReconfigurator, ReconfigState
 from repro.serving.reliability import HeartbeatPeer
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import PrefillScheduler, pick_prefill_te
@@ -57,7 +70,16 @@ class SimConfig:
     max_len: int = 8192
     n_kv_blocks: int = 8192
     eplb_enabled: bool = True
+    # per-layer EPLB: independent maps for every simulated MoE layer;
+    # False replays the layer-0-only policy (one map for all layers)
+    eplb_per_layer: bool = True
+    # representative MoE layers the sim collects/balances (each stands
+    # for n_moe_layers / L physical layers; folding like n_sim_dps)
+    n_sim_expert_layers: int = 8
     eplb_interval_s: float = 1.0
+    # optional measured-benchmark JSONs (BENCH_*.json) — when set, the
+    # cost model is built with SuperPodCostModel.from_calibration
+    calibration_paths: Optional[Tuple[str, ...]] = None
     heartbeat_interval_s: float = 0.2
     kv_sample_interval_s: float = 0.1
     schedule_interval_s: float = 0.02
@@ -94,8 +116,13 @@ class SuperPodSim:
         self.faults = faults or FaultPlan()
         self.model_cfg = get_config(sim_cfg.arch)
         self.plan = plan_partition(self.model_cfg, sim_cfg.total_dies)
-        self.cost = SuperPodCostModel(self.model_cfg, self.plan,
-                                      FabricModel())
+        if sim_cfg.calibration_paths:
+            self.cost = SuperPodCostModel.from_calibration(
+                self.model_cfg, self.plan,
+                list(sim_cfg.calibration_paths), FabricModel())
+        else:
+            self.cost = SuperPodCostModel(self.model_cfg, self.plan,
+                                          FabricModel())
         self.loop = EventLoop()
 
         wl = wl_cfg or WorkloadConfig()
@@ -104,7 +131,12 @@ class SuperPodSim:
                                      expert_skew=self.faults.expert_skew)
         n_experts = (self.model_cfg.moe.num_experts
                      if self.model_cfg.has_moe else 0)
-        self.workload = WorkloadGen(wl, n_experts)
+        # folded per-layer EPLB view: L representative MoE layers
+        self.n_layers_sim = (max(1, min(sim_cfg.n_sim_expert_layers,
+                                        self.cost.n_moe_layers))
+                             if n_experts else 1)
+        self.workload = WorkloadGen(wl, n_experts,
+                                    n_layers=self.n_layers_sim)
 
         self.dies = [DieModel(i) for i in range(sim_cfg.n_sim_dps)]
         self.dps = [
@@ -118,10 +150,17 @@ class SuperPodSim:
                  for i in range(sim_cfg.n_sim_dps)]
         eplb_budget = max(1, self.plan.n_expert
                           - (n_experts or self.plan.n_expert))
-        self.shell = TEShell(self.dps, n_layers=1, n_experts=n_experts,
+        self.shell = TEShell(self.dps, n_layers=self.n_layers_sim,
+                             n_experts=n_experts,
                              eplb_budget=eplb_budget,
                              clock=self.loop.clock, dp_peers=peers,
                              eplb_max_slices=8)
+        # phased §4.5 reconfiguration: new maps take effect only after
+        # the migration traffic has been paid on the UB fabric, then the
+        # swap lands on every DP backend via apply_placement
+        self.reconfig = ExpertReconfigurator(
+            apply_fn=self._activate_maps,
+            bytes_per_replica=self.cost.expert_weight_bytes)
         self.tes = [_PrefillTE(i, sim_cfg.prefill_streams_per_te,
                                long_capable=(i == 0))
                     for i in range(sim_cfg.n_prefill_tes)]
@@ -132,8 +171,11 @@ class SuperPodSim:
         self._step_scheduled = [False] * sim_cfg.n_sim_dps
         self._admit_queue: List[Request] = []
         self._admit_pending = False
-        self._recent_counts = (np.zeros(n_experts, np.float64)
-                               if n_experts else None)
+        self._recent_counts = (
+            np.zeros((self.n_layers_sim, n_experts), np.float64)
+            if n_experts else None)
+        self._map_cache: Dict[int, tuple] = {}
+        self._iter_charge: Dict[int, float] = {}
         self.n_arrivals = 0
         self.n_finished = 0
         self._arrivals_scheduled = False
@@ -227,12 +269,14 @@ class SuperPodSim:
                                self._admit_drain)
 
     # -- decode loop ------------------------------------------------------
-    def _map_arrays(self, em) -> tuple:
-        """Vectorized (expert_idx, npu_idx, inv_replicas) view of an
-        ExpertMap, cached per map object (identity held via the object
-        itself — an id() key could collide after the old map is freed)."""
-        if getattr(self, "_map_cache_em", None) is em:
-            return self._map_cache
+    def _map_arrays(self, layer: int, em) -> tuple:
+        """Vectorized (expert_idx, npu_idx, inv_replicas) view of one
+        layer's ExpertMap, cached per (layer, map object) — identity is
+        held via the object itself (an id() key could collide after the
+        old map is freed)."""
+        cached = self._map_cache.get(layer)
+        if cached is not None and cached[0] is em:
+            return cached[1]
         n_npus = max(self.plan.n_expert, 1)
         exp_idx: List[int] = []
         npu_idx: List[int] = []
@@ -242,38 +286,50 @@ class SuperPodSim:
                 exp_idx.append(e)
                 npu_idx.append(em.slot_npu.get(s, s % n_npus) % n_npus)
                 inv_rep.append(1.0 / len(slots))
-        self._map_cache_em = em
-        self._map_cache = (np.asarray(exp_idx, np.int64),
-                           np.asarray(npu_idx, np.int64),
-                           np.asarray(inv_rep, np.float64))
-        return self._map_cache
+        arrays = (np.asarray(exp_idx, np.int64),
+                  np.asarray(npu_idx, np.int64),
+                  np.asarray(inv_rep, np.float64))
+        self._map_cache[layer] = (em, arrays)
+        return arrays
 
-    def _moe_imbalance(self) -> float:
-        """Hottest-expert-die load over the pod mean, under the active
-        EPLB map (layer 0)."""
+    def _layer_imbalance(self, layer: int, counts: np.ndarray) -> float:
+        """Hottest-expert-die load over the pod mean for ONE simulated
+        MoE layer, under that layer's active EPLB map."""
+        if counts.sum() <= 0:
+            return 1.0
+        n_npus = max(self.plan.n_expert, 1)
+        em = self.shell.expert_maps.get(layer)
+        load = np.zeros(n_npus, np.float64)
+        if em is None or not self.cfg.eplb_enabled:
+            np.add.at(load, np.arange(len(counts)) % n_npus, counts)
+        else:
+            exp_idx, npu_idx, inv_rep = self._map_arrays(layer, em)
+            np.add.at(load, npu_idx, counts[exp_idx] * inv_rep)
+        mean = counts.sum() / n_npus
+        return float(np.clip(load.max() / max(mean, 1e-9), 1.0,
+                             MAX_IMBALANCE))
+
+    def _moe_imbalance(self):
+        """Per-layer imbalance vector [n_layers_sim] (the cost model
+        prices each simulated layer's share of the iteration with its
+        own value); scalar 1.0 when no routing stats exist yet."""
         c = self._recent_counts
         if c is None or c.sum() <= 0:
             return 1.0
-        n_npus = max(self.plan.n_expert, 1)
-        em = self.shell.expert_maps.get(0)
-        load = np.zeros(n_npus, np.float64)
-        if em is None or not self.cfg.eplb_enabled:
-            np.add.at(load, np.arange(len(c)) % n_npus, c)
-        else:
-            exp_idx, npu_idx, inv_rep = self._map_arrays(em)
-            np.add.at(load, npu_idx, c[exp_idx] * inv_rep)
-        mean = c.sum() / n_npus
-        return float(np.clip(load.max() / max(mean, 1e-9), 1.0,
-                             MAX_IMBALANCE))
+        return np.asarray([self._layer_imbalance(l, c[l])
+                           for l in range(c.shape[0])])
 
     def _iter_time(self, dp_id: int) -> float:
         dp = self.dps[dp_id]
         positions = [s.position for s in dp.slots if not s.free]
         ctx = int(np.mean(positions)) if positions else 0
-        return self.cost.decode_iter_time(
+        t = self.cost.decode_iter_time(
             len(positions), mean_context=max(ctx, 1),
             moe_imbalance=self._moe_imbalance(),
             slowdown=self.dies[dp_id].slowdown)
+        # in-flight EPLB migration: this die's next iteration eats the
+        # weight traffic's UB contention (charged once per pass per DP)
+        return t + self._iter_charge.pop(dp_id, 0.0)
 
     def _kick(self, dp_id: int) -> None:
         if self._step_scheduled[dp_id] or not self.dies[dp_id].alive:
@@ -300,23 +356,68 @@ class SuperPodSim:
                 self.n_finished += 1
         if self._recent_counts is not None:
             counts = self.workload.expert_counts(
-                len(active), self.model_cfg.moe.top_k)
+                len(active), self.model_cfg.moe.top_k)   # [L, E]
             self._recent_counts = 0.9 * self._recent_counts + counts
-            self.shell.record_expert_counts(counts[None])
+            self.shell.record_expert_counts(counts)
         dp.finished = []
         self._kick(dp_id)
 
     # -- control-plane periodics -----------------------------------------
+    def _activate_maps(self, maps) -> None:
+        """Reconfigurator swap callback: maps go live for per-layer
+        pricing and the PlacementTable lands on every alive DP backend
+        through the apply_placement contract."""
+        table = self.shell.activate_maps(maps, push_to_dps=False)
+        for dp, die in zip(self.dps, self.dies):
+            if die.alive:
+                dp.apply_placement(table)
+        self.metrics.n_reconfigs += 1
+
     def _eplb_tick(self) -> None:
-        if self.cfg.eplb_enabled and self.shell.collector is not None:
-            self.shell.trigger_eplb(
+        if (self.cfg.eplb_enabled and self.shell.collector is not None
+                and self.reconfig.state in (ReconfigState.IDLE,
+                                            ReconfigState.ENABLED)):
+            maps = self.shell.plan_eplb(
                 n_npus=self.plan.n_expert,
                 slots_per_npu=max(
                     1, self.model_cfg.moe.redundancy_slots))
-            self.metrics.n_eplb_passes += 1
+            if maps and not self.cfg.eplb_per_layer:
+                # layer-0-only policy: one map replayed on every layer
+                maps = {layer: maps[0] for layer in maps}
+            if maps:
+                plan = self.reconfig.begin(maps)
+                # §4.5 phases priced on the UB fabric: prefetch, then
+                # shadow-load, each bounded by the hottest receiving
+                # NPU's weight traffic; the swap fires when both are
+                # paid. Serving is never interrupted, but a decoding
+                # DP's next iteration eats the migration's link
+                # contention (idle groups see no traffic to contend
+                # with). Migration bytes/time are accounted at the SWAP
+                # — a migration cut off by the run deadline charged
+                # nothing, keeping metrics == reconfigurator counters.
+                t_phase = self.cost.reconfig_transfer_time(
+                    plan.hottest_npu_loads)
+                self.metrics.n_eplb_passes += 1
+                for dp_id, die in enumerate(self.dies):
+                    if (die.alive and t_phase > 0
+                            and self.dps[dp_id].active > 0):
+                        self._iter_charge[dp_id] = \
+                            self._iter_charge.get(dp_id, 0.0) + t_phase
+                self.loop.schedule(t_phase, "eplb_prefetch_done",
+                                   self.reconfig.step)
+                self.loop.schedule(2.0 * t_phase, "eplb_load_done",
+                                   lambda: self._eplb_swap(t_phase))
         if not self._done():
             self.loop.schedule(self.cfg.eplb_interval_s, "eplb_tick",
                                self._eplb_tick)
+
+    def _eplb_swap(self, t_phase: float) -> None:
+        self.reconfig.step()          # SHADOW_LOADING → READY
+        self.reconfig.step()          # READY → ENABLED (apply_fn swap)
+        plan = self.reconfig.plan
+        if plan is not None:
+            self.metrics.reconfig_bytes += plan.total_bytes
+            self.metrics.reconfig_time_s += 2.0 * t_phase
 
     def _health_tick(self) -> None:
         failed = self.shell.health_tick()

@@ -221,6 +221,10 @@ class SuperPodCostModel:
             6.0 * d * e.expert_d_ff * max(e.top_k, 1)
             + 6.0 * d * (e.shared_d_ff or e.expert_d_ff)
             * e.num_shared_experts) if e.enabled else 0.0
+        # one routed expert's weights, int8 (§4.1 W8A8): what an EPLB
+        # replica migration moves per (layer, expert) load
+        self.expert_weight_bytes = int(3.0 * d * e.expert_d_ff) \
+            if e.enabled else 0
         # int8-quantized expert weights streamed from HBM every iteration
         self.moe_weight_bytes_per_die = (
             3.0 * d * e.expert_d_ff
@@ -290,8 +294,18 @@ class SuperPodCostModel:
         exposed = max(0.0, comm_mb - (mb - 1) * compute_mb)
         return mb * compute_mb + exposed
 
+    def reconfig_transfer_time(self, n_replica_loads: int) -> float:
+        """Fabric time for an EPLB weight migration critical path:
+        ``n_replica_loads`` expert replicas (int8 weights) streamed into
+        one NPU's HBM over the UB fabric (§4.5 step 3 — prefetch and
+        shadow-load each pay this)."""
+        if n_replica_loads <= 0 or self.expert_weight_bytes <= 0:
+            return 0.0
+        return self.fabric.transfer_time(
+            n_replica_loads * self.expert_weight_bytes)
+
     def decode_iter_time(self, batch_per_die: int, mean_context: int = 0,
-                         moe_imbalance: float = 1.0,
+                         moe_imbalance=1.0,
                          slowdown: float = 1.0,
                          microbatches: Optional[int] = None) -> float:
         """One decode iteration of a DP group (batch ``batch_per_die``
@@ -300,7 +314,11 @@ class SuperPodCostModel:
 
         moe_imbalance ≥ 1: hottest-expert-die load over the mean (from
         live expert counts + the active EPLB map); the hottest die sets
-        the all-to-all critical path.
+        the all-to-all critical path. A SEQUENCE of m values prices the
+        MoE layers per layer: each entry stands for ``n_moe_layers / m``
+        consecutive layers at that entry's imbalance (the simulator's
+        folded per-layer EPLB view) — a hot expert in ONE layer then
+        lengthens the iteration by exactly that layer group's share.
 
         ``microbatches`` overrides the plan's microbatch count: ≥ 2
         prices the §4.4 ping-pong overlap (per-microbatch stage times at
@@ -325,17 +343,29 @@ class SuperPodCostModel:
                 # fan-out of dispatch/combine is paid per microbatch
                 b_mb = b / mb
                 t_disp, t_comb = self._comm_times(b_mb)
-                t_layer_moe = self._pingpong_layer_time(
-                    mb, self._attn_time(b_mb, ctx, weight_amort=mb),
-                    t_disp,
-                    self._moe_time(b_mb, moe_imbalance, weight_amort=mb),
-                    t_comb) + 2e-6
+                t_attn_mb = self._attn_time(b_mb, ctx, weight_amort=mb)
+
+                def layer_time(imb: float) -> float:
+                    return self._pingpong_layer_time(
+                        mb, t_attn_mb, t_disp,
+                        self._moe_time(b_mb, imb, weight_amort=mb),
+                        t_comb) + 2e-6
             else:
                 t_disp, t_comb = self._comm_times(b)
-                t_layer_moe = (t_attn + self._moe_time(b, moe_imbalance)
-                               + t_disp + t_comb)
+
+                def layer_time(imb: float) -> float:
+                    return (t_attn + self._moe_time(b, imb)
+                            + t_disp + t_comb)
+
+            if isinstance(moe_imbalance, (list, tuple, np.ndarray)):
+                imbs = [float(v) for v in np.asarray(moe_imbalance).ravel()]
+                t_moe_total = (sum(layer_time(v) for v in imbs)
+                               * (self.n_moe_layers / max(len(imbs), 1)))
+            else:
+                t_moe_total = self.n_moe_layers \
+                    * layer_time(float(moe_imbalance))
         else:
-            t_layer_moe = t_attn
+            t_moe_total = self.n_moe_layers * t_attn
 
         t_ffn = max(b * self.dense_ffn_flops_per_token
                     / (PEAK_FLOPS * self.decode_mfu),
@@ -343,7 +373,7 @@ class SuperPodCostModel:
                     / (HBM_BW * self.hbm_eff))
         t_dense = t_attn + t_ffn
 
-        t_iter = (self.n_moe_layers * t_layer_moe
+        t_iter = (t_moe_total
                   + self.n_dense_layers * t_dense
                   + self.iter_overhead)
         return t_iter * slowdown
@@ -368,6 +398,17 @@ class CostModelBackend(ExecutionBackend):
         self.vocab_size = self.SIM_VOCAB
         self.n_prefills = 0
         self.n_decode_steps = 0
+        # EPLB data plane (apply_placement contract): the active
+        # PlacementTable and how many swaps this die has taken
+        self.placement = None
+        self.n_placement_swaps = 0
+
+    def apply_placement(self, table) -> None:
+        """Install the swapped-in placement (the sim prices the routing
+        effect through the engine's per-layer imbalance; the backend
+        records the swap so tests can assert the contract fired)."""
+        self.placement = table
+        self.n_placement_swaps += 1
 
     def init_cache(self, max_batch: int, max_len: int):
         return {"sim_dp": self.dp_id, "slots": max_batch}

@@ -67,6 +67,9 @@ class MetricsCollector:
         self.records: Dict[int, ReqRecord] = {}
         self.kv_samples: List[Tuple[float, float]] = []
         self.n_eplb_passes = 0
+        self.n_reconfigs = 0          # completed placement swaps
+        self.reconfig_bytes = 0       # expert weights migrated (fabric)
+        self.reconfig_time_s = 0.0    # fabric time charged to migrations
         self.n_failovers = 0
         self.n_decode_iters = 0
 
@@ -137,6 +140,9 @@ class MetricsCollector:
                 float(np.mean([u for _, u in self.kv_samples]))
                 if self.kv_samples else 0.0, 6),
             "n_eplb_passes": self.n_eplb_passes,
+            "n_reconfigs": self.n_reconfigs,
+            "reconfig_bytes": int(self.reconfig_bytes),
+            "reconfig_time_s": round(self.reconfig_time_s, 9),
             "n_failovers": self.n_failovers,
             "n_decode_iters": self.n_decode_iters,
         }

@@ -5,6 +5,10 @@ long document, the §7.2 traffic split) and lognormal output lengths.
 Every request also carries an *expert-affinity seed*: the sim derives
 per-iteration expert routing counts from it, so a skewed corpus (Zipf
 ``expert_skew``) produces the hot-expert imbalance EPLB exists to fix.
+Expert popularity is PER LAYER (``n_layers`` independent shuffles of
+the same Zipf profile — routers of different layers specialize on
+different experts), which is what makes per-layer EPLB maps matter: a
+single layer's map cannot balance the other layers' hot experts.
 All randomness flows from one ``numpy`` Generator — same seed, same
 trace.
 """
@@ -34,21 +38,30 @@ class WorkloadConfig:
 
 
 class WorkloadGen:
-    def __init__(self, cfg: WorkloadConfig, n_experts: int = 0):
+    def __init__(self, cfg: WorkloadConfig, n_experts: int = 0,
+                 n_layers: int = 1):
         self.cfg = cfg
         self.n_experts = n_experts
+        self.n_layers = max(1, int(n_layers))
         self.rng = np.random.default_rng(cfg.seed)
         self._expert_popularity = self._make_popularity()
 
     def _make_popularity(self) -> Optional[np.ndarray]:
+        """[n_layers, n_experts] routing popularity; per-layer shuffles
+        put each layer's hot experts at different indices."""
         if not self.n_experts:
             return None
         if self.cfg.expert_skew <= 0:
-            return np.full(self.n_experts, 1.0 / self.n_experts)
+            return np.full((self.n_layers, self.n_experts),
+                           1.0 / self.n_experts)
         ranks = np.arange(1, self.n_experts + 1, dtype=np.float64)
-        p = ranks ** (-self.cfg.expert_skew)
-        self.rng.shuffle(p)          # hot experts at random indices
-        return p / p.sum()
+        base = ranks ** (-self.cfg.expert_skew)
+        layers = []
+        for _ in range(self.n_layers):
+            p = base.copy()
+            self.rng.shuffle(p)      # hot experts at random indices
+            layers.append(p / p.sum())
+        return np.stack(layers)
 
     # ------------------------------------------------------------------
     def requests(self) -> Iterator[tuple]:
@@ -77,11 +90,13 @@ class WorkloadGen:
 
     # ------------------------------------------------------------------
     def expert_counts(self, n_tokens: int, top_k: int) -> np.ndarray:
-        """Routed token counts [n_experts] for one decode iteration."""
+        """Routed token counts [n_layers, n_experts] for one decode
+        iteration (each simulated MoE layer routes independently)."""
         if self._expert_popularity is None:
-            return np.zeros(0, np.int64)
+            return np.zeros((self.n_layers, 0), np.int64)
         draws = n_tokens * top_k
-        return self.rng.multinomial(draws, self._expert_popularity)\
+        return np.stack([self.rng.multinomial(draws, p)
+                         for p in self._expert_popularity])\
             .astype(np.int64)
 
     def set_skew(self, skew: float) -> None:

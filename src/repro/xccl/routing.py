@@ -24,6 +24,14 @@ The packing stages route through ``kernels/route_pack`` — capacity rank
 off-CPU, a bit-identical jnp oracle on CPU). ``capacity_rank`` /
 ``scatter_to_buckets`` below remain the reference semantics the kernel
 is validated against (tests/test_properties.py).
+
+EPLB physical-slot indirection (§4.5): when a device-resident
+``PlacementTable`` is active, destinations entering the pack are
+*physical replica slots*, not logical expert ids — the remap is
+:func:`placement_route` (re-exported here; round-robin of token
+position across a logical expert's replicas, a pure gather with no
+cross-NPU coordination). With no redundancy the remap is the identity
+bit-for-bit, so all reference semantics below are unchanged.
 """
 from __future__ import annotations
 
@@ -35,7 +43,14 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.route_pack.ops import fused_route_pack
+from repro.kernels.route_pack.ops import fused_route_pack, placement_route
+
+__all__ = [
+    "capacity_rank", "scatter_to_buckets", "quantize_tokens",
+    "dequantize_tokens", "placement_route", "DispatchResult",
+    "dispatch_local", "combine_local", "a2e_local", "e2a_local",
+    "make_a2e_e2a",
+]
 
 
 # ---------------------------------------------------------------------------

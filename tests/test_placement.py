@@ -1,0 +1,282 @@
+"""EPLB placement data plane: table construction, bit-identity of
+placement routing at budget 0, replica load splitting, the phased
+reconfigurator, the backend apply_placement contract, and the bounded
+collector window.
+
+The moe_apply tests jit a TINY MoE layer (d=16, E=4) on the 1×1 smoke
+mesh — a couple of seconds of compile, fast tier by design (the rest of
+the module is pure numpy/host logic).
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.eplb import (ExpertLoadCollector, ExpertMap,
+                                ExpertReconfigurator, PlacementTable,
+                                ReconfigState, build_expert_map,
+                                build_placement_table, identity_placement,
+                                migration_plan)
+
+
+def _skewed_map(n_experts=8, budget=3, n_npus=4, seed=0):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 50, (n_experts, 4))
+    counts[2] += 500          # hot expert → guaranteed replication
+    return build_expert_map(counts, n_experts, budget, n_npus)
+
+
+# ---------------------------------------------------------------------------
+# PlacementTable construction
+# ---------------------------------------------------------------------------
+def test_identity_placement_is_identity():
+    t = identity_placement(5, 8)
+    assert (t.n_layers, t.n_logical, t.n_physical) == (5, 8, 8)
+    np.testing.assert_array_equal(np.asarray(t.n_replicas),
+                                  np.ones((5, 8), np.int32))
+    for layer in range(5):
+        got = t.map_assignments(layer, np.arange(16),
+                                np.arange(16) % 8)
+        np.testing.assert_array_equal(got, np.arange(16) % 8)
+
+
+def test_build_placement_table_padding_stabilizes_shapes():
+    em = _skewed_map()
+    a = build_placement_table([em, None], 8, pad_physical=12,
+                              pad_replicas=4)
+    b = build_placement_table([None, None], 8, pad_physical=12,
+                              pad_replicas=4)
+    assert a.replica_slots.shape == b.replica_slots.shape
+    assert a.phys_owner.shape == b.phys_owner.shape == (2, 12)
+
+
+def test_placement_owner_consistent_with_replicas():
+    em = _skewed_map()
+    t = build_placement_table([em], em.n_logical)
+    owner = np.asarray(t.phys_owner[0])
+    for e, slots in em.replicas.items():
+        for s in slots:
+            assert owner[s] == e
+        # the routing rule only ever lands on e's own replicas
+        got = t.map_assignments(0, np.arange(64), np.full(64, e))
+        assert set(got.tolist()) == set(slots)
+
+
+def test_round_robin_splits_replica_load_within_one():
+    em = _skewed_map()
+    hot = max(em.replicas, key=lambda e: len(em.replicas[e]))
+    assert len(em.replicas[hot]) > 1, "test needs a replicated expert"
+    loads = em.replica_loads(hot, np.arange(101))
+    assert max(loads.values()) - min(loads.values()) <= 1
+
+
+# ---------------------------------------------------------------------------
+# moe_apply: placement routing vs logical routing
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_moe():
+    import jax
+
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models.ffn import moe_init
+    from repro.models.mesh_ctx import make_smoke_ctx
+
+    cfg = ModelConfig(name="tiny-moe", d_model=16, d_ff=32, num_layers=2,
+                      num_heads=2, vocab_size=64,
+                      moe=MoEConfig(num_experts=4, top_k=2,
+                                    expert_d_ff=16))
+    ctx = make_smoke_ctx()
+    params = moe_init(jax.random.PRNGKey(0), cfg, jax.numpy.float32)
+    return cfg, ctx, params
+
+
+def _tiny_placement(cfg, budget=0, seed=0):
+    E = cfg.moe.num_experts
+    if budget == 0:
+        return identity_placement(1, E)
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 20, (E, 4))
+    counts[1] += 300
+    em = build_expert_map(counts, E, budget, n_npus=2)
+    return build_placement_table([em], E)
+
+
+def test_budget0_placement_bit_identical(tiny_moe):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.ffn import moe_apply
+
+    cfg, ctx, params = tiny_moe
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 2, cfg.d_model))
+    y0, aux0 = moe_apply(params, x, cfg=cfg, ctx=ctx, mode="decode")
+    t = _tiny_placement(cfg, budget=0)
+    y1, aux1 = moe_apply(params, x, cfg=cfg, ctx=ctx, mode="decode",
+                         placement=t.layer(0))
+    assert bool(jnp.all(y0 == y1)), \
+        "budget=0 placement routing must be bit-identical"
+    np.testing.assert_array_equal(np.asarray(aux0["expert_counts"]),
+                                  np.asarray(aux1["expert_counts"]))
+
+
+def test_replicated_placement_matches_logical_output(tiny_moe):
+    """Replica slots compute with the owner's weights, so the MoE output
+    is unchanged while the load moves to redundant slots."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.ffn import moe_apply
+
+    cfg, ctx, params = tiny_moe
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 2, cfg.d_model))
+    y0, _ = moe_apply(params, x, cfg=cfg, ctx=ctx, mode="decode")
+    t = _tiny_placement(cfg, budget=2)
+    assert int(np.max(np.asarray(t.n_replicas))) > 1
+    y1, _ = moe_apply(params, x, cfg=cfg, ctx=ctx, mode="decode",
+                      placement=t.layer(0))
+    assert bool(jnp.allclose(y0, y1, atol=1e-5))
+
+
+def test_placement_route_splits_buckets():
+    """Tokens routed to a duplicated expert land on BOTH its physical
+    slots, round-robin by token position, with loads within one."""
+    import jax.numpy as jnp
+
+    from repro.kernels.route_pack.ops import placement_route
+
+    em = ExpertMap(4, {0: [0, 4], 1: [1], 2: [2], 3: [3]})
+    t = build_placement_table([em], 4)
+    rs, nr, _ = t.layer(0)
+    n = 12
+    dest = jnp.zeros((n,), jnp.int32)          # all → logical expert 0
+    phys = np.asarray(placement_route(dest, jnp.arange(n, dtype=jnp.int32),
+                                      jnp.asarray(rs), jnp.asarray(nr)))
+    c0, c4 = int(np.sum(phys == 0)), int(np.sum(phys == 4))
+    assert c0 + c4 == n and abs(c0 - c4) <= 1
+
+
+def test_pack_dispatch_placement_identity():
+    """core/moe_attn_disagg.pack_dispatch with an identity placement is
+    bit-identical to the placement-free pack."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.moe_attn_disagg import pack_dispatch
+
+    E = 4
+    rng = np.random.default_rng(3)
+    hn = jnp.asarray(rng.standard_normal((2, 3, 8)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, E, (6, 2)), jnp.int32)
+    w = jnp.asarray(rng.random((6, 2)), jnp.float32)
+    t = identity_placement(1, E)
+    b0, s0 = pack_dispatch(hn, idx, w, E, capacity=8, quantize=False)
+    b1, s1 = pack_dispatch(hn, idx, w, E, capacity=8, quantize=False,
+                           placement=(jnp.asarray(t.replica_slots[0]),
+                                      jnp.asarray(t.n_replicas[0])))
+    np.testing.assert_array_equal(np.asarray(b0), np.asarray(b1))
+    for a, b in zip(s0, s1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Phased reconfigurator + apply_placement contract
+# ---------------------------------------------------------------------------
+def test_reconfigurator_phases_and_migration_accounting():
+    em1, em2 = _skewed_map(seed=0), _skewed_map(seed=9)
+    applied = []
+    rc = ExpertReconfigurator(apply_fn=lambda m: applied.append(m),
+                              bytes_per_replica=1000)
+    plan = rc.begin({0: em1, 1: em2})
+    assert rc.state == ReconfigState.PREFETCHING
+    assert plan.n_replica_loads > 0
+    assert plan.total_bytes == plan.n_replica_loads * 1000
+    assert not applied, "swap must not land before the load phases"
+    assert rc.step() == ReconfigState.SHADOW_LOADING
+    assert rc.step() == ReconfigState.READY
+    assert not applied
+    assert rc.step() == ReconfigState.ENABLED
+    assert applied == [{0: em1, 1: em2}]
+    assert rc.total_migrated_bytes == plan.total_bytes
+    # a second pass with the SAME maps moves nothing
+    plan2 = rc.begin({0: em1, 1: em2})
+    assert plan2.n_replica_loads == 0
+
+
+def test_migration_plan_diffs_only_changes():
+    em = _skewed_map()
+    cold = migration_plan({}, {0: em}, bytes_per_replica=7)
+    n_redundant = sum(len(s) - 1 for s in em.replicas.values())
+    assert cold.n_replica_loads == n_redundant
+    assert cold.total_bytes == 7 * n_redundant
+    assert migration_plan({0: em}, {0: em}).n_replica_loads == 0
+
+
+def test_dp_group_defers_swap_to_iteration_boundary():
+    """apply_placement mid-flight must not reach the backend until the
+    donated-cache decode step completes (the §4.5 swap contract)."""
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.serving.dp_group import DPGroup
+    from repro.serving.request import Request
+    from repro.sim.fabric import CostModelBackend, SuperPodCostModel
+
+    cfg = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    be = CostModelBackend(0, cost)
+    dp = DPGroup(0, be, max_batch=2, max_len=64, n_kv_blocks=64)
+    try:
+        req = Request(prompt_tokens=[3, 4, 5], max_new_tokens=4,
+                      ignore_eos=True)
+        cache1, logits = dp.run_prefill(req)
+        dp.admit(req, cache1, logits)
+        table = identity_placement(1, cfg.moe.num_experts)
+        assert dp.decode_launch()
+        dp.apply_placement(table)
+        assert be.n_placement_swaps == 0, "swap mid-step is forbidden"
+        dp.decode_complete()
+        assert be.n_placement_swaps == 1 and be.placement is table
+        # idle group: the swap lands immediately
+        dp.apply_placement(None)
+        assert be.n_placement_swaps == 2 and be.placement is None
+    finally:
+        dp.close()
+
+
+@pytest.mark.slow
+def test_jax_backend_apply_placement_swap(make_model):
+    """The production backend's apply_placement: an identity table swap
+    must leave the jitted decode+sample program's tokens bit-identical,
+    and swapping back to None restores the logical program."""
+    from repro.serving.backend import JAXBackend
+
+    cfg, m, params = make_model("deepseek-moe-16b")
+    be = JAXBackend(m, params, max_len=64)
+    cache = be.init_cache(2, 64)
+    toks = np.array([[3], [5]], np.int32)
+    pos = np.array([1, 1], np.int32)
+    temps = np.zeros((2,), np.float32)
+    t0, cache = be.decode_sample(cache, toks, pos, temps, 0,
+                                 donate=False)
+    be.apply_placement(identity_placement(cfg.num_layers,
+                                          cfg.moe.num_experts))
+    assert be._placement is not None
+    t1, cache = be.decode_sample(cache, toks, pos, temps, 1,
+                                 donate=False)
+    be.apply_placement(None)
+    t2, _ = be.decode_sample(cache, toks, pos, temps, 2, donate=False)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+# ---------------------------------------------------------------------------
+# Collector window bound
+# ---------------------------------------------------------------------------
+def test_collector_window_bounds_memory():
+    col = ExpertLoadCollector(2, 4, max_slices=3)
+    for i in range(10):
+        col.record(np.full((2, 4), i))
+        col.end_slice()
+    assert col.n_slices == 3, "deque must evict beyond max_slices"
+    assert col._slices.maxlen == 3
+    tc = col.token_count
+    assert tc.shape == (2, 4, 3)
+    # the surviving slices are the three most recent
+    np.testing.assert_array_equal(tc[0, 0], [7, 8, 9])

@@ -39,6 +39,48 @@ def test_eplb_never_worse_than_native(counts, budget):
     n_exp=st.integers(2, 32),
     budget=st.integers(0, 6),
     n_npus=st.integers(2, 8),
+    n_layers=st.integers(1, 4),
+    n_tokens=st.integers(1, 128),
+    seed=st.integers(0, 1000),
+)
+def test_placement_table_invariants(n_exp, budget, n_npus, n_layers,
+                                    n_tokens, seed):
+    """The device-resident placement plane (§4.5): 1) every token
+    assignment lands on exactly one physical replica OF ITS ROUTED
+    logical expert (owner consistency), 2) round-robin selection keeps a
+    duplicated expert's replica loads within one token, 3) budget 0 is
+    the identity mapping."""
+    from repro.serving.eplb import build_expert_map, build_placement_table
+    rng = np.random.default_rng(seed)
+    maps = [build_expert_map(rng.integers(0, 500, (n_exp, 4)), n_exp,
+                             budget, n_npus) for _ in range(n_layers)]
+    t = build_placement_table(maps, n_exp)
+    pos = np.arange(n_tokens)
+    for li, em in enumerate(maps):
+        owner = np.asarray(t.phys_owner[li])
+        for e in range(n_exp):
+            phys = t.map_assignments(li, pos, np.full(n_tokens, e))
+            # 1) one slot per assignment, always a replica of e, owned by e
+            assert phys.shape == (n_tokens,)
+            assert set(phys.tolist()) <= set(em.replicas[e])
+            assert np.all(owner[phys] == e)
+            # 2) round-robin balance: replica loads differ by ≤ 1
+            loads = np.bincount(phys, minlength=t.n_physical)
+            loads = loads[sorted(set(em.replicas[e]))]
+            assert loads.max() - loads.min() <= 1
+    if budget == 0:
+        log = rng.integers(0, n_exp, n_tokens)
+        for li in range(n_layers):
+            # 3) identity: physical slot == logical expert
+            np.testing.assert_array_equal(
+                t.map_assignments(li, pos, log), log)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_exp=st.integers(2, 32),
+    budget=st.integers(0, 6),
+    n_npus=st.integers(2, 8),
     seed=st.integers(0, 1000),
 )
 def test_expert_map_rotation_covers_replicas(n_exp, budget, n_npus, seed):

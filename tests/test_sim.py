@@ -210,6 +210,66 @@ def test_eplb_reduces_skew_tpot():
 
 
 # ---------------------------------------------------------------------------
+# per-layer EPLB data plane (maps → pricing → reconfig traffic)
+# ---------------------------------------------------------------------------
+def test_hot_expert_in_one_layer_changes_iter_time():
+    """Regression for the expert_maps.get(0) bug: imbalance is priced
+    PER LAYER, so a hot expert in layer 5 (and only there) must move
+    the simulated iteration time."""
+    sim = SuperPodSim(SimConfig(arch=ARCH, **SMALL),
+                      WorkloadConfig(seed=5, **WL))
+    L, E = sim._recent_counts.shape
+    assert L >= 6, "sim must track several distinct MoE layers"
+    uniform = np.full((L, E), 10.0)
+    sim._recent_counts = uniform.copy()
+    imb_u = sim._moe_imbalance()
+    t_u = sim.cost.decode_iter_time(96, 1024, moe_imbalance=imb_u)
+    hot = uniform.copy()
+    hot[5, 3] += 5000.0                      # hot expert in layer 5 only
+    sim._recent_counts = hot
+    imb_h = sim._moe_imbalance()
+    t_h = sim.cost.decode_iter_time(96, 1024, moe_imbalance=imb_h)
+    assert imb_h[5] > imb_u[5]
+    np.testing.assert_allclose(np.delete(imb_h, 5), np.delete(imb_u, 5))
+    assert t_h > t_u * 1.01, \
+        "a single hot layer must lengthen the priced iteration"
+
+
+def test_per_layer_eplb_beats_layer0_only_map():
+    """§4.5 at full depth: per-layer maps must strictly lower p99 decode
+    iteration time versus replaying layer 0's map on every layer, under
+    a skew whose hot experts differ between layers — with the migration
+    traffic charged to the fabric in both runs."""
+    skew = FaultPlan(expert_skew=1.0)
+    per_layer = run_sim(faults=skew)
+    layer0 = run_sim(sim_kw={"eplb_per_layer": False}, faults=skew)
+    assert per_layer.summary["tpot_p99_s"] < layer0.summary["tpot_p99_s"]
+    assert per_layer.summary["tpot_mean_s"] < layer0.summary["tpot_mean_s"]
+    for rep in (per_layer, layer0):
+        assert rep.summary["n_reconfigs"] > 0
+        assert rep.summary["reconfig_bytes"] > 0, \
+            "migration weight traffic must be accounted"
+        assert rep.summary["reconfig_time_s"] > 0
+
+
+def test_reconfig_swap_reaches_backends_and_is_phased():
+    """Placement swaps land on every simulated backend through the
+    apply_placement contract, only after the phased migration."""
+    sim = SuperPodSim(SimConfig(arch=ARCH, **SMALL),
+                      WorkloadConfig(seed=5, expert_skew=0.8, **WL))
+    sim.run()
+    from repro.serving.eplb import ReconfigState
+    assert sim.reconfig.state == ReconfigState.ENABLED
+    assert sim.reconfig.n_reconfigs == sim.metrics.n_reconfigs > 0
+    assert sim.reconfig.total_migrated_bytes \
+        == sim.metrics.reconfig_bytes > 0
+    for dp in sim.dps:
+        assert dp.backend.n_placement_swaps > 0
+        assert dp.backend.placement is not None
+        assert dp.backend.placement.n_layers == sim.n_layers_sim
+
+
+# ---------------------------------------------------------------------------
 # cost-model backend (the injectable execution seam)
 # ---------------------------------------------------------------------------
 def test_cost_backend_deterministic_decode():
