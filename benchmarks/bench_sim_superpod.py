@@ -12,6 +12,13 @@ CloudMatrix384) and emits:
     EPLB off vs on — the on-run must claw back a chunk of the TPOT
     inflation.
 
+``--deployment moe_attn`` switches every run to the §5.2 MoE-Attention
+disaggregated mode and adds the disagg-only rows: the colocated-vs-
+disagg crossover curve, per-pool utilization / pipeline-bubble
+fraction / A2E-E2A traffic from the serving run, and the
+``DomainPipeline.schedule()`` vs closed-form cross-validation (the run
+FAILS if the two models diverge beyond 10 %).
+
 ``--smoke`` shrinks the workload for CI; ``--json PATH`` dumps the
 deterministic metrics JSON (same seed ⇒ byte-identical file).
 
@@ -44,13 +51,51 @@ CALIBRATION_FILES = ("BENCH_dispatch_combine.json",
                      "BENCH_decode_iteration.json")
 
 _CALIB: tuple = ()
+_DEPLOYMENT = "colocated"
 
 
 def _mk(sim_kw: dict, wl_kw: dict, faults=None) -> SuperPodSim:
     return SuperPodSim(SimConfig(arch=ARCH, total_dies=TOTAL_DIES,
                                  calibration_paths=_CALIB or None,
+                                 deployment=_DEPLOYMENT,
                                  **sim_kw),
                        WorkloadConfig(**wl_kw), faults)
+
+
+def _moe_attn_rows(cost) -> None:
+    """Disagg-only rows: crossover curve + pipeline cross-validation."""
+    from repro.core.moe_attn_disagg import DomainPipeline, \
+        paper_stage_times
+
+    # colocated-vs-disagg crossover (per-die decode throughput)
+    for b in BATCH_SWEEP:
+        t_col = cost.decode_iter_time(b, mean_context=1024)
+        c = cost.moe_attn_decode_iter_time(b, mean_context=1024)
+        emit(f"sim/moe_attn/crossover/b{b}", c.t_iter * 1e6,
+             f"disagg/colocated={c.t_iter / t_col:.3f} "
+             f"bubble={c.bubble_frac:.2f} "
+             f"{'disagg wins' if c.t_iter < t_col else 'colocated wins'}")
+
+    # cross-validation seam: the closed form the sim prices with vs the
+    # discrete DomainPipeline schedule, on the paper's §7.1 stage times
+    # AND on the cost model's own stage times at bpd 96
+    checks = [("paper", paper_stage_times(cost.cfg)),
+              ("bpd96", cost.moe_attn_stage_times(96, 1024))]
+    worst = 0.0
+    for tag, st in checks:
+        t_sched = DomainPipeline(cost.plan, st,
+                                 cost.n_moe_layers).schedule()\
+            .iteration_time
+        t_closed = cost.moe_attn_pipeline(st).iteration_time
+        dev = abs(t_closed - t_sched) / t_sched
+        worst = max(worst, dev)
+        emit(f"sim/moe_attn/xval/{tag}", t_closed * 1e6,
+             f"schedule_us={t_sched * 1e6:.0f} dev={dev * 100:.2f}%")
+    emit("sim/moe_attn/xval/verdict", 0.0,
+         "PASS" if worst <= 0.10 else "FAIL: models diverge >10%")
+    if worst > 0.10:
+        raise RuntimeError(
+            f"pipeline cross-validation diverged {worst * 100:.1f}%")
 
 
 def main(argv=None) -> None:
@@ -59,8 +104,13 @@ def main(argv=None) -> None:
                     help="tiny workload for CI")
     ap.add_argument("--json", default=None,
                     help="write baseline-run metrics JSON here")
+    ap.add_argument("--deployment", default="colocated",
+                    choices=("colocated", "moe_attn"),
+                    help="decode deployment the sim prices (§5 mapping)")
     ap.add_argument("--seed", type=int, default=7)
     args, _ = ap.parse_known_args(argv)
+    global _DEPLOYMENT
+    _DEPLOYMENT = args.deployment
 
     cfg = get_config(ARCH)
     plan = plan_partition(cfg, TOTAL_DIES)
@@ -79,9 +129,15 @@ def main(argv=None) -> None:
     cost = (SuperPodCostModel.from_calibration(cfg, plan, list(_CALIB))
             if _CALIB else SuperPodCostModel(cfg, plan))
     for b in BATCH_SWEEP:
-        t = cost.decode_iter_time(b, mean_context=1024)
+        if args.deployment == "moe_attn":
+            t = cost.moe_attn_decode_iter_time(b, mean_context=1024)\
+                .t_iter
+        else:
+            t = cost.decode_iter_time(b, mean_context=1024)
         emit(f"sim/tpot_curve/b{b}", t * 1e6,
              f"{b / t:.0f} tok/s/die steady-state")
+    if args.deployment == "moe_attn":
+        _moe_attn_rows(cost)
 
     # -- 2. end-to-end simulated serving run ----------------------------
     if args.smoke:
@@ -101,6 +157,13 @@ def main(argv=None) -> None:
          f"{s['throughput_tok_s_per_die']:.0f} tok/s/die over "
          f"{TOTAL_DIES} dies; {s['n_finished']}/{s['n_requests']} done; "
          f"kv_peak={s['kv_peak_usage']:.2f}")
+    if args.deployment == "moe_attn":
+        emit("sim/e2e/pools", 0.0,
+             f"attn_util={s['attn_pool_util']:.2f} "
+             f"expert_util={s['expert_pool_util']:.2f} "
+             f"bubble={s['pipeline_bubble_fraction']:.2f} "
+             f"a2e={s['a2e_bytes'] / 1e9:.1f}GB "
+             f"e2a={s['e2a_bytes'] / 1e9:.1f}GB")
     if args.json:
         with open(args.json, "w") as f:
             f.write(rep.to_json(include_requests=True))

@@ -99,6 +99,20 @@ def combine_half(x, routed_out, shared_out):
     return x + routed_out.astype(x.dtype) + shared_out.astype(x.dtype)
 
 
+def chunk_cap(n_tokens: int, n_dest: int, top_k: int,
+              capacity_factor: float) -> int:
+    """Per-destination bucket capacity for one A2E chunk.
+
+    ``n_tokens * top_k`` assignments spread over ``n_dest`` buckets,
+    headroom ``capacity_factor``, floored at 4 so tiny chunks keep a
+    usable bucket. Tokens beyond a bucket's capacity are dropped by the
+    FIFO capacity rank — the overflow count per destination is exactly
+    ``max(0, count(dest) - capacity)`` (property-tested in
+    tests/test_properties.py)."""
+    return max(int(n_tokens * top_k / max(n_dest, 1) * capacity_factor),
+               4)
+
+
 def pack_dispatch(hn, idx, w, n_experts: int, capacity: int,
                   quantize: bool = True, placement=None):
     """A2E payload packing on the attention die: one fused route-pack
@@ -209,9 +223,9 @@ class DisaggregatedMoEAttention:
         B, S, d = x.shape
         e = cfg.moe
 
-        def chunk_cap(n_tokens: int, n_dest: int) -> int:
-            return max(int(n_tokens * e.top_k / max(n_dest, 1)
-                           * self.capacity_factor), 4)
+        def cap_for(n_tokens: int, n_dest: int) -> int:
+            return chunk_cap(n_tokens, n_dest, e.top_k,
+                             self.capacity_factor)
 
         for layer_i, (mixer, ffn_kind) in enumerate(kinds):
             params_layer, loc = self._block_params(layer_i)
@@ -239,7 +253,7 @@ class DisaggregatedMoEAttention:
                 routed_parts, off, pending = [], 0, []
                 for sz in microbatch_sizes(B, self.microbatches):
                     hn_c = hn[off:off + sz]
-                    cap_c = chunk_cap(sz * S, n_dest)  # per-chunk buckets
+                    cap_c = cap_for(sz * S, n_dest)  # per-chunk buckets
                     buckets, state = pack_dispatch(
                         hn_c, idx[off * S:(off + sz) * S],
                         w[off * S:(off + sz) * S], n_dest, cap_c,
@@ -289,6 +303,14 @@ class StageTimes:
     t_moe: float
     t_e2a: float
 
+    def scaled(self, *, attn: float = 1.0, a2e: float = 1.0,
+               moe: float = 1.0, e2a: float = 1.0) -> "StageTimes":
+        """Per-stage scaling (EPLB imbalance inflates ``moe``; an
+        expert-pool straggler inflates ``moe``; a slow attention die
+        inflates ``attn``)."""
+        return StageTimes(self.t_attn * attn, self.t_a2e * a2e,
+                          self.t_moe * moe, self.t_e2a * e2a)
+
 
 @dataclasses.dataclass
 class PipelineReport:
@@ -301,13 +323,34 @@ class PipelineReport:
 class DomainPipeline:
     """Steady-state schedule: only one DP domain talks to the expert dies
     at a time (A2E/MoE/E2A occupy the expert stage); a domain's attention
-    for microbatch m+1 overlaps other domains' expert phases."""
+    for microbatch m+1 overlaps other domains' expert phases.
 
-    def __init__(self, plan: PartitionPlan, times: StageTimes,
-                 n_layers: int):
+    ``times`` is either one :class:`StageTimes` (uniform layers) or a
+    sequence of ``n_layers`` of them — per-layer EPLB imbalance scales
+    individual layers' ``t_moe``, which is how the simulator prices a
+    hot expert in one layer without touching the others.
+
+    Two views of the same schedule:
+
+    * :meth:`schedule` — the discrete event-by-event timeline (the
+      analytic reference).
+    * :meth:`steady_state` — the closed form the SuperPod simulator
+      prices decode iterations with (``deployment="moe_attn"``).
+
+    They must agree (tests/test_sim_moe_attn.py pins ≤10 % deviation at
+    the paper's 288/480 plan) — the cross-validation seam that keeps the
+    discrete-event engine and the analytical pipeline model honest
+    against each other."""
+
+    def __init__(self, plan: PartitionPlan, times, n_layers: int):
         self.plan = plan
         self.times = times
         self.n_layers = n_layers
+
+    def _layer_times(self, layer: int) -> StageTimes:
+        if isinstance(self.times, StageTimes):
+            return self.times
+        return self.times[layer]
 
     def schedule(self) -> PipelineReport:
         """Three concurrent streams on the expert dies (§5.2): A2E recv,
@@ -316,7 +359,6 @@ class DomainPipeline:
         as pure communication latency. Domains run on disjoint attention
         dies and couple only through the MoE compute resource."""
         nd, mb = self.plan.n_dp_domains, self.plan.microbatches
-        t = self.times
         timeline: List[Tuple[str, int, int, float, float]] = []
         moe_free = 0.0                  # the shared expert-compute stream
         moe_busy = 0.0
@@ -324,24 +366,32 @@ class DomainPipeline:
         core_free = [0.0] * nd                  # attention-die stream
         mb_ready = [[0.0] * mb for _ in range(nd)]   # per-microbatch dep
         for layer in range(self.n_layers):
-            # process domains in clock order (earliest first claims MoE)
-            for d in sorted(range(nd), key=lambda i: core_free[i]):
+            t = self._layer_times(layer)
+            # attention phase: each domain's core stream runs its
+            # microbatches back to back; microbatch m additionally needs
+            # ITS OWN previous-layer combine (other microbatches'
+            # expert phases overlap freely — intra-DP parallelism)
+            arrivals: List[Tuple[float, int, int]] = []
+            for d in range(nd):
                 for m in range(mb):
-                    # microbatch m needs ITS OWN previous-layer combine and
-                    # the domain's attention stream; other microbatches'
-                    # expert phases overlap freely (intra-DP parallelism)
                     a0 = max(core_free[d], mb_ready[d][m])
                     a1 = a0 + t.t_attn
                     core_free[d] = a1
                     attn_busy += t.t_attn
                     timeline.append(("attn", d, m, a0, a1))
-                    arrive = a1 + t.t_a2e
-                    m0 = max(arrive, moe_free)
-                    m1 = m0 + t.t_moe
-                    moe_free = m1
-                    moe_busy += t.t_moe
-                    timeline.append(("moe", d, m, m0, m1))
-                    mb_ready[d][m] = m1 + t.t_e2a
+                    arrivals.append((a1 + t.t_a2e, d, m))
+            # expert phase: the A2E-recv persistent kernel polls all
+            # domains' buffers, so the MoE compute stream services
+            # buckets in ARRIVAL order (not per-domain issue order —
+            # in-order service would head-of-line-block early arrivals
+            # behind a straggling domain's dispatch)
+            for arrive, d, m in sorted(arrivals):
+                m0 = max(arrive, moe_free)
+                m1 = m0 + t.t_moe
+                moe_free = m1
+                moe_busy += t.t_moe
+                timeline.append(("moe", d, m, m0, m1))
+                mb_ready[d][m] = m1 + t.t_e2a
         # the final layer's last microbatch cannot be overlapped (§7.1)
         total = max(max(max(r) for r in mb_ready), moe_free)
         return PipelineReport(
@@ -349,6 +399,47 @@ class DomainPipeline:
             expert_busy=moe_busy / total if total else 0.0,
             attention_busy=attn_busy / (total * nd) if total else 0.0,
             timeline=timeline,
+        )
+
+    def steady_state(self) -> PipelineReport:
+        """Closed-form steady state of the Fig. 19 schedule.
+
+        Per layer, the pipeline advances by whichever resource binds:
+
+        * the domain's attention stream (``mb · t_attn``),
+        * the shared expert-compute stream (``nd · mb · t_moe`` — every
+          domain's microbatches serialize on it),
+        * or a single microbatch's dependency chain
+          (``t_attn + t_a2e + t_moe + t_e2a`` — trampoline latency
+          exposed when nothing else fills the gap, the small-batch
+          regime where disaggregation loses).
+
+        The final layer's un-overlappable drain (§7.1) is added once.
+        ``timeline`` is empty — use :meth:`schedule` for event detail.
+        The simulator prices decode iterations with this form; the
+        discrete :meth:`schedule` cross-validates it."""
+        nd, mb = self.plan.n_dp_domains, self.plan.microbatches
+        total = moe_busy = attn_busy = 0.0
+        last = None
+        for layer in range(self.n_layers):
+            t = self._layer_times(layer)
+            chain = t.t_attn + t.t_a2e + t.t_moe + t.t_e2a
+            period = max(mb * t.t_attn, nd * mb * t.t_moe, chain)
+            total += period
+            moe_busy += nd * mb * t.t_moe
+            attn_busy += nd * mb * t.t_attn
+            last = (t, period)
+        if last is not None:
+            # drain: the last microbatch's A2E→MoE→E2A tail beyond what
+            # the final period already covers past its attention stage
+            t, period = last
+            total += max(0.0, (t.t_a2e + t.t_moe + t.t_e2a)
+                         - max(0.0, period - t.t_attn))
+        return PipelineReport(
+            iteration_time=total,
+            expert_busy=moe_busy / total if total else 0.0,
+            attention_busy=attn_busy / (total * nd) if total else 0.0,
+            timeline=[],
         )
 
 

@@ -6,17 +6,24 @@ tiered heartbeats, ``plan_partition`` — against a modeled CloudMatrix384
 fabric (roofline-derived compute, XCCL link latencies) with model
 execution replaced by cost-model stubs, so scheduler/EPLB/reliability
 behaviour at 384-die scale is testable in CI seconds.
+
+Two deployments share the loop (``SimConfig.deployment``): the
+colocated decode plan and the §5.2 MoE-Attention disaggregated mode
+(separate attention/expert pools, A2E/E2A trampolines, the
+``DomainPipeline`` closed form cross-validated against its discrete
+schedule).
 """
 from repro.sim.events import EventLoop, SimClock
 from repro.sim.fabric import (CostModelBackend, DieModel, FabricModel,
-                              SuperPodCostModel)
+                              MoEAttnIterCost, SuperPodCostModel)
 from repro.sim.workload import WorkloadConfig, WorkloadGen
 from repro.sim.metrics import MetricsCollector, SimReport
 from repro.sim.engine import FaultPlan, SimConfig, SuperPodSim
 
 __all__ = [
     "EventLoop", "SimClock",
-    "CostModelBackend", "DieModel", "FabricModel", "SuperPodCostModel",
+    "CostModelBackend", "DieModel", "FabricModel", "MoEAttnIterCost",
+    "SuperPodCostModel",
     "WorkloadConfig", "WorkloadGen",
     "MetricsCollector", "SimReport",
     "FaultPlan", "SimConfig", "SuperPodSim",

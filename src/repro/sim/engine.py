@@ -14,6 +14,16 @@ stand for ``n_attention / n_sim_dps`` physical dies; the cost model
 prices iterations per-die so latencies are unaffected, and throughput is
 scaled back up by ``die_scale``. Faults target individual sim groups.
 
+Two deployments share this event loop (``SimConfig.deployment``): the
+colocated decode plan prices each DP group's iteration as the serial
+§4.4 layer chain on its own die, while ``"moe_attn"`` (§5.2) prices it
+through the DP-domain pipeline over a SEPARATE shared expert pool —
+stage times from the same cost model, composed by the
+``DomainPipeline`` closed form that ``DomainPipeline.schedule()``
+cross-validates, with A2E/E2A trampoline latency on every microbatch
+chain and pool-aware fault injection (an expert-pool fault degrades
+every attention DP that dispatches to it).
+
 EPLB is simulated PER LAYER: ``n_sim_expert_layers`` representative MoE
 layers (each standing for ``n_moe_layers / L`` physical layers) collect
 independent routing counts, get independent maps from
@@ -52,12 +62,21 @@ MAX_IMBALANCE = 64.0
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Scenario injection. Times are virtual seconds."""
+    """Scenario injection. Times are virtual seconds.
+
+    ``straggler_pool`` / ``dead_pool`` select which resource pool the
+    die index addresses: ``"attention"`` targets a simulated decode DP
+    group (both deployments), ``"expert"`` targets one of the
+    ``moe_attn`` deployment's shared expert-pool dies — every attention
+    DP dispatches to every expert die, so an expert-pool fault degrades
+    the whole pod's MoE stage rather than one DP group."""
     straggler_dp: Optional[int] = None
     straggler_at: float = 1.0
     straggler_slowdown: float = 3.0
+    straggler_pool: str = "attention"
     dead_dp: Optional[int] = None
     dead_at: float = 1.5
+    dead_pool: str = "attention"
     expert_skew: float = 0.0          # Zipf exponent of expert popularity
 
 
@@ -66,6 +85,27 @@ class SimConfig:
     arch: str = "deepseek-v3-671b"
     total_dies: int = 768             # CloudMatrix384: 384 chips × 2 dies
     n_sim_dps: int = 16               # simulated decode DP groups
+    # §5 deployment mapping — which Transformerless composition the
+    # decode event loop prices:
+    #
+    # * ``"colocated"`` (§5.1 baseline / PD-colocated decode): every DP
+    #   group's die runs the whole layer serially — attention, then the
+    #   EP dispatch/MoE/combine — so one iteration is the §4.4
+    #   ping-pong layer chain of ``SuperPodCostModel.decode_iter_time``
+    #   and a die fault touches exactly one DP group.
+    # * ``"moe_attn"`` (§5.2 MoE-Attention disaggregation): attention
+    #   and expert halves live on separate NPU pools bridged by the
+    #   §3.3 A2E/E2A trampolines. DP groups model ATTENTION-pool dies;
+    #   a shared expert pool (folded to ``n_sim_expert_dies`` sim dies)
+    #   serves all DP domains through the Fig. 19 pipeline
+    #   (``moe_attn_decode_iter_time``), EPLB per-layer maps price the
+    #   expert stage, reconfig weight traffic lands on the expert
+    #   pool's UB links, and expert-pool faults degrade every
+    #   attention DP that dispatches to the pool.
+    deployment: str = "colocated"
+    # folded expert-pool dies simulated in the moe_attn deployment
+    # (each stands for plan.n_expert / n_sim_expert_dies physical dies)
+    n_sim_expert_dies: int = 8
     max_batch: int = 96               # decode slots per die (paper bpd)
     max_len: int = 8192
     n_kv_blocks: int = 8192
@@ -116,6 +156,30 @@ class SuperPodSim:
         self.faults = faults or FaultPlan()
         self.model_cfg = get_config(sim_cfg.arch)
         self.plan = plan_partition(self.model_cfg, sim_cfg.total_dies)
+        if sim_cfg.deployment not in ("colocated", "moe_attn"):
+            raise ValueError(f"unknown deployment {sim_cfg.deployment!r}")
+        if sim_cfg.deployment == "moe_attn" and (
+                not self.model_cfg.has_moe or self.plan.n_expert <= 0):
+            raise ValueError(
+                "deployment='moe_attn' needs a MoE model with expert dies")
+        for kind, pool, idx in (
+                ("straggler", self.faults.straggler_pool,
+                 self.faults.straggler_dp),
+                ("dead", self.faults.dead_pool, self.faults.dead_dp)):
+            if pool not in ("attention", "expert"):
+                raise ValueError(f"unknown fault pool {pool!r}")
+            if idx is None:
+                continue
+            if pool == "expert" and sim_cfg.deployment != "moe_attn":
+                raise ValueError(
+                    "expert-pool faults need deployment='moe_attn' — the "
+                    "colocated plan has no separate expert pool to target")
+            n_pool = (sim_cfg.n_sim_expert_dies if pool == "expert"
+                      else sim_cfg.n_sim_dps)
+            if not 0 <= idx < n_pool:
+                raise ValueError(
+                    f"{kind} fault targets {pool} die {idx}, but the sim "
+                    f"folds that pool to {n_pool} dies")
         if sim_cfg.calibration_paths:
             self.cost = SuperPodCostModel.from_calibration(
                 self.model_cfg, self.plan,
@@ -139,6 +203,11 @@ class SuperPodSim:
                                     n_layers=self.n_layers_sim)
 
         self.dies = [DieModel(i) for i in range(sim_cfg.n_sim_dps)]
+        # moe_attn deployment: the shared expert pool, folded like the
+        # DP groups (faults here degrade EVERY attention DP's MoE stage)
+        self.expert_dies = (
+            [DieModel(i) for i in range(sim_cfg.n_sim_expert_dies)]
+            if sim_cfg.deployment == "moe_attn" else [])
         self.dps = [
             DPGroup(i, CostModelBackend(i, self.cost),
                     max_batch=sim_cfg.max_batch, max_len=sim_cfg.max_len,
@@ -167,7 +236,8 @@ class SuperPodSim:
 
         self.die_scale = max(self.plan.n_attention, 1) / sim_cfg.n_sim_dps
         self.metrics = MetricsCollector(n_dies=sim_cfg.total_dies,
-                                        die_scale=self.die_scale)
+                                        die_scale=self.die_scale,
+                                        deployment=sim_cfg.deployment)
         self._step_scheduled = [False] * sim_cfg.n_sim_dps
         self._admit_queue: List[Request] = []
         self._admit_pending = False
@@ -176,6 +246,10 @@ class SuperPodSim:
             if n_experts else None)
         self._map_cache: Dict[int, tuple] = {}
         self._iter_charge: Dict[int, float] = {}
+        # moe_attn: priced-iteration observables held back until the
+        # step actually executes (metrics must not count an iteration a
+        # die death cancelled — keeps them aligned with n_decode_iters)
+        self._pending_pool_cost: Dict[int, object] = {}
         self.n_arrivals = 0
         self.n_finished = 0
         self._arrivals_scheduled = False
@@ -319,16 +393,42 @@ class SuperPodSim:
         return np.asarray([self._layer_imbalance(l, c[l])
                            for l in range(c.shape[0])])
 
+    def _expert_pool_factor(self) -> float:
+        """Effective MoE-stage slowdown from expert-pool health
+        (``moe_attn`` deployment). The EP all-to-all makes every
+        attention DP dispatch to every expert die, so the hottest
+        surviving die gates the expert stage for the WHOLE pod; a dead
+        die's experts fall onto the survivors (capacity factor
+        ``n / n_alive`` — §6.2 redistributes, it does not drop)."""
+        if not self.expert_dies:
+            return 1.0
+        alive = [d for d in self.expert_dies if d.alive]
+        if not alive:
+            return MAX_IMBALANCE          # pool gone: decode crawls
+        cap = len(self.expert_dies) / len(alive)
+        return cap * max(d.slowdown for d in alive)
+
     def _iter_time(self, dp_id: int) -> float:
         dp = self.dps[dp_id]
         positions = [s.position for s in dp.slots if not s.free]
         ctx = int(np.mean(positions)) if positions else 0
-        t = self.cost.decode_iter_time(
-            len(positions), mean_context=max(ctx, 1),
-            moe_imbalance=self._moe_imbalance(),
-            slowdown=self.dies[dp_id].slowdown)
-        # in-flight EPLB migration: this die's next iteration eats the
-        # weight traffic's UB contention (charged once per pass per DP)
+        if self.cfg.deployment == "moe_attn":
+            c = self.cost.moe_attn_decode_iter_time(
+                len(positions), mean_context=max(ctx, 1),
+                moe_imbalance=self._moe_imbalance(),
+                slowdown=self.dies[dp_id].slowdown,
+                expert_slowdown=self._expert_pool_factor())
+            self._pending_pool_cost[dp_id] = c
+            t = c.t_iter
+        else:
+            t = self.cost.decode_iter_time(
+                len(positions), mean_context=max(ctx, 1),
+                moe_imbalance=self._moe_imbalance(),
+                slowdown=self.dies[dp_id].slowdown)
+        # in-flight EPLB migration: the next iteration eats the weight
+        # traffic's UB contention (charged once per pass per DP; in the
+        # moe_attn deployment that traffic rides the expert pool's UB
+        # links — same fabric constants, §4.5)
         return t + self._iter_charge.pop(dp_id, 0.0)
 
     def _kick(self, dp_id: int) -> None:
@@ -344,11 +444,15 @@ class SuperPodSim:
         self._step_scheduled[dp_id] = False
         dp = self.dps[dp_id]
         if not self.dies[dp_id].alive or dp.active == 0:
+            self._pending_pool_cost.pop(dp_id, None)   # step cancelled
             return
         active = dp.active_requests()
         dp.decode_step_all()
         now = self.loop.now
         self.metrics.n_decode_iters += 1
+        c = self._pending_pool_cost.pop(dp_id, None)
+        if c is not None:
+            self.metrics.on_moe_attn_iter(c)
         for req in active:
             self.metrics.on_token(now, req)
             if req.state == RequestState.FINISHED:
@@ -459,18 +563,28 @@ class SuperPodSim:
                                self._kv_tick)
 
     def _schedule_faults(self) -> None:
+        """Pool-aware injection: attention-pool faults hit one DP group
+        (heartbeat failover recovers its requests); expert-pool faults
+        hit the shared pool and degrade every attention DP's MoE stage
+        through ``_expert_pool_factor`` — no requests move, the whole
+        pod's TPOT stretches instead."""
         f = self.faults
         if f.straggler_dp is not None:
-            def slow():
-                self.dies[f.straggler_dp].slowdown = f.straggler_slowdown
-            self.loop.schedule_at(f.straggler_at,
-                                  f"fault:straggler:{f.straggler_dp}",
-                                  slow)
+            pool = (self.expert_dies if f.straggler_pool == "expert"
+                    else self.dies)
+            def slow(pool=pool):
+                pool[f.straggler_dp].slowdown = f.straggler_slowdown
+            self.loop.schedule_at(
+                f.straggler_at,
+                f"fault:straggler:{f.straggler_pool}:{f.straggler_dp}",
+                slow)
         if f.dead_dp is not None:
-            def kill():
-                self.dies[f.dead_dp].alive = False
-            self.loop.schedule_at(f.dead_at, f"fault:dead:{f.dead_dp}",
-                                  kill)
+            pool = (self.expert_dies if f.dead_pool == "expert"
+                    else self.dies)
+            def kill(pool=pool):
+                pool[f.dead_dp].alive = False
+            self.loop.schedule_at(
+                f.dead_at, f"fault:dead:{f.dead_pool}:{f.dead_dp}", kill)
 
     # ------------------------------------------------------------------
     def run(self) -> SimReport:

@@ -44,6 +44,13 @@ HBM_EFF = 0.85
 INT8_MOE_SPEEDUP = 2.0
 # host-side per-iteration overhead (sampling, scheduling, launch)
 ITER_OVERHEAD = 1.0e-3
+# §5.2 disaggregated expert pool: fixed per-(domain, microbatch) cost of
+# one expert-stage visit (persistent-kernel poll + grouped-GEMM launch +
+# A2E doorbell handling on the expert die). The colocated deployment
+# fuses this into the layer program; paying it nd·mb times per layer is
+# what makes MoE-Attention disaggregation lose at small batch-per-die
+# (MegaScale-Infer's dispatch-latency regime).
+EXPERT_OP_OVERHEAD = 40.0e-6
 
 
 @dataclasses.dataclass
@@ -54,6 +61,21 @@ class DieModel:
     die_id: int
     slowdown: float = 1.0
     alive: bool = True
+
+
+@dataclasses.dataclass
+class MoEAttnIterCost:
+    """Priced decode iteration of one attention-pool DP group under the
+    ``moe_attn`` deployment, plus the per-pool observables the metrics
+    collector aggregates (utilizations are fractions of the MoE-layer
+    pipeline window; byte counts are per attention die per iteration)."""
+    t_iter: float
+    t_pipeline: float          # MoE-layer pipeline share of the iteration
+    attn_busy_frac: float      # attention-pool busy fraction of pipeline
+    expert_busy_frac: float    # expert-compute stream busy fraction
+    bubble_frac: float         # expert-pool idle share (pipeline bubbles)
+    a2e_bytes: int             # INT8 payload + scales dispatched
+    e2a_bytes: int             # bf16 combine payload returned
 
 
 @dataclasses.dataclass
@@ -95,6 +117,7 @@ class SuperPodCostModel:
         self.hbm_eff = HBM_EFF
         self.int8_moe_speedup = INT8_MOE_SPEEDUP
         self.iter_overhead = ITER_OVERHEAD
+        self.expert_op_overhead = EXPERT_OP_OVERHEAD
         # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
         # t_comb_s)] interpolated in decode_iter_time when present
         self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
@@ -120,6 +143,9 @@ class SuperPodCostModel:
           ``N`` → replaces ``dispatch_latency_model`` by interpolation.
         * ``decode/iter_overhead`` — measured host-side per-iteration
           overhead in µs → replaces ``ITER_OVERHEAD``.
+        * ``disagg/expert_op_overhead`` — measured per-(domain,
+          microbatch) expert-stage visit cost in µs → replaces
+          ``EXPERT_OP_OVERHEAD`` in the ``moe_attn`` deployment rows.
 
         Extra keyword args override constants directly
         (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
@@ -144,6 +170,8 @@ class SuperPodCostModel:
                 comm.append((bpd, t_disp, t_comb))
             elif name == "decode/iter_overhead":
                 self.iter_overhead = float(row["us_per_call"]) * 1e-6
+            elif name == "disagg/expert_op_overhead":
+                self.expert_op_overhead = float(row["us_per_call"]) * 1e-6
         if comm:
             self._calib_comm = sorted(comm)
         for k, v in const_overrides.items():
@@ -265,6 +293,15 @@ class SuperPodCostModel:
             / (HBM_BW * self.hbm_eff)
         return max(attn_comp, attn_mem)
 
+    def _dense_ffn_time(self, b: float) -> float:
+        """Dense-FFN term (per die, per dense layer): FFN GEMM FLOPs vs
+        the bf16 weight stream — shared by both deployments' pricing so
+        their dense layers cannot drift apart."""
+        return max(b * self.dense_ffn_flops_per_token
+                   / (PEAK_FLOPS * self.decode_mfu),
+                   3.0 * self.cfg.d_model * self.cfg.d_ff * 2.0
+                   / (HBM_BW * self.hbm_eff))
+
     def _moe_time(self, b: float, moe_imbalance: float,
                   weight_amort: float = 1.0) -> float:
         e = self.cfg.moe
@@ -367,16 +404,126 @@ class SuperPodCostModel:
         else:
             t_moe_total = self.n_moe_layers * t_attn
 
-        t_ffn = max(b * self.dense_ffn_flops_per_token
-                    / (PEAK_FLOPS * self.decode_mfu),
-                    3.0 * self.cfg.d_model * self.cfg.d_ff * 2.0
-                    / (HBM_BW * self.hbm_eff))
-        t_dense = t_attn + t_ffn
+        t_dense = t_attn + self._dense_ffn_time(b)
 
         t_iter = (t_moe_total
                   + self.n_dense_layers * t_dense
                   + self.iter_overhead)
         return t_iter * slowdown
+
+    # ------------------------------------------------------------------
+    # MoE-Attention disaggregated deployment (§5.2, SimConfig.deployment
+    # = "moe_attn"): stage-level pricing through the DomainPipeline
+    # closed form instead of the per-die serial layer chain above
+    # ------------------------------------------------------------------
+    def moe_attn_stage_times(self, batch_per_die: float,
+                             mean_context: int = 0,
+                             moe_imbalance: float = 1.0,
+                             microbatches: Optional[int] = None):
+        """Per-(domain, microbatch) :class:`StageTimes` of the §5.2
+        pipeline at this plan: attention-die compute, A2E trampoline
+        latency (measured dispatch curve when calibrated, analytic
+        ``a2e_latency_model`` otherwise), expert-die MoE compute for ONE
+        domain's microbatch, E2A return."""
+        from repro.core.moe_attn_disagg import StageTimes
+        plan = self.plan
+        ctx = mean_context or self.mean_context
+        mb = plan.microbatches if microbatches is None else microbatches
+        mb = max(int(mb), 1)
+        b_mb = batch_per_die / mb
+        t_attn = self._attn_time(b_mb, ctx, weight_amort=mb)
+        t_a2e, t_e2a = self._comm_times(b_mb)
+        return StageTimes(t_attn, t_a2e,
+                          self._moe_stage_time(b_mb, moe_imbalance, mb),
+                          t_e2a)
+
+    def _moe_stage_time(self, b_mb: float, imb: float, mb: int) -> float:
+        """Expert-pool time for ONE (domain, microbatch) visit: the
+        tokens of one domain's attention dies, spread over the whole
+        expert pool (cf. :meth:`_moe_time`, which prices all domains'
+        tokens at once for the colocated serial chain). Expert weights
+        stream from HBM once per layer, amortized over the layer's
+        ``nd·mb`` visits; every visit pays the fixed launch/doorbell
+        overhead the colocated path fuses away."""
+        e = self.cfg.moe
+        plan = self.plan
+        nd = max(plan.n_dp_domains, 1)
+        tokens_per_exp_die = (b_mb * plan.dp_groups_per_domain * e.top_k
+                              / max(plan.n_expert, 1))
+        comp = (tokens_per_exp_die * imb * self.moe_flops_per_token
+                / max(e.top_k, 1)) \
+            / (PEAK_FLOPS * self.decode_mfu * self.int8_moe_speedup)
+        mem = self.moe_weight_bytes_per_die / (nd * mb) \
+            / (HBM_BW * self.hbm_eff)
+        return max(comp, mem) + self.expert_op_overhead
+
+    def moe_attn_pipeline(self, times, n_layers: Optional[int] = None):
+        """The pricing seam: run the closed-form
+        :meth:`~repro.core.moe_attn_disagg.DomainPipeline.steady_state`
+        over ``times`` (one :class:`StageTimes` or a per-layer sequence)
+        at this plan. ``DomainPipeline.schedule()`` on the same inputs
+        is the discrete reference the tests cross-validate against."""
+        from repro.core.moe_attn_disagg import DomainPipeline
+        return DomainPipeline(
+            self.plan, times,
+            self.n_moe_layers if n_layers is None else n_layers
+        ).steady_state()
+
+    def moe_attn_decode_iter_time(self, batch_per_die: int,
+                                  mean_context: int = 0,
+                                  moe_imbalance=1.0,
+                                  slowdown: float = 1.0,
+                                  expert_slowdown: float = 1.0,
+                                  microbatches: Optional[int] = None
+                                  ) -> MoEAttnIterCost:
+        """One decode iteration of an attention-pool DP group under the
+        MoE-Attention disaggregated deployment.
+
+        The MoE layers run through the DP-domain pipeline closed form
+        (expert pool shared by all domains, A2E/E2A trampoline latency
+        on every microbatch chain); dense layers and the per-iteration
+        overhead stay on the attention pool exactly as in
+        :meth:`decode_iter_time`. ``moe_imbalance`` follows the same
+        scalar-or-per-layer-sequence folding contract;
+        ``expert_slowdown`` scales every layer's expert stage (a hot or
+        degraded expert-pool die gates ALL attention DPs — pool-aware
+        fault injection), while ``slowdown`` is this DP's own
+        attention-die factor."""
+        if batch_per_die <= 0:
+            return MoEAttnIterCost(self.iter_overhead, 0.0, 0.0, 0.0,
+                                   0.0, 0, 0)
+        ctx = mean_context or self.mean_context
+        b = batch_per_die
+        if isinstance(moe_imbalance, (list, tuple, np.ndarray)):
+            imbs = [float(v) for v in np.asarray(moe_imbalance).ravel()]
+        else:
+            imbs = [float(moe_imbalance)]
+        distinct = [
+            self.moe_attn_stage_times(b, ctx, v, microbatches)
+            .scaled(moe=expert_slowdown) for v in imbs]
+        L = max(self.n_moe_layers, 1)
+        m = len(distinct)
+        # folded per-layer view: entry g covers layers [g·L/m, (g+1)·L/m)
+        times = [distinct[min(layer * m // L, m - 1)]
+                 for layer in range(self.n_moe_layers)]
+        rep = self.moe_attn_pipeline(times)
+        t_pipe = rep.iteration_time
+
+        t_dense = self._attn_time(b, ctx) + self._dense_ffn_time(b)
+        t_iter = (t_pipe + self.n_dense_layers * t_dense
+                  + self.iter_overhead) * slowdown
+
+        e = self.cfg.moe
+        d = self.cfg.d_model
+        n_assign = b * max(e.top_k, 1) * self.n_moe_layers
+        return MoEAttnIterCost(
+            t_iter=t_iter,
+            t_pipeline=t_pipe * slowdown,
+            attn_busy_frac=rep.attention_busy,
+            expert_busy_frac=rep.expert_busy,
+            bubble_frac=max(0.0, 1.0 - rep.expert_busy),
+            a2e_bytes=int(n_assign * (d + 4)),   # int8 rows + fp32 scale
+            e2a_bytes=int(n_assign * d * 2))     # bf16 combine payload
 
 
 # ---------------------------------------------------------------------------

@@ -59,11 +59,15 @@ class SimReport:
 
 
 class MetricsCollector:
-    def __init__(self, n_dies: int, die_scale: float = 1.0):
+    def __init__(self, n_dies: int, die_scale: float = 1.0,
+                 deployment: str = "colocated"):
         """``die_scale``: physical dies each simulated DP group stands
-        for (>1 when the sim folds statistically-identical groups)."""
+        for (>1 when the sim folds statistically-identical groups).
+        ``deployment`` tags the report and enables the per-pool rows
+        the ``moe_attn`` mode accumulates via :meth:`on_moe_attn_iter`."""
         self.n_dies = n_dies
         self.die_scale = die_scale
+        self.deployment = deployment
         self.records: Dict[int, ReqRecord] = {}
         self.kv_samples: List[Tuple[float, float]] = []
         self.n_eplb_passes = 0
@@ -72,6 +76,14 @@ class MetricsCollector:
         self.reconfig_time_s = 0.0    # fabric time charged to migrations
         self.n_failovers = 0
         self.n_decode_iters = 0
+        # moe_attn deployment: per-pool accounting over the MoE-layer
+        # pipeline windows (seconds are virtual, per simulated DP; byte
+        # counts are scaled to the whole pod by die_scale)
+        self.pipeline_time_s = 0.0
+        self.attn_busy_s = 0.0
+        self.expert_busy_s = 0.0
+        self.a2e_bytes = 0
+        self.e2a_bytes = 0
 
     # ------------------------------------------------------------------
     def on_arrival(self, t: float, req) -> None:
@@ -96,6 +108,16 @@ class MetricsCollector:
 
     def sample_kv(self, t: float, usage: float) -> None:
         self.kv_samples.append((round(t, 9), round(usage, 6)))
+
+    def on_moe_attn_iter(self, cost) -> None:
+        """Accumulate one priced disaggregated iteration
+        (:class:`~repro.sim.fabric.MoEAttnIterCost`): pool busy time
+        over the pipeline window and pod-scaled trampoline bytes."""
+        self.pipeline_time_s += cost.t_pipeline
+        self.attn_busy_s += cost.attn_busy_frac * cost.t_pipeline
+        self.expert_busy_s += cost.expert_busy_frac * cost.t_pipeline
+        self.a2e_bytes += int(cost.a2e_bytes * self.die_scale)
+        self.e2a_bytes += int(cost.e2a_bytes * self.die_scale)
 
     # ------------------------------------------------------------------
     def report(self, t_end: float, trace: List[Tuple[float, str]],
@@ -145,6 +167,22 @@ class MetricsCollector:
             "reconfig_time_s": round(self.reconfig_time_s, 9),
             "n_failovers": self.n_failovers,
             "n_decode_iters": self.n_decode_iters,
+            # per-pool view (moe_attn deployment; zeros when colocated):
+            # utilizations are busy fractions of the MoE-layer pipeline
+            # windows, bubble is the expert pool's idle share — the
+            # MegaScale-style cost of disaggregating at small batch
+            "deployment": self.deployment,
+            "attn_pool_util": round(
+                self.attn_busy_s / self.pipeline_time_s
+                if self.pipeline_time_s else 0.0, 6),
+            "expert_pool_util": round(
+                self.expert_busy_s / self.pipeline_time_s
+                if self.pipeline_time_s else 0.0, 6),
+            "pipeline_bubble_fraction": round(
+                1.0 - self.expert_busy_s / self.pipeline_time_s
+                if self.pipeline_time_s else 0.0, 6),
+            "a2e_bytes": int(self.a2e_bytes),
+            "e2a_bytes": int(self.e2a_bytes),
         }
         per_request = [
             {"req_id": r.req_id, "arrival": r.arrival,

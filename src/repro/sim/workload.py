@@ -9,8 +9,14 @@ Expert popularity is PER LAYER (``n_layers`` independent shuffles of
 the same Zipf profile — routers of different layers specialize on
 different experts), which is what makes per-layer EPLB maps matter: a
 single layer's map cannot balance the other layers' hot experts.
-All randomness flows from one ``numpy`` Generator — same seed, same
-trace.
+
+The same per-layer counts drive BOTH deployment modes' pricing: the
+colocated path scales each layer's serial MoE term, the ``moe_attn``
+path scales that layer's expert-stage time inside the DP-domain
+pipeline (where mild imbalance can hide under attention until the
+expert pool saturates — the per-pool utilization/bubble metrics make
+that visible). All randomness flows from one ``numpy`` Generator —
+same seed, same trace.
 """
 from __future__ import annotations
 

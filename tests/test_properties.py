@@ -240,6 +240,73 @@ def test_route_pack_matches_reference_chain(t, k, e, cap, d, quantize,
 
 
 # ---------------------------------------------------------------------------
+# A2E payload packing (§5.2 disaggregated dispatch)
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 24),
+    k=st.integers(1, 4),
+    e=st.integers(1, 10),
+    cap=st.integers(1, 16),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 10_000),
+)
+def test_pack_dispatch_capacity_and_overflow(t, k, e, cap, d, seed):
+    """The A2E packer (attention-die side of the MoE-Attention split):
+    1) no destination bucket ever exceeds its capacity, 2) every kept
+    assignment lands in exactly one bucket slot and carries its token's
+    payload, 3) the dropped count is exactly the overflow formula
+    ``sum_e max(0, count(e) - capacity)`` (FIFO capacity rank)."""
+    from repro.core.moe_attn_disagg import pack_dispatch
+    rng = np.random.default_rng(seed)
+    hn = jnp.asarray(rng.standard_normal((t, 1, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    w = jnp.asarray(rng.random((t, k)), jnp.float32)
+    buckets, state = pack_dispatch(hn, idx, w, e, cap, quantize=False)
+    flat_idx, rank, keep, tok_of, flat_w = map(np.asarray, state)
+    n = t * k
+    assert flat_idx.shape == rank.shape == keep.shape == (n,)
+    counts = np.bincount(flat_idx, minlength=e)
+    # 1) capacity never exceeded, ranks inside the bucket
+    for dst in range(e):
+        assert int(np.sum(keep & (flat_idx == dst))) <= cap
+    assert np.all(rank[keep] >= 0) and np.all(rank[keep] < cap)
+    # 2) kept assignments occupy unique (bucket, slot) cells holding
+    # their token's row; weights ride outside untouched
+    slots = list(zip(flat_idx[keep].tolist(), rank[keep].tolist()))
+    assert len(slots) == len(set(slots)), "two tokens in one bucket slot"
+    bk = np.asarray(buckets)
+    hf = np.asarray(hn.reshape(t, d))
+    for a in np.nonzero(keep)[0]:
+        np.testing.assert_array_equal(bk[flat_idx[a], rank[a]],
+                                      hf[tok_of[a]])
+    np.testing.assert_array_equal(flat_w, np.asarray(w).reshape(n))
+    # 3) dropped count == the overflow formula
+    dropped = int(np.sum(~keep))
+    assert dropped == int(np.sum(np.maximum(counts - cap, 0)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 4096),
+    nd=st.integers(1, 512),
+    k=st.integers(1, 8),
+    cf=st.floats(0.25, 16.0),
+)
+def test_chunk_cap_bounds(n, nd, k, cf):
+    """Per-chunk bucket capacity: floored at 4, covers a perfectly
+    balanced routing whenever the headroom factor is ≥ 1, and is
+    monotone in tokens and headroom."""
+    from repro.core.moe_attn_disagg import chunk_cap
+    cap = chunk_cap(n, nd, k, cf)
+    assert cap >= 4
+    if cf >= 1.0:
+        assert cap >= int(n * k / nd)
+    assert chunk_cap(n + 1, nd, k, cf) >= cap
+    assert chunk_cap(n, nd, k, cf * 2) >= cap
+
+
+# ---------------------------------------------------------------------------
 # XCCL ring-buffer protocol (§3.1)
 # ---------------------------------------------------------------------------
 @settings(max_examples=30, deadline=None)

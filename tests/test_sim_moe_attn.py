@@ -1,0 +1,301 @@
+"""MoE-Attention disaggregated deployment in the SuperPod simulator.
+
+Covers the §5.2 mode end to end — determinism, the colocated-vs-disagg
+crossover at the paper's 288/480 plan, the ``DomainPipeline`` cross-
+validation seam (discrete schedule vs the closed form the sim prices
+with), per-layer EPLB pricing parity with the colocated path, and
+pool-aware fault injection. Cost-model backend only — fast tier.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.moe_attn_disagg import DomainPipeline, paper_stage_times
+from repro.core.transformerless import plan_partition
+from repro.sim import (FaultPlan, SimConfig, SuperPodCostModel,
+                       SuperPodSim, WorkloadConfig)
+
+ARCH = "deepseek-v3-671b"
+SMALL = dict(n_sim_dps=4, eplb_interval_s=0.5, deployment="moe_attn")
+WL = dict(arrival_rate=40.0, duration_s=0.6)
+
+
+def run_sim(sim_kw=None, wl_kw=None, faults=None):
+    sim = SuperPodSim(SimConfig(arch=ARCH, **{**SMALL, **(sim_kw or {})}),
+                      WorkloadConfig(**{**WL, "seed": 5, **(wl_kw or {})}),
+                      faults)
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_same_seed_identical_trace_and_metrics():
+    a = run_sim()
+    b = run_sim()
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json(include_requests=True) \
+        == b.to_json(include_requests=True)
+
+
+def test_deployments_diverge_but_both_drain():
+    dis = run_sim()
+    col = run_sim(sim_kw={"deployment": "colocated"})
+    assert dis.trace_hash != col.trace_hash
+    for rep in (dis, col):
+        assert rep.summary["n_finished"] == rep.summary["n_requests"] > 0
+    assert dis.summary["deployment"] == "moe_attn"
+    assert col.summary["deployment"] == "colocated"
+
+
+def test_unknown_deployment_rejected():
+    with pytest.raises(ValueError):
+        SuperPodSim(SimConfig(arch=ARCH, deployment="pd_disagg"),
+                    WorkloadConfig(**WL))
+
+
+# ---------------------------------------------------------------------------
+# colocated-vs-disagg crossover at the 288/480 plan
+# ---------------------------------------------------------------------------
+def test_throughput_crossover_at_288_480_plan():
+    """Disaggregation wins at large batch-per-die (expert compute and
+    trampoline comm hide under attention in the DP-domain pipeline) and
+    loses at small batch, where the per-microbatch A2E/E2A trampoline
+    latency and expert-stage launch overheads are exposed as pipeline
+    bubbles (the MegaScale-Infer dispatch-latency regime)."""
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, 768)
+    assert plan.n_expert == 288 and plan.n_attention == 480
+    cost = SuperPodCostModel(cfg, plan)
+
+    ratios = {}
+    for b in (2, 4, 16, 64, 96):
+        t_col = cost.decode_iter_time(b, mean_context=1024)
+        c = cost.moe_attn_decode_iter_time(b, mean_context=1024)
+        ratios[b] = c.t_iter / t_col
+    # large batch: disagg strictly faster (higher tok/s/die)
+    assert ratios[96] < 0.8, f"disagg must win at bpd 96: {ratios[96]:.3f}"
+    assert ratios[64] < 0.9
+    # small batch: trampoline latency dominates, disagg loses
+    for b in (2, 4):
+        assert ratios[b] > 1.005, \
+            f"disagg must lose at bpd {b}: {ratios[b]:.3f}"
+    # the disadvantage shrinks monotonically toward the crossover
+    assert ratios[2] >= ratios[16] >= ratios[64] >= ratios[96]
+    # bubbles mirror it: expert pool idles at small batch, saturates big
+    bub_small = cost.moe_attn_decode_iter_time(4, 1024).bubble_frac
+    bub_big = cost.moe_attn_decode_iter_time(96, 1024).bubble_frac
+    assert bub_small > 0.3 > bub_big >= 0.0
+
+
+def test_zero_batch_prices_overhead_only():
+    cfg = get_config(ARCH)
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    c = cost.moe_attn_decode_iter_time(0)
+    assert c.t_iter == cost.iter_overhead
+    assert c.a2e_bytes == 0 and c.e2a_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# the cross-validation seam: discrete DomainPipeline.schedule() vs the
+# closed form the sim prices iterations with
+# ---------------------------------------------------------------------------
+def test_sim_pricing_matches_domain_pipeline_schedule():
+    """Acceptance gate: ``SuperPodSim(deployment="moe_attn")`` prices an
+    iteration through ``cost.moe_attn_pipeline`` (the DomainPipeline
+    closed form); run on ``paper_stage_times`` it must agree with the
+    discrete ``DomainPipeline.schedule()`` to within 10 % at the
+    288/480 plan — the analytical model and the event engine check
+    each other."""
+    sim = SuperPodSim(SimConfig(arch=ARCH, **SMALL),
+                      WorkloadConfig(seed=5, **WL))
+    st = paper_stage_times(sim.model_cfg)
+    n_layers = sim.cost.n_moe_layers
+    t_sched = DomainPipeline(sim.plan, st, n_layers).schedule()\
+        .iteration_time
+    t_sim = sim.cost.moe_attn_pipeline(st).iteration_time
+    assert abs(t_sim - t_sched) / t_sched <= 0.10, \
+        f"closed {t_sim * 1e3:.2f}ms vs schedule {t_sched * 1e3:.2f}ms"
+    # same gate on the cost model's own stage times across the sweep
+    for b in (8, 48, 96, 128):
+        stb = sim.cost.moe_attn_stage_times(b, 1024)
+        ts = DomainPipeline(sim.plan, stb, n_layers).schedule()\
+            .iteration_time
+        tc = sim.cost.moe_attn_pipeline(stb).iteration_time
+        assert abs(tc - ts) / ts <= 0.10, f"bpd {b} diverged"
+
+
+def test_pipeline_views_agree_per_layer_times():
+    """The cross-validation holds with NON-uniform per-layer stage
+    times (a hot layer's t_moe scaled up) — the folding the per-layer
+    EPLB pricing relies on."""
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, 768)
+    cost = SuperPodCostModel(cfg, plan)
+    base = cost.moe_attn_stage_times(96, 1024)
+    times = [base.scaled(moe=8.0) if layer % 7 == 0 else base
+             for layer in range(cost.n_moe_layers)]
+    t_sched = DomainPipeline(plan, times, cost.n_moe_layers).schedule()\
+        .iteration_time
+    t_closed = cost.moe_attn_pipeline(times).iteration_time
+    assert abs(t_closed - t_sched) / t_sched <= 0.10
+
+
+# ---------------------------------------------------------------------------
+# per-layer EPLB pricing parity with the colocated path
+# ---------------------------------------------------------------------------
+def test_hot_expert_in_one_layer_moves_disagg_iter_time():
+    """Mirror of the colocated regression in test_sim.py: the disagg
+    mode prices imbalance with the same per-layer ``_layer_imbalance``
+    semantics, so a hot expert in (folded) layer 5 — and only there —
+    must lengthen the disaggregated iteration."""
+    sim = SuperPodSim(SimConfig(arch=ARCH, **SMALL),
+                      WorkloadConfig(seed=5, **WL))
+    L, E = sim._recent_counts.shape
+    assert L >= 6
+    uniform = np.full((L, E), 10.0)
+    sim._recent_counts = uniform.copy()
+    imb_u = sim._moe_imbalance()
+    t_u = sim.cost.moe_attn_decode_iter_time(
+        96, 1024, moe_imbalance=imb_u).t_iter
+    hot = uniform.copy()
+    hot[5, 3] += 5000.0
+    sim._recent_counts = hot
+    imb_h = sim._moe_imbalance()
+    t_h = sim.cost.moe_attn_decode_iter_time(
+        96, 1024, moe_imbalance=imb_h).t_iter
+    assert imb_h[5] > imb_u[5]
+    np.testing.assert_allclose(np.delete(imb_h, 5), np.delete(imb_u, 5))
+    assert t_h > t_u * 1.05, \
+        "a single hot layer must lengthen the disagg iteration"
+    # scalar imbalance path stays float-identical to a uniform vector
+    t_scalar = sim.cost.moe_attn_decode_iter_time(
+        96, 1024, moe_imbalance=1.0).t_iter
+    t_vec = sim.cost.moe_attn_decode_iter_time(
+        96, 1024, moe_imbalance=np.ones(L)).t_iter
+    assert t_scalar == t_vec
+
+
+def test_eplb_reduces_skew_tpot_in_disagg_mode():
+    skew = FaultPlan(expert_skew=1.0)
+    off = run_sim(sim_kw={"eplb_enabled": False}, faults=skew)
+    on = run_sim(faults=skew)
+    base = run_sim()
+    t_base = base.summary["tpot_mean_s"]
+    t_off = off.summary["tpot_mean_s"]
+    t_on = on.summary["tpot_mean_s"]
+    assert t_off > t_base * 1.2, "skew must inflate disagg TPOT"
+    assert t_on < t_off * 0.9, "EPLB must claw part of it back"
+    assert on.summary["n_reconfigs"] > 0
+    assert on.summary["reconfig_bytes"] > 0, \
+        "migration weight traffic must ride the expert pool's UB links"
+
+
+# ---------------------------------------------------------------------------
+# pool-aware fault injection
+# ---------------------------------------------------------------------------
+def test_expert_pool_straggler_degrades_every_dp():
+    """A throttling EXPERT-pool die gates the shared MoE stage: every
+    attention DP's TPOT stretches (not just one group's, as an
+    attention-pool straggler would), and no requests are lost."""
+    base = run_sim()
+    slow = run_sim(faults=FaultPlan(straggler_dp=1, straggler_at=0.1,
+                                    straggler_slowdown=4.0,
+                                    straggler_pool="expert"))
+    assert slow.summary["tpot_mean_s"] > base.summary["tpot_mean_s"] * 1.3
+    assert slow.summary["n_finished"] == slow.summary["n_requests"]
+    assert slow.summary["n_failovers"] == 0
+    # pod-wide: the p50 moves, not only the tail a one-DP fault shifts
+    assert slow.summary["tpot_p50_s"] > base.summary["tpot_p50_s"] * 1.2
+
+
+def test_dead_expert_die_degrades_pod_without_failover():
+    """Killing an expert-pool die redistributes its experts onto the
+    survivors: capacity shrinks for EVERY attention DP (TPOT up), but
+    no KV state is lost, so nothing fails over and everything drains."""
+    kw = {"n_sim_expert_dies": 4}
+    base = run_sim(sim_kw=kw)
+    dead = run_sim(sim_kw=kw,
+                   faults=FaultPlan(dead_dp=2, dead_at=0.15,
+                                    dead_pool="expert"))
+    assert dead.summary["tpot_mean_s"] > base.summary["tpot_mean_s"]
+    assert dead.summary["n_finished"] == dead.summary["n_requests"]
+    assert dead.summary["n_failovers"] == 0
+
+
+def test_dead_attention_dp_still_fails_over_in_disagg_mode():
+    """Attention-pool faults keep the colocated semantics: the tiered
+    heartbeat detects the dead DP and its requests recompute elsewhere
+    (§6.2), independent of the deployment mode."""
+    rep = run_sim(faults=FaultPlan(dead_dp=1, dead_at=0.15))
+    s = rep.summary
+    assert s["n_finished"] == s["n_requests"], "failover must drain all"
+    assert s["n_failovers"] > 0
+    failed = [r for r in rep.per_request if r["failovers"] > 0]
+    assert failed and all(r["tpot"] is not None for r in failed)
+
+
+def test_expert_pool_faults_rejected_in_colocated_mode():
+    """The colocated topology has no separate expert pool — targeting
+    one must fail loudly instead of silently hitting a DP group."""
+    with pytest.raises(ValueError, match="expert-pool faults"):
+        SuperPodSim(SimConfig(arch=ARCH),
+                    WorkloadConfig(**WL),
+                    FaultPlan(dead_dp=1, dead_pool="expert"))
+    with pytest.raises(ValueError, match="fault pool"):
+        SuperPodSim(SimConfig(arch=ARCH),
+                    WorkloadConfig(**WL),
+                    FaultPlan(straggler_dp=0, straggler_pool="trampoline"))
+    # an unarmed expert pool selector is harmless (defaults untouched)
+    SuperPodSim(SimConfig(arch=ARCH), WorkloadConfig(**WL),
+                FaultPlan(dead_pool="expert"))
+
+
+def test_combined_faults_hit_their_own_pools():
+    """Straggler and dead faults aimed at DIFFERENT pools in one plan
+    must each land on their own pool (regression: the two injection
+    closures shared a late-bound ``pool`` variable, so arming both sent
+    the straggler to the dead fault's pool)."""
+    sim = SuperPodSim(
+        SimConfig(arch=ARCH, **SMALL), WorkloadConfig(seed=5, **WL),
+        FaultPlan(straggler_dp=1, straggler_at=0.1,
+                  straggler_slowdown=3.0, straggler_pool="attention",
+                  dead_dp=2, dead_at=0.15, dead_pool="expert"))
+    sim.run()
+    assert sim.dies[1].slowdown == 3.0, "straggler must hit attention"
+    assert all(d.slowdown == 1.0 for d in sim.expert_dies)
+    assert not sim.expert_dies[2].alive, "death must hit expert pool"
+    assert all(d.alive for d in sim.dies)
+
+
+def test_fault_indices_bounds_checked_per_pool():
+    """The two pools fold to different sizes; a die index valid for one
+    must fail at CONSTRUCTION when aimed at the other, not IndexError
+    mid-run inside the event loop."""
+    with pytest.raises(ValueError, match="folds that pool"):
+        SuperPodSim(SimConfig(arch=ARCH, **SMALL),      # 8 expert dies
+                    WorkloadConfig(**WL),
+                    FaultPlan(dead_dp=10, dead_pool="expert"))
+    with pytest.raises(ValueError, match="folds that pool"):
+        SuperPodSim(SimConfig(arch=ARCH, **SMALL),      # 4 sim DPs
+                    WorkloadConfig(**WL),
+                    FaultPlan(straggler_dp=7))
+
+
+# ---------------------------------------------------------------------------
+# per-pool metrics
+# ---------------------------------------------------------------------------
+def test_per_pool_metrics_reported():
+    rep = run_sim()
+    s = rep.summary
+    assert s["deployment"] == "moe_attn"
+    assert 0.0 < s["attn_pool_util"] <= 1.0
+    assert 0.0 < s["expert_pool_util"] <= 1.0
+    assert s["pipeline_bubble_fraction"] == pytest.approx(
+        1.0 - s["expert_pool_util"], abs=1e-6)
+    assert s["a2e_bytes"] > 0 and s["e2a_bytes"] > 0
+    # E2A returns bf16 rows for int8 dispatched ones: roughly 2x bytes
+    assert 1.5 < s["e2a_bytes"] / s["a2e_bytes"] < 2.5
+    col = run_sim(sim_kw={"deployment": "colocated"})
+    assert col.summary["a2e_bytes"] == 0
+    assert col.summary["expert_pool_util"] == 0.0
