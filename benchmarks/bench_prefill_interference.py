@@ -1,0 +1,143 @@
+"""Chunked prefill: measured chunk times + prefill/decode interference.
+
+Measures, on the real jitted smoke model:
+
+* ``prefill/chunk_time/c<N>`` — wall time of one ``prefill_chunk``
+  program per chunk size (the per-chunk cost the chunked scheduler
+  amortizes). Loaded by ``SuperPodCostModel.from_calibration`` to
+  replace the analytic compute term of ``prefill_chunk_time``.
+* ``prefill/decode_contention`` — how much a decode iteration stretches
+  when prefill chunks run interleaved on the same device (the
+  PD-colocated §4.3 interference the simulator prices with
+  ``PREFILL_DECODE_CONTENTION``). The DIMENSIONLESS ratio rides the
+  ``us_per_call`` column (documented in ``from_calibration``).
+* ``prefill/stream_overlap`` — modeled exposed-transfer fraction of
+  chunk-streamed KV (``xccl.pd_transfer.chunk_stream_time``) vs the
+  post-hoc bulk copy, at the measured chunk times.
+
+Writes ``BENCH_prefill_interference.json`` for
+``SuperPodCostModel.from_calibration`` / CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, reset, time_fn, write_json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model / few iters (CI)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default "
+                         "BENCH_prefill_interference.json)")
+    args, _ = ap.parse_known_args()
+    reset()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.mesh_ctx import make_smoke_ctx
+    from repro.models.transformer import build_model
+    from repro.serving.backend import JAXBackend
+
+    iters = 5 if args.smoke else 20
+    max_len = 256 if args.smoke else 1024
+    chunk_sizes = (32, 64, 128) if args.smoke else (64, 128, 256, 512)
+    cfg = get_config("deepseek-v3-671b-smoke")
+    model = build_model(cfg, make_smoke_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    be = JAXBackend(model, params, max_len=max_len)
+    assert be.supports_chunked_prefill
+    rng = np.random.default_rng(0)
+
+    # ---- per-chunk prefill times ----------------------------------------
+    chunk_us = {}
+    total = max_len - 8
+    toks = rng.integers(2, 60, total).tolist()
+    for n in chunk_sizes:
+        # steady-state chunk at a mid-prompt offset (first call warms the
+        # (chunk bucket, buffer bucket) program)
+        off = n
+
+        def run_chunk():
+            cache, _ = be.prefill_chunk(None, toks[:off], 0, total)
+            cache, logits = be.prefill_chunk(cache, toks[off:off + n],
+                                             off, total)
+            return logits
+
+        us = time_fn(run_chunk, iters=iters, warmup=2)
+        # run_chunk executes TWO chunk programs; report one
+        chunk_us[n] = us / 2.0
+        emit(f"prefill/chunk_time/c{n}", chunk_us[n],
+             f"one prefill_chunk program, offset={off}")
+
+    # ---- decode iteration alone vs interleaved with prefill chunks ------
+    B = 4
+    tokens = np.full((B, 1), 7, np.int32)
+    positions = np.arange(B, dtype=np.int32) % 4 + 1
+    temps = np.zeros((B,), np.float32)
+
+    def decode_alone(cache):
+        out, cache = be.decode_sample(cache, tokens, positions, temps, 0)
+        np.asarray(out)
+        return cache
+
+    cache = decode_alone(decode_alone(be.init_cache(B, max_len)))
+    alone = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        cache = decode_alone(cache)
+        alone.append(time.perf_counter() - t0)
+    alone_us = sorted(alone)[len(alone) // 2] * 1e6
+
+    nc = chunk_sizes[0]
+    be.prefill_chunk(None, toks[:nc], 0, total)      # warm the program
+    mixed = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        # a prefill chunk in flight while the decode iteration runs: on
+        # one device the executors serialize — the upper bound of the
+        # §4.3 colocation interference the simulator prices. Each
+        # iteration starts a FRESH first chunk: the jitted chunk program
+        # donates its cache buffer, so a retained handle must never be
+        # passed twice.
+        be.prefill_chunk(None, toks[:nc], 0, total)
+        cache = decode_alone(cache)
+        mixed.append(time.perf_counter() - t0)
+    mixed_us = sorted(mixed)[len(mixed) // 2] * 1e6
+    contention = max(mixed_us / alone_us, 1.0)
+    emit("prefill/decode_alone", alone_us, f"B={B} decode_sample")
+    emit("prefill/decode_contention", contention,
+         f"decode+chunk {mixed_us:.0f}us vs alone {alone_us:.0f}us "
+         "(ratio in us_per_call column)")
+
+    # ---- modeled chunk-streamed KV overlap ------------------------------
+    from repro.sim.fabric import SuperPodCostModel
+    from repro.core.transformerless import plan_partition
+    from repro.xccl.pd_transfer import chunk_stream_time
+
+    full = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(full, plan_partition(full, 768))
+    prompt, chunk = 8192, 2048
+    n_chunks = prompt // chunk
+    cbytes = [int(chunk * cost.kv_bytes_per_token
+                  * (cost.n_moe_layers + cost.n_dense_layers))] * n_chunks
+    ctimes = [cost.prefill_chunk_time(chunk, context=i * chunk)
+              for i in range(n_chunks)]
+    total_t, exposed = chunk_stream_time(cbytes, ctimes)
+    bulk = cost.kv_transfer_time(prompt)
+    emit("prefill/stream_overlap", exposed * 1e6,
+         f"exposed transfer {exposed*1e3:.2f}ms vs bulk "
+         f"{bulk*1e3:.2f}ms at {n_chunks}x{chunk}-token chunks "
+         f"(hidden={1.0 - exposed / bulk:.1%})")
+
+    write_json("prefill_interference", args.json)
+
+
+if __name__ == "__main__":
+    main()

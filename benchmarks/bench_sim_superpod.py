@@ -48,7 +48,8 @@ ARCH = "deepseek-v3-671b"
 TOTAL_DIES = 768        # CloudMatrix384: 48 servers × 8 chips × 2 dies
 BATCH_SWEEP = (8, 16, 32, 64, 96, 128)
 CALIBRATION_FILES = ("BENCH_dispatch_combine.json",
-                     "BENCH_decode_iteration.json")
+                     "BENCH_decode_iteration.json",
+                     "BENCH_prefill_interference.json")
 
 _CALIB: tuple = ()
 _DEPLOYMENT = "colocated"
@@ -167,6 +168,42 @@ def main(argv=None) -> None:
     if args.json:
         with open(args.json, "w") as f:
             f.write(rep.to_json(include_requests=True))
+
+    # -- 2b. chunked prefill: colocation interference + §7.2 long-context
+    # dedicated TE pools (colocated deployment only — prefill streams
+    # share dies with decode there) --------------------------------------
+    if args.deployment == "colocated":
+        lc_wl = {**wl_kw, "long_context_fraction": 0.15}
+        shared = _mk({**sim_kw, "prefill_colocated": True,
+                      "n_prefill_tes": 3}, lc_wl).run().summary
+        dedicated = _mk({**sim_kw, "prefill_colocated": True,
+                         "n_prefill_tes": 3, "long_context_tes": 1},
+                        lc_wl).run().summary
+        emit("sim/chunked_prefill/shared_dies",
+             shared["tpot_mean_s"] * 1e6,
+             f"contended_iters={shared['n_contended_decode_iters']} "
+             f"chunks={shared['n_prefill_chunks']}")
+        emit("sim/chunked_prefill/dedicated_long_tes",
+             dedicated["tpot_mean_s"] * 1e6,
+             f"contended_iters={dedicated['n_contended_decode_iters']} "
+             f"long_routed={dedicated['n_long_routed_dedicated']}"
+             f"/{dedicated['n_long_prompts']}")
+        routed_ok = (dedicated["n_long_prompts"] > 0
+                     and dedicated["n_long_routed_dedicated"]
+                     == dedicated["n_long_prompts"])
+        relief_ok = (dedicated["n_contended_decode_iters"]
+                     < shared["n_contended_decode_iters"])
+        emit("sim/chunked_prefill/verdict", 0.0,
+             "PASS" if routed_ok and relief_ok
+             else "FAIL: long-context routing/interference relief")
+        if not routed_ok:
+            raise RuntimeError(
+                "long-context prompts did not all route to the "
+                "dedicated TE pool")
+        if not relief_ok:
+            raise RuntimeError(
+                "dedicated long-context TEs did not reduce decode "
+                "contention")
 
     # -- 3. hot-expert straggler: EPLB off vs on ------------------------
     skew = FaultPlan(expert_skew=0.8)

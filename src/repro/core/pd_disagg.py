@@ -16,6 +16,15 @@ implements the paper's 8 steps:
  7. DistFlow moves/reshards the KV (fabric-dependent: UB within the
     SuperPod, RoCE/VPC for heterogeneous 910B prefill).
  8. Completion queues: prefill frees blocks, decode enqueues the request.
+
+Chunked prefill changes the granularity of steps 2-7: the prefill
+scheduler emits token-budget CHUNKS (continuing partially-prefilled
+requests first), the decode TE is picked at the FIRST chunk, and each
+finished chunk's KV layers stream to it immediately
+(``DistFlowInstance.stream_chunk``) so the wire time of all but the
+final chunk hides under subsequent chunks' compute — instead of one
+post-hoc bulk copy after the whole prompt. Backends without incremental
+prefill (``supports_chunked_prefill == False``) keep the bulk path.
 """
 from __future__ import annotations
 
@@ -75,8 +84,10 @@ class DisaggregatedPD:
                  dp_per_te: int = 2, max_batch: int = 2,
                  max_len: int = 256, ctx: Optional[MeshCtx] = None,
                  prefill_fabrics: Optional[Sequence[str]] = None,
-                 seed: int = 0):
+                 seed: int = 0, token_budget: int = 8192,
+                 chunk_tokens: Optional[int] = None):
         self.cfg = cfg
+        self.max_len = max_len
         ctx = ctx or make_smoke_ctx()
         self.model = build_model(cfg, ctx)
         self.params = (params if params is not None
@@ -92,7 +103,9 @@ class DisaggregatedPD:
                                         max_len=max_len),
                              max_batch=max_batch, max_len=max_len)
                      for j in range(dp_per_te)],
-                scheduler=PrefillScheduler(dp_per_te),
+                scheduler=PrefillScheduler(dp_per_te,
+                                           token_budget=token_budget,
+                                           chunk_tokens=chunk_tokens),
                 long_capable=(i == 0),
                 fabric=fabrics[i])
             for i in range(n_prefill_te)
@@ -122,6 +135,10 @@ class DisaggregatedPD:
     def submit(self, req: Request) -> None:
         if req.prompt_tokens is None:
             req.prompt_tokens = self.tokenizer.encode(req.prompt)
+        # context-clip up front so chunk boundaries see the final prompt
+        limit = max(self.max_len - req.max_new_tokens - 1, 16)
+        if req.prompt_len > limit:
+            req.prompt_tokens = req.prompt_tokens[-limit:]
         # step 1: JE → prefill TE
         te_id = pick_prefill_te([t.stats() for t in self.prefill_tes], req)
         req.prefill_te = te_id
@@ -129,35 +146,86 @@ class DisaggregatedPD:
         self.prefill_tes[te_id].scheduler.submit(req)
 
     # ------------------------------------------------------------------
+    def _run_chunk(self, te: PrefillTE, dp: DPGroup, work) -> None:
+        """Steps 2-7 at chunk granularity: execute one chunk, stream its
+        KV layers to the (first-chunk-pinned) decode TE while the next
+        chunk computes, and queue admission on the final chunk."""
+        req = work.req
+        done = dp.run_prefill_chunk(work)                  # step 2
+        if req.decode_te is None:
+            dte = self._pick_decode_te(req)                # step 4, early
+            req.decode_te = dte.te_id
+        dte = self.decode_tes[req.decode_te]
+        flow = self.distflow[f"p{te.te_id}-d{dte.te_id}"]
+        streaming = dp.backend.supports_chunked_prefill
+        end = min(work.end, req.prompt_len)
+        if streaming:
+            from repro.xccl.pd_transfer import slice_kv_chunk
+            if req.req_id not in flow.streams:
+                flow.open_stream(req.req_id,
+                                 {"prompt_len": req.prompt_len})
+            if done is None:
+                # step 3/7 chunk-wise: ship the finished chunk's layers
+                # now — the wire time hides under the next chunk's
+                # compute (async SEND on the MTE/SDMA engines)
+                flow.stream_chunk(
+                    req.req_id,
+                    slice_kv_chunk(dp.partial_prefill_cache(req),
+                                   work.start, end))
+                return
+            cache1, logits = done
+            # final (or prefix-cache-hit) slice: stream whatever the
+            # earlier chunks have not shipped yet
+            shipped = work.start if not work.is_first else 0
+            flow.stream_chunk(req.req_id,
+                              slice_kv_chunk(cache1, shipped,
+                                             req.prompt_len),
+                              last=True)
+            req.state = RequestState.TRANSFERRING
+            self._pending_admit.append(
+                {"req": req, "flow": flow, "te": dte, "logits": logits,
+                 "stream": True})
+            return
+        if done is None:
+            return                 # buffering fallback: nothing to ship
+        cache1, logits = done
+        # legacy bulk path: one deferred, pull-triggered transfer
+        task = flow.register(req.req_id, cache1,
+                             {"logits": logits,
+                              "prompt_len": req.prompt_len})
+        req.state = RequestState.TRANSFERRING
+        self._pending_admit.append(
+            {"req": req, "flow": flow, "task": task.task_id,
+             "te": dte, "logits": logits, "stream": False})
+
     def step(self) -> int:
         produced = 0
-        # ---- prefill TEs: collaborative scheduling + execution ----------
+        # ---- prefill TEs: chunk-granular collaborative scheduling -------
         for te in self.prefill_tes:
             batches = te.scheduler.schedule_step(
                 hit_rate_fn=lambda r, te=te: max(
                     d.prefix_cache.match_fraction(r.prompt_tokens)
                     for d in te.dps))
-            for dp, batch in zip(te.dps, batches):
-                for req in batch:
-                    cache1, logits = dp.run_prefill(req)   # step 2
-                    # step 3: register the transfer (metadata only)
-                    dte = self._pick_decode_te(req)        # step 4
-                    req.decode_te = dte.te_id
-                    flow = self.distflow[f"p{te.te_id}-d{dte.te_id}"]
-                    task = flow.register(req.req_id, cache1,
-                                         {"logits": logits,
-                                          "prompt_len": req.prompt_len})
-                    req.state = RequestState.TRANSFERRING
-                    self._pending_admit.append(
-                        {"req": req, "flow": flow, "task": task.task_id,
-                         "te": dte, "logits": logits})
-        # ---- decode side: trigger transfers under backpressure ----------
+            for dp, works in zip(te.dps, batches):
+                for work in works:
+                    self._run_chunk(te, dp, work)
+        # ---- decode side: admit under backpressure ----------------------
         still: List[Dict] = []
         for item in self._pending_admit:
             req, flow, dte = item["req"], item["flow"], item["te"]
             dp_id = dte.balancer.pick([d.status() for d in dte.dps], req)
             dp = (None if dp_id is None
                   else next(d for d in dte.dps if d.dp_id == dp_id))
+            if item["stream"]:
+                # stream already landed chunk by chunk; only admission
+                # capacity gates here (step 6 backpressure)
+                if dp is None or not dp.can_admit(req):
+                    still.append(item)
+                    continue
+                kv = flow.pop_stream(req.req_id)
+                assert kv is not None, "stream must be complete"
+                dp.admit(req, kv, item["logits"])
+                continue
             # step 6: capacity check (backpressure when absent)
             if dp is None or not dp.can_admit(req):
                 flow.trigger(item["task"], lambda: False)

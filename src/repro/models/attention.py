@@ -1,8 +1,14 @@
 """Attention blocks: GQA (global / sliding-window), cross-attention, MLA.
 
-Three execution modes:
+Four execution modes:
   * ``train``   — full sequence, no cache.
   * ``prefill`` — full sequence, returns a populated KV cache.
+  * ``chunk``   — chunked prefill: a contiguous token slice written into
+                  an existing full-length cache buffer at ``positions``
+                  (a scalar offset), attending causally over the buffer
+                  prefix. Running a prompt as one chunk is bit-identical
+                  to ``prefill`` on the valid region (global attention
+                  only — ring-buffer windows are not chunkable here).
   * ``decode``  — one new token against an existing cache.
 
 Decode uses a shard_map'd *distributed* attention: the KV cache is sharded
@@ -150,6 +156,12 @@ def attn_apply(
                 new_cache = {"k": k, "v": v}
         return y, new_cache
 
+    if mode == "chunk":
+        assert cache is not None and positions is not None
+        assert window == 0, "chunked prefill needs global attention"
+        return _attn_chunk(params, x, cfg=cfg, ctx=ctx, ref=cache,
+                           offset=positions)
+
     assert mode == "decode" and cache is not None and positions is not None
     q, k_new, v_new = _project_qkv(params, x, cfg,
                                    positions[:, None])  # [B,1,...]
@@ -157,6 +169,45 @@ def attn_apply(
         q, k_new, v_new, cache, positions, ctx, window=window)
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
     return y, new_cache
+
+
+def _attn_chunk(params, x, *, cfg: ModelConfig, ctx: MeshCtx, ref,
+                offset):
+    """Chunked-prefill attention (mode ``chunk``).
+
+    ``x`` is one chunk [B, S, d] of a longer prompt whose earlier chunks
+    already populated positions ``< offset`` of the layer's cache buffer
+    (a :class:`~repro.models.cache_ref.CacheRef` into the stacked
+    carry). The chunk's roped K/V are written at ``offset .. offset+S``
+    and queries attend causally over the whole buffer with explicit
+    position masks — valid keys sit at the same buffer indices as in a
+    monolithic prefill of the same bucketed length, which is what makes
+    the chunked result bit-identical on the valid region. TP head
+    padding / sharding mirror the monolithic prefill path (the cache
+    keeps the un-padded layout)."""
+    B, S, d = x.shape
+    pos = offset + jnp.arange(S)
+    q, k, v = _project_qkv(params, x, cfg, pos)
+    kstack, vstack = ref.stack["k"], ref.stack["v"]
+    layer = jnp.asarray(ref.idx, jnp.int32)
+    start = (layer, jnp.int32(0), jnp.asarray(offset, jnp.int32),
+             jnp.int32(0), jnp.int32(0))
+    kstack = jax.lax.dynamic_update_slice(
+        kstack, k[None].astype(kstack.dtype), start)
+    vstack = jax.lax.dynamic_update_slice(
+        vstack, v[None].astype(vstack.dtype), start)
+    ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+    cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+    wo = params["wo"]
+    if ctx.tp_size > 1 and q.shape[2] % ctx.tp_size != 0:
+        q, ck, cv, wo = _pad_heads_for_tp(q, ck, cv, wo, ctx.tp_size)
+    q, ck, cv = (head_sharded(ctx, q), head_sharded(ctx, ck),
+                 head_sharded(ctx, cv))
+    o = naive_attention(q, ck, cv, causal=True, q_positions=pos,
+                        kv_positions=jnp.arange(ck.shape[1]))
+    o = head_sharded(ctx, o)
+    y = jnp.einsum("bshk,hkd->bsd", o, wo)
+    return y, ref.with_stack({"k": kstack, "v": vstack})
 
 
 # ---------------------------------------------------------------------------
@@ -392,6 +443,11 @@ def mla_apply(
         new_cache = {"ckv": ckv, "krope": krope} if mode == "prefill" else None
         return y, new_cache
 
+    if mode == "chunk":
+        assert cache is not None and positions is not None
+        return _mla_chunk(params, x, cfg=cfg, ctx=ctx, ref=cache,
+                          offset=positions)
+
     assert mode == "decode" and cache is not None and positions is not None
     q_nope, q_rope, ckv_new, krope_new = _mla_qkv_latent(
         params, x, cfg, positions[:, None])
@@ -404,6 +460,46 @@ def mla_apply(
     o = jnp.einsum("bshr,rhk->bshk", o_lat, params["wv_b"])
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
     return y, new_cache
+
+
+def _mla_chunk(params, x, *, cfg: ModelConfig, ctx: MeshCtx, ref, offset):
+    """Chunked-prefill MLA (mode ``chunk``): write the chunk's latent
+    (ckv, krope) into the cache buffer at ``offset``, then expand
+    per-head K/V from the WHOLE buffer (same expansion the monolithic
+    prefill applies per position) and attend with explicit position
+    masks — bit-identical to one-shot prefill on the valid region."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    pos = offset + jnp.arange(S)
+    q_nope, q_rope, ckv, krope = _mla_qkv_latent(params, x, cfg, pos)
+    ckv_stack, krope_stack = ref.stack["ckv"], ref.stack["krope"]
+    layer = jnp.asarray(ref.idx, jnp.int32)
+    start = (layer, jnp.int32(0), jnp.asarray(offset, jnp.int32),
+             jnp.int32(0))
+    ckv_stack = jax.lax.dynamic_update_slice(
+        ckv_stack, ckv[None].astype(ckv_stack.dtype), start)
+    krope_stack = jax.lax.dynamic_update_slice(
+        krope_stack, krope[None].astype(krope_stack.dtype), start)
+    ckv_all = jax.lax.dynamic_index_in_dim(ckv_stack, layer, 0,
+                                           keepdims=False)
+    krope_all = jax.lax.dynamic_index_in_dim(krope_stack, layer, 0,
+                                             keepdims=False)
+    L = ckv_all.shape[1]
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_all, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv_all, params["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_all[:, :, None],
+                                  (B, L, H, m.qk_rope_head_dim))],
+        axis=-1)
+    q, k, v = (head_sharded(ctx, q), head_sharded(ctx, k),
+               head_sharded(ctx, v))
+    o = naive_attention(q, k, v, q_positions=pos,
+                        kv_positions=jnp.arange(L))
+    o = head_sharded(ctx, o)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return y, ref.with_stack({"ckv": ckv_stack, "krope": krope_stack})
 
 
 def _mla_decode_distributed(q_lat, q_rope, ckv_new, krope_new, ref,

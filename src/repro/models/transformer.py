@@ -284,7 +284,7 @@ class Model:
             gl = i if section == "prefix" \
                 else np_ + self.n_sb * pl_len + i
             lp = layer_placement(gl)
-            if mode == "decode" and c is not None:
+            if mode in ("decode", "chunk") and c is not None:
                 ref = cache_ref.wrap_single(c)
                 x, nref, (aux, counts) = apply(params[section][i], x,
                                                kind=kind, cache=ref,
@@ -312,9 +312,10 @@ class Model:
                 for a in (placement.replica_slots, placement.n_replicas,
                           placement.phys_owner))
 
-        if self.n_sb and mode == "decode":
+        if self.n_sb and mode in ("decode", "chunk"):
             # caches are carried (not scanned xs/ys) so that the per-step
-            # cache write is an in-place scatter of the new token only.
+            # cache write is an in-place scatter of the new token only
+            # (decode) or of the current chunk's slice (chunked prefill).
             def superblock_dec(carry, xs):
                 x, aux_acc, cstacks = carry
                 sb_params, idx, sb_pl = xs
@@ -448,6 +449,31 @@ class Model:
             h = x[:, -1]
         else:
             h = x[jnp.arange(x.shape[0]), last_pos]
+        logits = jnp.einsum("bd,dv->bv", h.astype(jnp.float32),
+                            self._unembed(params).astype(jnp.float32))
+        return logits, caches
+
+    def prefill_chunk(self, params, cache, tokens, offset, last_pos):
+        """Chunked prefill: run ONE contiguous chunk of a prompt against
+        the partially-filled cache buffers in ``cache``.
+
+        ``tokens``: [B, S_chunk] (padded chunk); ``offset``: scalar int32
+        absolute position of the chunk's first token (earlier chunks
+        populated positions ``< offset``); ``last_pos``: [B] index WITHIN
+        the chunk of its last valid token. Returns ``(logits [B, V] at
+        the last valid position, new cache)`` — on the final chunk these
+        logits equal :meth:`prefill`'s, and the cache's valid region
+        (positions ``< prompt_len``) is bit-identical to the monolithic
+        prefill cache of the same bucketed length. ``cache`` is the
+        full-length buffer pytree from :meth:`init_cache` (batch 1 in
+        serving). Global-attention mixers only (ATTN / MLA_ATTN)."""
+        assert not self.cfg.is_encdec, "chunked prefill: decoder-only"
+        x = self._embed(params, tokens)
+        x = self._residual_constraint(x, "prefill")
+        x, caches, _, _ = self._apply_stack(params, x, mode="chunk",
+                                            caches=cache,
+                                            positions=offset)
+        h = x[jnp.arange(x.shape[0]), last_pos]
         logits = jnp.einsum("bd,dv->bv", h.astype(jnp.float32),
                             self._unembed(params).astype(jnp.float32))
         return logits, caches

@@ -2,8 +2,9 @@ from repro.serving.request import Job, Request, RequestState, SLA
 from repro.serving.tokenizer import ByteTokenizer, EOS, PAD
 from repro.serving.kv_cache import (BlockAllocator, OutOfBlocks, PrefixCache,
                                     hash_blocks)
-from repro.serving.scheduler import (DecodeLoadBalancer, DPStatus,
-                                     PrefillScheduler, pick_prefill_te)
+from repro.serving.scheduler import (ChunkWork, DecodeLoadBalancer,
+                                     DPStatus, PrefillScheduler,
+                                     pick_prefill_te)
 from repro.serving.backend import ExecutionBackend, JAXBackend
 from repro.serving.sampling import (sample_host, sample_tokens,
                                     top_k_mask)

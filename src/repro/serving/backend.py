@@ -43,6 +43,44 @@ Contract details every implementation must honor:
   guarded by tests; the legacy ``decode`` (full-logits) entry remains
   for diagnostics and for callers that genuinely need distributions.
 
+The ``prefill_chunk`` contract — chunked prefill
+------------------------------------------------
+
+``prefill_chunk(cache, tokens, offset, total_len)`` runs ONE contiguous
+chunk of a prompt's prefill and returns ``(cache, logits)``. It is the
+execution half of the chunk-granular prefill path: the
+:class:`~repro.serving.scheduler.PrefillScheduler` emits token-budget
+:class:`~repro.serving.scheduler.ChunkWork` slices, ``DPGroup`` executes
+them through this entry, and the KV built so far can stream to a decode
+TE chunk by chunk (``xccl/pd_transfer.py``) while later chunks compute.
+Contract details:
+
+* ``cache`` is backend-opaque partial-prefill state: pass ``None`` on
+  the first chunk (``offset == 0``) — the backend allocates it sized
+  for ``total_len`` — and thereafter the handle returned by the
+  previous chunk. The caller must feed chunks back-to-back and in
+  order (``offset`` equals the sum of prior chunk lengths).
+* ``tokens`` is the chunk's token list, ``total_len`` the full prompt
+  length (so the backend can bucket the buffer once and knows which
+  chunk is final).
+* ``logits`` is the last-valid-position logits ``[V]`` of the chunk for
+  backends that compute incrementally, and MUST equal ``prefill``'s
+  last-position logits on the final chunk; backends without incremental
+  execution may return ``None`` for non-final chunks.
+* On :class:`JAXBackend` the chunked path is BIT-IDENTICAL to the
+  monolithic ``prefill`` on the valid region: same logits on the final
+  chunk, same KV cache at positions ``< total_len`` (positions beyond
+  hold padding junk in both paths and are masked by decode). One
+  chunk-shaped jitted program per (chunk bucket, buffer bucket) pair is
+  reused across chunks and requests via padding buckets, with the
+  offset traced.
+* ``supports_chunked_prefill`` advertises true incremental execution
+  (global-attention decoder-only stacks on the JAX path; always true
+  for the sim backend, which counts chunks). When false, the default
+  implementation buffers tokens and runs one monolithic ``prefill`` at
+  the final chunk — chunk SCHEDULING still applies, execution cost
+  does not split.
+
 The ``apply_placement`` contract — the EPLB data plane
 ------------------------------------------------------
 
@@ -86,6 +124,33 @@ class ExecutionBackend(abc.ABC):
 
         Returns ``(batch-1 cache, last-position logits [V])``.
         """
+
+    #: True when ``prefill_chunk`` executes incrementally (per-chunk
+    #: compute + streamable partial KV); False ⇒ the default buffering
+    #: fallback below.
+    supports_chunked_prefill: bool = False
+
+    def prefill_chunk(self, cache: Optional[PyTree], tokens: List[int],
+                      offset: int, total_len: int
+                      ) -> Tuple[PyTree, Optional[np.ndarray]]:
+        """Run one contiguous prefill chunk — see the module docstring.
+
+        Default implementation: accumulate the chunk tokens and run the
+        monolithic :meth:`prefill` once the final chunk arrives (for
+        backends whose architectures cannot prefill incrementally, e.g.
+        recurrent-state caches)."""
+        if cache is None:
+            if offset != 0:
+                raise ValueError("first chunk must start at offset 0")
+            cache = {"_chunk_tokens": []}
+        buf = cache["_chunk_tokens"]
+        if offset != len(buf):
+            raise ValueError(
+                f"non-contiguous chunk: offset {offset} != {len(buf)}")
+        buf.extend(tokens)
+        if len(buf) >= total_len:
+            return self.prefill(buf)
+        return cache, None
 
     @abc.abstractmethod
     def write_slot(self, cache: PyTree, cache1: PyTree,
@@ -154,6 +219,13 @@ class JAXBackend(ExecutionBackend):
         self.vocab_size = model.cfg.vocab_size
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill, static_argnames=())
+        # chunked prefill: one program per (chunk bucket, buffer bucket)
+        # shape pair, offset and last_pos traced so every chunk of every
+        # request reuses the compiled executable; the cache buffer is
+        # donated so each chunk writes its K/V in place (the old handle
+        # is replaced by the returned one, like decode_sample's cache)
+        self._prefill_chunk = jax.jit(model.prefill_chunk,
+                                      donate_argnums=(1,))
         # EPLB data plane: the active PlacementTable (None ⇒ logical
         # routing). Swapped by apply_placement between decode steps;
         # passed into the jitted programs as a traced pytree so swaps
@@ -202,6 +274,49 @@ class JAXBackend(ExecutionBackend):
         mem = None if self.memory is None else self.memory[:1]
         logits, cache = self._prefill(self.params, arr, mem,
                                       jnp.asarray([n - 1], jnp.int32))
+        return cache, np.asarray(logits[0], np.float32)
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when every mixer attends globally (ATTN / MLA_ATTN) —
+        ring-buffer windows and recurrent state caches cannot resume a
+        prefill mid-prompt; those models fall back to the buffering
+        default."""
+        from repro.configs.base import ATTN, MLA_ATTN
+
+        cfg = self.model.cfg
+        return (not cfg.is_encdec and self.model.window_override == 0
+                and all(m in (ATTN, MLA_ATTN)
+                        for m, _ in cfg.layer_kinds()))
+
+    def prefill_chunk(self, cache, tokens: List[int], offset: int,
+                      total_len: int):
+        """One jitted chunk program over the full-length cache buffer —
+        see the module docstring for the contract. Falls back to the
+        buffering default for architectures without incremental
+        prefill."""
+        if not self.supports_chunked_prefill:
+            return super().prefill_chunk(cache, tokens, offset, total_len)
+        import jax.numpy as jnp
+
+        from repro.serving.tokenizer import PAD
+
+        Lc = min(_bucket_len(max(total_len, 1)), self.max_len)
+        if cache is None:
+            if offset != 0:
+                raise ValueError("first chunk must start at offset 0")
+            cache = self.model.init_cache(1, Lc)
+        n = len(tokens)
+        # pad the chunk to its bucket, clamped so the buffer write stays
+        # inside the buffer (padded tail rows hold junk that the next
+        # chunk overwrites / decode masks — exactly like monolithic
+        # prefill's padded tail)
+        Sc = min(_bucket_len(max(n, 1)), Lc - offset)
+        padded = list(tokens) + [PAD] * (Sc - n)
+        arr = jnp.asarray(padded, jnp.int32)[None]
+        logits, cache = self._prefill_chunk(
+            self.params, cache, arr, jnp.int32(offset),
+            jnp.asarray([n - 1], jnp.int32))
         return cache, np.asarray(logits[0], np.float32)
 
     @staticmethod

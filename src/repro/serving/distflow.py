@@ -6,6 +6,12 @@ of non-self-describing KV blocks, per-TE-pair isolated instances that may
 share XCCL buffers, completion queues, and backpressure when the decode
 side lacks KV capacity.
 
+Chunked prefill adds CHUNK STREAMS: instead of one post-hoc bulk
+transfer after the whole prompt prefills, each finished chunk's KV
+layers ship immediately (``stream_chunk``), overlapped with the next
+chunk's compute on the prefill side; the decode side assembles the
+stream (``pop_stream``) once the final chunk lands and then admits.
+
 The byte movement itself is ``xccl.pd_transfer``; fabric choice (UB vs
 RoCE vs VPC for 910B-prefill → 910C-decode heterogeneity) is a parameter.
 """
@@ -18,8 +24,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
-from repro.xccl.pd_transfer import TransferPlan, execute_transfer, \
-    plan_transfer
+from repro.xccl.pd_transfer import (TransferPlan, assemble_chunks,
+                                    execute_transfer, plan_transfer)
 
 PyTree = Any
 _task_ids = itertools.count()
@@ -47,6 +53,22 @@ class TransferTask:
     t_complete: Optional[float] = None
 
 
+@dataclasses.dataclass
+class ChunkStream:
+    """A per-request streamed PD transfer: chunk payloads arrive in
+    order as prefill chunks finish; ``complete`` flips with the final
+    chunk, after which :meth:`DistFlowInstance.pop_stream` assembles."""
+    req_id: int
+    meta: Dict[str, Any]
+    chunks: List[PyTree] = dataclasses.field(default_factory=list)
+    chunk_bytes: List[int] = dataclasses.field(default_factory=list)
+    complete: bool = False
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.chunk_bytes)
+
+
 class DistFlowInstance:
     """One isolated instance per (prefill TE, decode TE) pair — a failure
     domain boundary (§5.1 step 7)."""
@@ -57,10 +79,12 @@ class DistFlowInstance:
         self.fabric = fabric
         self.dst_shardings = dst_shardings
         self.tasks: Dict[int, TransferTask] = {}
+        self.streams: Dict[int, ChunkStream] = {}
         self.completion_queue: Deque[int] = deque()
         self._event = itertools.count(1)
         self.healthy = True
         self.bytes_moved = 0
+        self.chunks_streamed = 0
 
     # -- prefill side -------------------------------------------------------
     def register(self, req_id: int, kv: PyTree,
@@ -71,6 +95,44 @@ class DistFlowInstance:
                             plan=plan_transfer(kv, self.fabric))
         self.tasks[task.task_id] = task
         return task
+
+    # -- prefill side: chunk streaming --------------------------------------
+    def open_stream(self, req_id: int,
+                    meta: Optional[Dict[str, Any]] = None) -> ChunkStream:
+        """Open a streamed transfer for one request (first chunk about
+        to finish). Chunks then ship eagerly — the overlap with the next
+        chunk's compute is the point — rather than deferring to a
+        decode-side pull like the bulk path."""
+        stream = ChunkStream(req_id=req_id, meta=meta or {})
+        self.streams[req_id] = stream
+        return stream
+
+    def stream_chunk(self, req_id: int, kv_chunk: PyTree,
+                     last: bool = False) -> TransferPlan:
+        """Ship one finished chunk's KV layers (async SEND; on hardware
+        the MTE/SDMA engines move it while the NPU computes the next
+        chunk). Returns the chunk's transfer plan for accounting."""
+        if not self.healthy:
+            raise RuntimeError(f"DistFlow {self.pair} unhealthy")
+        stream = self.streams[req_id]
+        plan = plan_transfer(kv_chunk, self.fabric)
+        moved = execute_transfer(kv_chunk, self.dst_shardings)
+        stream.chunks.append(moved)
+        stream.chunk_bytes.append(plan.total_bytes)
+        self.bytes_moved += plan.total_bytes
+        self.chunks_streamed += 1
+        if last:
+            stream.complete = True
+        return plan
+
+    def pop_stream(self, req_id: int) -> Optional[PyTree]:
+        """Decode side: assemble and take a COMPLETE stream's cache
+        (None while chunks are still in flight)."""
+        stream = self.streams.get(req_id)
+        if stream is None or not stream.complete:
+            return None
+        del self.streams[req_id]
+        return assemble_chunks(stream.chunks)
 
     # -- decode side --------------------------------------------------------
     def trigger(self, task_id: int, can_receive: Callable[[], bool]) -> bool:

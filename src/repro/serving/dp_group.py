@@ -85,6 +85,9 @@ class DPGroup:
 
         # token-recomputation rollback state (§6.2 stage 3)
         self._rollback: Optional[Dict[str, Any]] = None
+        # chunked prefill: req_id → backend-opaque partial-prefill cache
+        # (dropped when the final chunk completes or the request leaves)
+        self._chunk_caches: Dict[int, PyTree] = {}
 
     # ------------------------------------------------------------------
     # output shortcutting worker
@@ -117,6 +120,54 @@ class DPGroup:
         logits = np.asarray(logits, np.float32)
         self.prefix_cache.insert(toks, cache, logits)
         return cache, logits
+
+    def run_prefill_chunk(self, work) -> Optional[Tuple[PyTree,
+                                                        np.ndarray]]:
+        """Execute one :class:`~repro.serving.scheduler.ChunkWork` via
+        the backend's ``prefill_chunk`` contract.
+
+        Returns ``(batch-1 cache, last-position logits [V])`` once the
+        prompt's prefill COMPLETES (final chunk, or a full prefix-cache
+        hit on the first chunk — which jumps ``req.prefill_pos`` so the
+        scheduler drops the now-moot remaining chunks); ``None`` while
+        chunks are still outstanding."""
+        req = work.req
+        toks = req.prompt_tokens
+        # context clipping mirrors run_prefill — engines clip at submit,
+        # this is the safety net for direct callers
+        limit = max(self.max_len - req.max_new_tokens - 1, 16)
+        if len(toks) > limit and work.is_first:
+            toks = toks[-limit:]
+            req.prompt_tokens = toks
+            req.prefill_pos = min(req.prefill_pos, len(toks))
+        if work.is_first:
+            self._chunk_caches.pop(req.req_id, None)
+            hit = self.prefix_cache.lookup(toks)
+            if hit is not None and hit.cache is not None:
+                req.prefill_pos = len(toks)   # cancel remaining chunks
+                return hit.cache, np.asarray(hit.last_logits)
+        chunk = toks[work.start:min(work.end, len(toks))]
+        cache, logits = self.backend.prefill_chunk(
+            self._chunk_caches.pop(req.req_id, None), chunk, work.start,
+            len(toks))
+        if work.end >= len(toks):             # prompt complete
+            logits = np.asarray(logits, np.float32)
+            self.prefix_cache.insert(toks, cache, logits)
+            return cache, logits
+        self._chunk_caches[req.req_id] = cache
+        return None
+
+    def partial_prefill_cache(self, req: Request) -> Optional[PyTree]:
+        """The backend-opaque partial-prefill cache of an in-flight
+        chunked request (None once complete/absent). PD-disagg slices
+        finished chunks out of it to stream KV while later chunks
+        compute."""
+        return self._chunk_caches.get(req.req_id)
+
+    def drop_partial_prefill(self, req: Request) -> None:
+        """Release a partially-prefilled request's chunk cache (failover
+        or cancellation)."""
+        self._chunk_caches.pop(req.req_id, None)
 
     # ------------------------------------------------------------------
     # admission

@@ -28,7 +28,9 @@ class FlowServeEngine:
     def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
                  *, n_dp_groups: int = 2, max_batch: int = 4,
                  max_len: int = 256, ctx=None, seed: int = 0, memory=None,
-                 backend_factory: Optional[BackendFactory] = None):
+                 backend_factory: Optional[BackendFactory] = None,
+                 token_budget: int = 8192,
+                 chunk_tokens: Optional[int] = None):
         self.cfg = cfg
         self.model = None
         self.params = None
@@ -53,16 +55,24 @@ class FlowServeEngine:
         else:
             self.ctx = ctx
         self.tokenizer = ByteTokenizer()
+        self.max_len = max_len
         self.dps = [
             DPGroup(i, backend_factory(i), max_batch=max_batch,
                     max_len=max_len)
             for i in range(n_dp_groups)
         ]
+        from repro.serving.scheduler import PrefillScheduler
         self.shell = TEShell(
             self.dps,
             n_layers=cfg.num_layers if cfg.has_moe else 1,
-            n_experts=cfg.moe.num_experts if cfg.has_moe else 0)
+            n_experts=cfg.moe.num_experts if cfg.has_moe else 0,
+            prefill_scheduler=PrefillScheduler(
+                n_dps=n_dp_groups, token_budget=token_budget,
+                chunk_tokens=chunk_tokens))
         self.waiting: List[Request] = []
+        # prefill finished but no decode slot yet: retry admission each
+        # step (the pre-chunking path deferred the WHOLE prefill instead)
+        self._ready: List[tuple] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -78,7 +88,15 @@ class FlowServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit what fits, decode everywhere.
+        """One engine iteration: schedule + run prefill CHUNKS, admit
+        completed prompts, decode everywhere.
+
+        Prefill is chunk-granular (§4.3 token-budget admission): the
+        shell's ``PrefillScheduler`` emits per-DP ``ChunkWork`` slices —
+        continuing partially-prefilled requests before admitting new
+        ones — and each DP executes its chunks through the backend's
+        ``prefill_chunk`` program. A prompt no longer than the chunk
+        size behaves exactly like the old whole-prompt path.
 
         Decode uses the zero-sync fast path in two phases: every DP
         group's jitted decode+sample program is *launched* first (async
@@ -87,18 +105,27 @@ class FlowServeEngine:
         overlaps the others' host-side dispatch and bookkeeping instead
         of serializing on a per-group ``[B, V]`` logits sync.
         """
-        still_waiting: List[Request] = []
+        # feed new submissions to the chunk scheduler (context-clipped
+        # up front so chunk boundaries are computed on the final prompt)
         for req in self.waiting:
-            dp_id = self.shell.dispatch(req)
-            dp = None if dp_id is None else next(
-                d for d in self.dps if d.dp_id == dp_id)
-            if dp is not None and dp.can_admit(req):
-                req.state = RequestState.PREFILLING
-                cache1, logits = dp.run_prefill(req)
+            limit = max(self.max_len - req.max_new_tokens - 1, 16)
+            if req.prompt_len > limit:
+                req.prompt_tokens = req.prompt_tokens[-limit:]
+            self.shell.submit_prefill(req)
+        self.waiting = []
+        for dp, works in zip(self.dps, self.shell.schedule_prefill_chunks()):
+            for work in works:
+                work.req.state = RequestState.PREFILLING
+                done = dp.run_prefill_chunk(work)
+                if done is not None:
+                    self._ready.append((work.req, dp) + done)
+        still_ready: List[tuple] = []
+        for req, dp, cache1, logits in self._ready:
+            if dp.can_admit(req):
                 dp.admit(req, cache1, logits)
             else:
-                still_waiting.append(req)
-        self.waiting = still_waiting
+                still_ready.append((req, dp, cache1, logits))
+        self._ready = still_ready
         for dp in self.dps:
             dp.decode_launch()
         produced = 0
@@ -129,7 +156,9 @@ class FlowServeEngine:
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
         steps = 0
-        while (self.waiting or any(d.active for d in self.dps)):
+        while (self.waiting or self._ready
+               or self.shell.prefill_sched.pending
+               or any(d.active for d in self.dps)):
             self.step()
             steps += 1
             if steps > max_steps:

@@ -41,6 +41,13 @@ class Request:
     # runtime state
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
     state: RequestState = RequestState.QUEUED
+    # chunked-prefill cursor (§4.3 token-budget admission): tokens of the
+    # prompt already COVERED by emitted chunk work items. Advanced by the
+    # PrefillScheduler when it emits a chunk (and jumped to prompt_len by
+    # the executor on a full prefix-cache hit, which cancels the
+    # remaining chunks). prompt_len - prefill_pos is the work left.
+    prefill_pos: int = 0
+    n_prefill_chunks: int = 0
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     # tokens handed to the output path, counted synchronously by the DP
     # group (output_tokens is appended by the async output-shortcutting
@@ -58,6 +65,11 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return len(self.prompt_tokens or ())
+
+    @property
+    def prefill_remaining(self) -> int:
+        """Prompt tokens not yet covered by a scheduled prefill chunk."""
+        return max(self.prompt_len - self.prefill_pos, 0)
 
     @property
     def ttft(self) -> Optional[float]:

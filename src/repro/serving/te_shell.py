@@ -1,9 +1,10 @@
 """TE-shell (§4.2): the deliberately-thin central orchestrator.
 
 Exactly three responsibilities: dispatching requests across DP groups
-(via the §4.3 load balancers), triggering expert load balancing, and
-coordinating health checks. Scheduling of admitted work, output handling,
-caching and networking are fully decentralized in the DP groups.
+(via the §4.3 load balancers — decode placement AND the chunk-granular
+prefill schedule), triggering expert load balancing, and coordinating
+health checks. Scheduling of admitted work, output handling, caching and
+networking are fully decentralized in the DP groups.
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ from repro.serving.eplb import (ExpertLoadCollector, PlacementTable,
 from repro.serving.reliability import (Clock, HeartbeatPeer,
                                        TieredHeartbeat)
 from repro.serving.request import Request, RequestState
-from repro.serving.scheduler import DecodeLoadBalancer, DPStatus
+from repro.serving.scheduler import (ChunkWork, DecodeLoadBalancer,
+                                     DPStatus, PrefillScheduler)
 
 
 class TEShell:
@@ -28,9 +30,15 @@ class TEShell:
                  eplb_budget: int = 2, clock: Optional[Clock] = None,
                  dp_peers: Optional[Sequence[HeartbeatPeer]] = None,
                  balancer: Optional[DecodeLoadBalancer] = None,
-                 eplb_max_slices: int = 64):
+                 eplb_max_slices: int = 64,
+                 prefill_scheduler: Optional[PrefillScheduler] = None):
         self.dps = list(dp_groups)
         self.balancer = balancer or DecodeLoadBalancer()
+        # chunk-granular prefill schedule (§4.3): the shell owns the
+        # shared queue; schedule_prefill_chunks assigns token-budget
+        # ChunkWork slices across the DP groups each engine step
+        self.prefill_sched = prefill_scheduler or PrefillScheduler(
+            n_dps=len(self.dps))
         self.n_experts = n_experts
         self.collector = (ExpertLoadCollector(n_layers, n_experts,
                                               max_slices=eplb_max_slices)
@@ -54,6 +62,36 @@ class TEShell:
         if dp_id is not None:
             self.dispatched += 1
         return dp_id
+
+    def submit_prefill(self, req: Request) -> None:
+        """Queue a tokenized request for chunk-granular prefill."""
+        self.prefill_sched.submit(req)
+
+    def schedule_prefill_chunks(self) -> List[List[ChunkWork]]:
+        """One leader scheduling pass: per-DP ChunkWork batches under
+        the token budget, continuing partially-prefilled requests first.
+        New requests are only admitted onto healthy DPs that currently
+        have a decode slot + KV headroom for them (the colocated engine
+        decodes where it prefilled). Requests pinned to a DP the
+        heartbeat has since declared unhealthy are requeued with their
+        cursor reset — the partial KV there is lost — and their chunk
+        caches released."""
+        statuses = {s.dp_id: s for s in self.statuses()}
+        for idx, d in enumerate(self.dps):
+            if not statuses[d.dp_id].healthy:
+                for req in self.prefill_sched.requeue_dp(idx):
+                    d.drop_partial_prefill(req)
+
+        def can_admit(dp_idx: int, req: Request) -> bool:
+            s = statuses[self.dps[dp_idx].dp_id]
+            return s.healthy and self.dps[dp_idx].can_admit(req)
+
+        def hit_rate(req: Request) -> float:
+            return max(d.prefix_cache.match_fraction(req.prompt_tokens)
+                       for d in self.dps)
+
+        return self.prefill_sched.schedule_step(
+            hit_rate_fn=hit_rate, can_admit_fn=can_admit)
 
     # -- responsibility 2: EPLB trigger -------------------------------------
     def record_expert_counts(self, counts: np.ndarray) -> None:

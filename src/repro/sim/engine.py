@@ -35,11 +35,26 @@ maps only take routing effect after the migration's weight traffic has
 been paid on the UB fabric, each DP group's next iteration is charged
 the migration's fabric contention, and the swap lands on every
 simulated backend through the ``apply_placement`` contract.
+
+PREFILL is chunk-granular on the main event loop: each TE's
+``PrefillScheduler`` emits token-budget :class:`ChunkWork` slices
+(continuing partially-prefilled prompts first), every chunk is its own
+event priced by ``prefill_chunk_time`` (late chunks of long prompts cost
+more — the attention term grows with context), and each finished chunk's
+KV streams to the decode side overlapped with the next chunk's compute,
+so only the FINAL chunk's wire time gates admission (TTFT). With
+``prefill_colocated=True`` the (non-dedicated) prefill streams share
+dies with decode DP groups and a decode iteration that overlaps a
+prefill chunk stretches by the cost model's contention factor; the §7.2
+``long_context_tes`` knob carves dedicated long-prompt TEs that route
+``> long_context_threshold`` prompts away from the shared dies, removing
+that interference for everyone else.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -49,7 +64,8 @@ from repro.serving.dp_group import DPGroup
 from repro.serving.eplb import ExpertReconfigurator, ReconfigState
 from repro.serving.reliability import HeartbeatPeer
 from repro.serving.request import Request, RequestState
-from repro.serving.scheduler import PrefillScheduler, pick_prefill_te
+from repro.serving.scheduler import (ChunkWork, PrefillScheduler,
+                                     pick_prefill_te)
 from repro.serving.te_shell import TEShell
 from repro.sim.events import EventLoop
 from repro.sim.fabric import (CostModelBackend, DieModel, FabricModel,
@@ -127,25 +143,54 @@ class SimConfig:
     n_prefill_tes: int = 2
     prefill_streams_per_te: int = 4
     prefill_dies_per_stream: int = 16
+    # chunked prefill: token-budget slice size and per-stream per-step
+    # budget of the chunk scheduler (chunk == budget ⇒ budget-sized
+    # prompts degenerate to one chunk)
+    prefill_chunk_tokens: int = 2048
+    prefill_token_budget: int = 8192
+    # PD-colocated interference: map (non-dedicated) prefill streams
+    # onto decode DP dies — a decode iteration overlapping a prefill
+    # chunk on its die stretches by the cost model's contention factor.
+    # Only meaningful for deployment="colocated".
+    prefill_colocated: bool = False
+    # §7.2 dedicated long-context pools: the first N prefill TEs serve
+    # ONLY prompts above long_context_threshold (and are never mapped
+    # onto decode dies). 0 keeps the legacy "TE 0 is long-capable too"
+    # topology.
+    long_context_tes: int = 0
+    long_context_threshold: int = 8192
     drain_timeout_s: float = 120.0
     seed: int = 0
 
 
 class _PrefillTE:
-    def __init__(self, te_id: int, n_streams: int, long_capable: bool):
+    """Simulated prefill TE: a chunk scheduler over ``n_streams``
+    execution streams, each a serial FIFO of :class:`ChunkWork` events
+    on the main loop (the fluid busy-until model this replaces could not
+    express chunk-level KV overlap or decode interference)."""
+
+    def __init__(self, te_id: int, n_streams: int, long_capable: bool,
+                 long_only: bool = False, token_budget: int = 8192,
+                 chunk_tokens: Optional[int] = None):
         self.te_id = te_id
-        self.scheduler = PrefillScheduler(n_dps=n_streams)
-        self.busy_until = [0.0] * n_streams
+        self.scheduler = PrefillScheduler(n_dps=n_streams,
+                                          token_budget=token_budget,
+                                          chunk_tokens=chunk_tokens)
+        self.queues: List[Deque[ChunkWork]] = \
+            [deque() for _ in range(n_streams)]
+        self.busy = [False] * n_streams
         self.long_capable = long_capable
+        self.long_only = long_only
         self.mean_len = 512.0
 
     def stats(self, now: float) -> Dict:
-        busy = sum(1 for t in self.busy_until if t > now)
+        backlog = sum(len(q) for q in self.queues) + sum(self.busy)
         return {"te_id": self.te_id,
-                "load": len(self.scheduler.queue) + busy,
+                "load": len(self.scheduler.queue) + backlog,
                 "cache_hit": 0.0,
                 "mean_len": self.mean_len,
-                "long": self.long_capable}
+                "long": self.long_capable,
+                "long_only": self.long_only}
 
 
 class SuperPodSim:
@@ -162,6 +207,15 @@ class SuperPodSim:
                 not self.model_cfg.has_moe or self.plan.n_expert <= 0):
             raise ValueError(
                 "deployment='moe_attn' needs a MoE model with expert dies")
+        if sim_cfg.prefill_colocated and sim_cfg.deployment != "colocated":
+            raise ValueError(
+                "prefill_colocated shares prefill streams with decode "
+                "dies — only the colocated deployment has them on one "
+                "die")
+        if not 0 <= sim_cfg.long_context_tes < sim_cfg.n_prefill_tes:
+            raise ValueError(
+                f"long_context_tes={sim_cfg.long_context_tes} must leave "
+                f"at least one general TE of {sim_cfg.n_prefill_tes}")
         for kind, pool, idx in (
                 ("straggler", self.faults.straggler_pool,
                  self.faults.straggler_dp),
@@ -230,9 +284,34 @@ class SuperPodSim:
         self.reconfig = ExpertReconfigurator(
             apply_fn=self._activate_maps,
             bytes_per_replica=self.cost.expert_weight_bytes)
-        self.tes = [_PrefillTE(i, sim_cfg.prefill_streams_per_te,
-                               long_capable=(i == 0))
-                    for i in range(sim_cfg.n_prefill_tes)]
+        n_long = sim_cfg.long_context_tes
+        self.tes = [_PrefillTE(
+            i, sim_cfg.prefill_streams_per_te,
+            long_capable=(i < n_long if n_long else i == 0),
+            long_only=i < n_long,
+            token_budget=sim_cfg.prefill_token_budget,
+            chunk_tokens=sim_cfg.prefill_chunk_tokens)
+            for i in range(sim_cfg.n_prefill_tes)]
+        # PD-colocation map: non-dedicated prefill streams share decode
+        # dies round-robin; dedicated long-context TEs run on their own
+        # hardware (§7.2) and never contend with decode
+        self._stream_die: Dict[Tuple[int, int], int] = {}
+        if sim_cfg.prefill_colocated:
+            g = 0
+            for te in self.tes:
+                if te.long_only:
+                    continue
+                for s in range(sim_cfg.prefill_streams_per_te):
+                    self._stream_die[(te.te_id, s)] = g % sim_cfg.n_sim_dps
+                    g += 1
+        self._prefill_busy_until = [0.0] * sim_cfg.n_sim_dps
+        self._pending_contended: Dict[int, bool] = {}
+        # DP-domain fold: which §5.2 domain each simulated attention DP
+        # belongs to (contiguous split of the folded groups) — a
+        # straggling die gates its whole domain's pipeline slot
+        nd = max(self.plan.n_dp_domains, 1)
+        self._dp_domain = [dp * nd // sim_cfg.n_sim_dps
+                           for dp in range(sim_cfg.n_sim_dps)]
 
         self.die_scale = max(self.plan.n_attention, 1) / sim_cfg.n_sim_dps
         self.metrics = MetricsCollector(n_dies=sim_cfg.total_dies,
@@ -270,47 +349,71 @@ class SuperPodSim:
     def _arrive(self, t: float, req: Request) -> None:
         self.metrics.on_arrival(self.loop.now, req)
         stats = [te.stats(self.loop.now) for te in self.tes]
-        te_id = pick_prefill_te(stats, req)
+        te_id = pick_prefill_te(
+            stats, req, long_threshold=self.cfg.long_context_threshold)
         te = self.tes[te_id]
         te.mean_len = 0.9 * te.mean_len + 0.1 * req.prompt_len
         req.prefill_te = te_id
+        if req.prompt_len > self.cfg.long_context_threshold:
+            self.metrics.n_long_prompts += 1
+            if te.long_only:
+                self.metrics.n_long_routed_dedicated += 1
         te.scheduler.submit(req)
 
     def _done(self) -> bool:
         return (self._arrivals_scheduled
                 and self.n_finished >= self.n_arrivals)
 
-    # -- prefill ----------------------------------------------------------
+    # -- prefill: chunk-granular events on the main loop ------------------
     def _prefill_tick(self) -> None:
-        now = self.loop.now
         for te in self.tes:
             batches = te.scheduler.schedule_step()
-            for stream, batch in enumerate(batches):
-                if not batch:
-                    continue
-                t_batch = sum(
-                    self.cost.prefill_time(
-                        r.prompt_len,
-                        n_dies=self.cfg.prefill_dies_per_stream)
-                    for r in batch)
-                start = max(now, te.busy_until[stream])
-                done_at = start + t_batch
-                te.busy_until[stream] = done_at
-                for r in batch:
-                    r.state = RequestState.PREFILLING
-                self.loop.schedule_at(
-                    done_at, f"prefill_done:te{te.te_id}.s{stream}",
-                    lambda batch=batch: self._prefill_done(batch))
+            for stream, works in enumerate(batches):
+                if works:
+                    te.queues[stream].extend(works)
+                    self._stream_kick(te, stream)
         if not self._done():
             self.loop.schedule(self.cfg.schedule_interval_s,
                                "prefill_tick", self._prefill_tick)
 
-    def _prefill_done(self, batch: List[Request]) -> None:
-        for req in batch:
+    def _stream_kick(self, te: _PrefillTE, stream: int) -> None:
+        """Start the stream's next chunk (streams execute their FIFO
+        serially; the scheduler may run several chunks ahead)."""
+        if te.busy[stream] or not te.queues[stream]:
+            return
+        work = te.queues[stream].popleft()
+        te.busy[stream] = True
+        work.req.state = RequestState.PREFILLING
+        t = self.cost.prefill_chunk_time(
+            work.n_tokens, context=work.start,
+            n_dies=self.cfg.prefill_dies_per_stream)
+        die = self._stream_die.get((te.te_id, stream))
+        if die is not None:
+            # decode iterations overlapping [now, now+t] on this die
+            # pay the prefill contention factor
+            self._prefill_busy_until[die] = max(
+                self._prefill_busy_until[die], self.loop.now + t)
+        self.loop.schedule(
+            t, f"prefill_chunk:te{te.te_id}.s{stream}:{work.req.req_id}",
+            lambda te=te, stream=stream, work=work:
+                self._chunk_done(te, stream, work))
+
+    def _chunk_done(self, te: _PrefillTE, stream: int,
+                    work: ChunkWork) -> None:
+        """One chunk finished: its KV layers start streaming to the
+        decode side immediately (overlapped with the next chunk's
+        compute), so only the FINAL chunk's wire time sits on the TTFT
+        path — the pre-chunking model charged the whole cache's transfer
+        after the whole prompt."""
+        te.busy[stream] = False
+        self.metrics.n_prefill_chunks += 1
+        req = work.req
+        if work.end >= req.prompt_len:
             req.state = RequestState.TRANSFERRING
-            kv_t = self.cost.kv_transfer_time(req.prompt_len)
+            kv_t = self.cost.kv_transfer_time(work.n_tokens)
             self.loop.schedule(kv_t, f"kv_done:{req.req_id}",
                                lambda req=req: self._enqueue_admit(req))
+        self._stream_kick(te, stream)
 
     # -- decode admission -------------------------------------------------
     def _enqueue_admit(self, req: Request) -> None:
@@ -408,6 +511,16 @@ class SuperPodSim:
         cap = len(self.expert_dies) / len(alive)
         return cap * max(d.slowdown for d in alive)
 
+    def _domain_attn_slowdown(self, dp_id: int) -> float:
+        """Max die slowdown across ``dp_id``'s DP DOMAIN: the §5.2
+        pipeline time-multiplexes whole domains through the expert-stage
+        slot, so a straggling attention die gates every domain-mate's
+        pipeline, not just its own folded group."""
+        dom = self._dp_domain[dp_id]
+        return max(die.slowdown
+                   for dp, die in enumerate(self.dies)
+                   if self._dp_domain[dp] == dom)
+
     def _iter_time(self, dp_id: int) -> float:
         dp = self.dps[dp_id]
         positions = [s.position for s in dp.slots if not s.free]
@@ -417,7 +530,8 @@ class SuperPodSim:
                 len(positions), mean_context=max(ctx, 1),
                 moe_imbalance=self._moe_imbalance(),
                 slowdown=self.dies[dp_id].slowdown,
-                expert_slowdown=self._expert_pool_factor())
+                expert_slowdown=self._expert_pool_factor(),
+                attn_stage_slowdown=self._domain_attn_slowdown(dp_id))
             self._pending_pool_cost[dp_id] = c
             t = c.t_iter
         else:
@@ -425,6 +539,11 @@ class SuperPodSim:
                 len(positions), mean_context=max(ctx, 1),
                 moe_imbalance=self._moe_imbalance(),
                 slowdown=self.dies[dp_id].slowdown)
+            if self.loop.now < self._prefill_busy_until[dp_id]:
+                # a prefill chunk is executing on this die: the decode
+                # iteration pays the colocation contention factor
+                t *= self.cost.prefill_decode_contention
+                self._pending_contended[dp_id] = True
         # in-flight EPLB migration: the next iteration eats the weight
         # traffic's UB contention (charged once per pass per DP; in the
         # moe_attn deployment that traffic rides the expert pool's UB
@@ -445,11 +564,14 @@ class SuperPodSim:
         dp = self.dps[dp_id]
         if not self.dies[dp_id].alive or dp.active == 0:
             self._pending_pool_cost.pop(dp_id, None)   # step cancelled
+            self._pending_contended.pop(dp_id, None)
             return
         active = dp.active_requests()
         dp.decode_step_all()
         now = self.loop.now
         self.metrics.n_decode_iters += 1
+        if self._pending_contended.pop(dp_id, None):
+            self.metrics.n_contended_decode_iters += 1
         c = self._pending_pool_cost.pop(dp_id, None)
         if c is not None:
             self.metrics.on_moe_attn_iter(c)

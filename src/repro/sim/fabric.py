@@ -51,6 +51,16 @@ ITER_OVERHEAD = 1.0e-3
 # what makes MoE-Attention disaggregation lose at small batch-per-die
 # (MegaScale-Infer's dispatch-latency regime).
 EXPERT_OP_OVERHEAD = 40.0e-6
+# chunked prefill: fixed per-chunk cost (launch + bucketed-shape program
+# switch + scheduler hand-back) — the price of slicing a prompt, paid
+# once per chunk instead of once per prompt
+PREFILL_CHUNK_OVERHEAD = 0.5e-3
+# PD-colocated interference: a decode iteration that overlaps a prefill
+# chunk on the same die stretches by this factor (the prefill GEMMs hog
+# cube units and HBM bandwidth). Calibratable from the measured
+# interleaved decode/prefill loop in bench_prefill_interference
+# (``prefill/decode_contention`` row).
+PREFILL_DECODE_CONTENTION = 1.6
 
 
 @dataclasses.dataclass
@@ -118,9 +128,13 @@ class SuperPodCostModel:
         self.int8_moe_speedup = INT8_MOE_SPEEDUP
         self.iter_overhead = ITER_OVERHEAD
         self.expert_op_overhead = EXPERT_OP_OVERHEAD
+        self.prefill_chunk_overhead = PREFILL_CHUNK_OVERHEAD
+        self.prefill_decode_contention = PREFILL_DECODE_CONTENTION
         # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
         # t_comb_s)] interpolated in decode_iter_time when present
         self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
+        # measured prefill chunk-time curve: sorted [(chunk_tokens, t_s)]
+        self._calib_prefill: Optional[List[Tuple[float, float]]] = None
         self._derive()
 
     # ------------------------------------------------------------------
@@ -146,6 +160,14 @@ class SuperPodCostModel:
         * ``disagg/expert_op_overhead`` — measured per-(domain,
           microbatch) expert-stage visit cost in µs → replaces
           ``EXPERT_OP_OVERHEAD`` in the ``moe_attn`` deployment rows.
+        * ``prefill/chunk_time/c<N>`` — measured chunked-prefill time in
+          µs for an ``N``-token chunk (``bench_prefill_interference``) →
+          replaces the analytic compute term of
+          :meth:`prefill_chunk_time` by interpolation over chunk sizes.
+        * ``prefill/decode_contention`` — measured decode-iteration
+          stretch factor while a prefill chunk shares the die
+          (DIMENSIONLESS ratio carried in the ``us_per_call`` column) →
+          replaces ``PREFILL_DECODE_CONTENTION``.
 
         Extra keyword args override constants directly
         (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
@@ -158,6 +180,7 @@ class SuperPodCostModel:
             with open(p) as f:
                 rows.extend(json.load(f).get("rows", []))
         comm: List[Tuple[float, float, float]] = []
+        pref: List[Tuple[float, float]] = []
         for row in rows:
             name = row.get("name", "")
             if name.startswith("fig6/dispatch/bpd"):
@@ -172,8 +195,16 @@ class SuperPodCostModel:
                 self.iter_overhead = float(row["us_per_call"]) * 1e-6
             elif name == "disagg/expert_op_overhead":
                 self.expert_op_overhead = float(row["us_per_call"]) * 1e-6
+            elif name.startswith("prefill/chunk_time/c"):
+                chunk = float(name.rsplit("c", 1)[1])
+                pref.append((chunk, float(row["us_per_call"]) * 1e-6))
+            elif name == "prefill/decode_contention":
+                self.prefill_decode_contention = max(
+                    float(row["us_per_call"]), 1.0)
         if comm:
             self._calib_comm = sorted(comm)
+        if pref:
+            self._calib_prefill = sorted(pref)
         for k, v in const_overrides.items():
             if not hasattr(self, k):
                 raise AttributeError(f"unknown cost constant {k!r}")
@@ -264,10 +295,40 @@ class SuperPodCostModel:
     # ------------------------------------------------------------------
     def prefill_time(self, n_tokens: int, n_dies: int = 8,
                      slowdown: float = 1.0) -> float:
-        """Chunked prefill of one prompt over a TP group of dies."""
+        """Monolithic prefill of one whole prompt over a TP group of
+        dies (legacy entry — the chunked path prices per-chunk via
+        :meth:`prefill_chunk_time`)."""
         flops = 2.0 * self.active_params * max(n_tokens, 1)
         t = flops / (n_dies * PEAK_FLOPS * self.prefill_mfu)
         return (t + 2e-3) * slowdown
+
+    def prefill_chunk_time(self, chunk_tokens: int, context: int = 0,
+                           n_dies: int = 8, slowdown: float = 1.0
+                           ) -> float:
+        """One prefill CHUNK of ``chunk_tokens`` tokens at prompt offset
+        ``context`` over a TP group of dies.
+
+        The dense-GEMM term is linear in the chunk; the attention term
+        grows with the context the chunk attends over (earlier chunks'
+        KV), so late chunks of a long prompt genuinely cost more — the
+        §7.2 long-context regime the dedicated TE pools exist for. A
+        measured ``prefill/chunk_time/c<N>`` calibration curve replaces
+        the dense term; the context term stays analytic (the calibration
+        bench measures fixed-offset chunks). Fixed per-chunk overhead
+        ``prefill_chunk_overhead`` is the cost of slicing."""
+        n = max(chunk_tokens, 1)
+        if self._calib_prefill:
+            xs = [c[0] for c in self._calib_prefill]
+            t = float(np.interp(n, xs,
+                                [c[1] for c in self._calib_prefill]))
+        else:
+            flops = 2.0 * self.active_params * n
+            t = flops / (n_dies * PEAK_FLOPS * self.prefill_mfu)
+        n_layers = self.n_moe_layers + self.n_dense_layers
+        ctx_flops = (n * (context + n / 2.0)
+                     * self.attn_flops_per_ctx_tok * n_layers)
+        t += ctx_flops / (n_dies * PEAK_FLOPS * self.prefill_mfu)
+        return (t + self.prefill_chunk_overhead) * slowdown
 
     def kv_transfer_time(self, n_tokens: int) -> float:
         """PD KV move of one request's prefilled context (per layer ×
@@ -474,8 +535,9 @@ class SuperPodCostModel:
                                   moe_imbalance=1.0,
                                   slowdown: float = 1.0,
                                   expert_slowdown: float = 1.0,
-                                  microbatches: Optional[int] = None
-                                  ) -> MoEAttnIterCost:
+                                  microbatches: Optional[int] = None,
+                                  attn_stage_slowdown: Optional[float]
+                                  = None) -> MoEAttnIterCost:
         """One decode iteration of an attention-pool DP group under the
         MoE-Attention disaggregated deployment.
 
@@ -488,7 +550,17 @@ class SuperPodCostModel:
         ``expert_slowdown`` scales every layer's expert stage (a hot or
         degraded expert-pool die gates ALL attention DPs — pool-aware
         fault injection), while ``slowdown`` is this DP's own
-        attention-die factor."""
+        attention-die factor (it scales the attention-side terms: dense
+        layers, iteration overhead, and — by default — the pipeline's
+        attention stage).
+
+        ``attn_stage_slowdown`` overrides the factor applied to the
+        PIPELINE's attention stage alone: the §5.2 schedule time-
+        multiplexes a whole DP DOMAIN through each expert-stage slot, so
+        a straggling attention die gates the pipeline of every
+        domain-mate — the simulator passes the domain's max die slowdown
+        here while ``slowdown`` stays this die's own factor (per-DOMAIN
+        fault targeting)."""
         if batch_per_die <= 0:
             return MoEAttnIterCost(self.iter_overhead, 0.0, 0.0, 0.0,
                                    0.0, 0, 0)
@@ -498,9 +570,11 @@ class SuperPodCostModel:
             imbs = [float(v) for v in np.asarray(moe_imbalance).ravel()]
         else:
             imbs = [float(moe_imbalance)]
+        attn_sl = (slowdown if attn_stage_slowdown is None
+                   else attn_stage_slowdown)
         distinct = [
             self.moe_attn_stage_times(b, ctx, v, microbatches)
-            .scaled(moe=expert_slowdown) for v in imbs]
+            .scaled(attn=attn_sl, moe=expert_slowdown) for v in imbs]
         L = max(self.n_moe_layers, 1)
         m = len(distinct)
         # folded per-layer view: entry g covers layers [g·L/m, (g+1)·L/m)
@@ -510,15 +584,16 @@ class SuperPodCostModel:
         t_pipe = rep.iteration_time
 
         t_dense = self._attn_time(b, ctx) + self._dense_ffn_time(b)
-        t_iter = (t_pipe + self.n_dense_layers * t_dense
-                  + self.iter_overhead) * slowdown
+        t_iter = (t_pipe
+                  + (self.n_dense_layers * t_dense + self.iter_overhead)
+                  * slowdown)
 
         e = self.cfg.moe
         d = self.cfg.d_model
         n_assign = b * max(e.top_k, 1) * self.n_moe_layers
         return MoEAttnIterCost(
             t_iter=t_iter,
-            t_pipeline=t_pipe * slowdown,
+            t_pipeline=t_pipe,
             attn_busy_frac=rep.attention_busy,
             expert_busy_frac=rep.expert_busy,
             bubble_frac=max(0.0, 1.0 - rep.expert_busy),
@@ -538,6 +613,7 @@ class CostModelBackend(ExecutionBackend):
     """
 
     SIM_VOCAB = 64
+    supports_chunked_prefill = True
 
     def __init__(self, dp_id: int, cost: SuperPodCostModel):
         self.dp_id = dp_id
@@ -545,6 +621,7 @@ class CostModelBackend(ExecutionBackend):
         self.vocab_size = self.SIM_VOCAB
         self.n_prefills = 0
         self.n_decode_steps = 0
+        self.n_prefill_chunks = 0
         # EPLB data plane (apply_placement contract): the active
         # PlacementTable and how many swaps this die has taken
         self.placement = None
@@ -567,6 +644,32 @@ class CostModelBackend(ExecutionBackend):
         logits = np.zeros((v,), np.float32)
         logits[nxt] = 1.0
         return {"sim_dp": self.dp_id, "prefill_len": len(tokens)}, logits
+
+    def prefill_chunk(self, cache, tokens: List[int], offset: int,
+                      total_len: int):
+        """Chunk-counting implementation of the ``prefill_chunk``
+        contract: accumulates the deterministic token hash so the final
+        chunk's logits equal :meth:`prefill`'s for the whole prompt."""
+        self.n_prefill_chunks += 1
+        if cache is None:
+            if offset != 0:
+                raise ValueError("first chunk must start at offset 0")
+            cache = {"sim_dp": self.dp_id, "prefill_len": 0,
+                     "tok_sum": 0}
+        if offset != cache["prefill_len"]:
+            raise ValueError(
+                f"non-contiguous chunk: offset {offset} != "
+                f"{cache['prefill_len']}")
+        cache = dict(cache)
+        cache["tok_sum"] += sum(tokens)
+        cache["prefill_len"] += len(tokens)
+        if cache["prefill_len"] < total_len:
+            return cache, None
+        v = self.vocab_size
+        nxt = (cache["tok_sum"] * 31 + cache["prefill_len"] * 7 + 13) % v
+        logits = np.zeros((v,), np.float32)
+        logits[nxt] = 1.0
+        return cache, logits
 
     def write_slot(self, cache, cache1, slot: int):
         return cache

@@ -76,6 +76,12 @@ class MetricsCollector:
         self.reconfig_time_s = 0.0    # fabric time charged to migrations
         self.n_failovers = 0
         self.n_decode_iters = 0
+        # chunked prefill: chunks executed, decode iterations stretched
+        # by a co-resident prefill chunk, and §7.2 long-context routing
+        self.n_prefill_chunks = 0
+        self.n_contended_decode_iters = 0
+        self.n_long_prompts = 0
+        self.n_long_routed_dedicated = 0
         # moe_attn deployment: per-pool accounting over the MoE-layer
         # pipeline windows (seconds are virtual, per simulated DP; byte
         # counts are scaled to the whole pod by die_scale)
@@ -167,6 +173,11 @@ class MetricsCollector:
             "reconfig_time_s": round(self.reconfig_time_s, 9),
             "n_failovers": self.n_failovers,
             "n_decode_iters": self.n_decode_iters,
+            # chunked prefill + §7.2 long-context routing
+            "n_prefill_chunks": self.n_prefill_chunks,
+            "n_contended_decode_iters": self.n_contended_decode_iters,
+            "n_long_prompts": self.n_long_prompts,
+            "n_long_routed_dedicated": self.n_long_routed_dedicated,
             # per-pool view (moe_attn deployment; zeros when colocated):
             # utilizations are busy fractions of the MoE-layer pipeline
             # windows, bubble is the expert pool's idle share — the

@@ -39,6 +39,12 @@ class WorkloadConfig:
     max_output: int = 512
     min_prompt: int = 16
     max_prompt: int = 6144
+    # §7.2 long-context traffic: a fraction of prompts drawn around
+    # ``long_context_len`` (above the router's dedicated-TE threshold),
+    # NOT clipped to max_prompt. 0 leaves the RNG stream untouched so
+    # existing seeds reproduce byte-identically.
+    long_context_fraction: float = 0.0
+    long_context_len: int = 16384
     expert_skew: float = 0.0          # Zipf exponent; 0 → uniform experts
     seed: int = 0
 
@@ -82,6 +88,18 @@ class WorkloadGen:
 
     def _one_request(self) -> Request:
         c = self.cfg
+        if (c.long_context_fraction > 0
+                and self.rng.random() < c.long_context_fraction):
+            # §7.2 long-context request: clipped only from below — it
+            # must stay above the dedicated-TE routing threshold
+            plen = int(max(self.rng.lognormal(np.log(c.long_context_len),
+                                              0.3), c.min_prompt))
+            out = int(np.clip(
+                self.rng.lognormal(np.log(c.mean_output), 0.6), 4,
+                c.max_output))
+            toks = self.rng.integers(2, 60, plen).tolist()
+            return Request(prompt_tokens=toks, max_new_tokens=out,
+                           ignore_eos=True, temperature=0.0)
         if self.rng.random() < c.long_fraction:
             mean = c.long_len
         else:

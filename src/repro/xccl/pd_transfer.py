@@ -11,11 +11,24 @@ Because prefill and decode use DIFFERENT shardings (TP=4-style prefill vs
 EP+DP decode; cache sequence-sharded on decode), the transfer includes a
 reshard. ``plan_transfer`` computes per-leaf byte counts so DistFlow can
 model/queue the transfer; ``execute_transfer`` performs it.
+
+Chunk streaming (chunked prefill)
+---------------------------------
+
+With chunk-granular prefill, KV no longer ships as one post-hoc bulk
+copy: each finished chunk's layers stream to the decode side WHILE the
+next chunk computes. :func:`slice_kv_chunk` cuts one chunk's token range
+out of a (partial) prefill cache, :func:`assemble_chunks` re-concatenates
+received chunks on the decode side, and :func:`chunk_stream_time` is the
+shared latency model of the compute/transfer pipeline — the exposed
+transfer cost of a streamed prefill is essentially the LAST chunk's
+transfer, everything earlier hides under later chunks' compute (the
+overlap P/D-Serve and CloudMatrix-Infer rely on for TTFT tails).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -60,3 +73,66 @@ def execute_transfer(kv: PyTree, dst_shardings: Optional[PyTree] = None)\
     if dst_shardings is None:
         return kv
     return jax.device_put(kv, dst_shardings)
+
+
+# ---------------------------------------------------------------------------
+# Chunk streaming
+# ---------------------------------------------------------------------------
+def _seq_axis(path) -> int:
+    """Sequence axis of a KV-cache leaf: stacked superblock leaves
+    ``[n_sb, B, L, ...]`` carry it at 2, prefix/tail leaves
+    ``[B, L, ...]`` at 1 (the same path-key convention
+    ``JAXBackend.write_slot`` uses for the batch axis)."""
+    keys = [getattr(p, "key", None) for p in path]
+    return 2 if "blocks" in keys else 1
+
+
+def slice_kv_chunk(kv: PyTree, start: int, end: int) -> PyTree:
+    """Cut token positions ``[start, end)`` out of a prefill cache —
+    the per-chunk payload a streamed PD transfer ships. Only valid for
+    sequence-addressed caches (ATTN / MLA), i.e. backends advertising
+    ``supports_chunked_prefill``."""
+    def one(path, leaf):
+        ax = _seq_axis(path)
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slice(start, end)
+        return leaf[tuple(idx)]
+    return jax.tree_util.tree_map_with_path(one, kv)
+
+
+def assemble_chunks(chunks: Sequence[PyTree]) -> PyTree:
+    """Decode-side reassembly: concatenate received chunk payloads back
+    into one contiguous cache along the sequence axis (inverse of
+    :func:`slice_kv_chunk` over consecutive ranges)."""
+    if not chunks:
+        raise ValueError("no chunks to assemble")
+    if len(chunks) == 1:
+        return chunks[0]
+    import jax.numpy as jnp
+
+    def cat(path, *leaves):
+        return jnp.concatenate(leaves, axis=_seq_axis(path))
+    return jax.tree_util.tree_map_with_path(cat, chunks[0], *chunks[1:])
+
+
+def chunk_stream_time(chunk_bytes: Sequence[int],
+                      chunk_compute_s: Sequence[float],
+                      fabric: str = "ub") -> Tuple[float, float]:
+    """Latency model of layer/chunk-overlapped KV streaming.
+
+    Chunk ``i``'s transfer starts when its compute finishes and the link
+    is free; chunk ``i+1``'s compute runs concurrently. Returns
+    ``(total_time, exposed_transfer)`` where ``exposed_transfer`` is the
+    transfer time NOT hidden under compute — for well-sized chunks this
+    is just the final chunk's wire time, vs the whole cache's for a
+    post-hoc bulk copy."""
+    if len(chunk_bytes) != len(chunk_compute_s):
+        raise ValueError("chunk_bytes and chunk_compute_s must align")
+    t = 0.0
+    link_free = 0.0
+    for nbytes, compute in zip(chunk_bytes, chunk_compute_s):
+        t += compute                      # compute end of this chunk
+        start = max(t, link_free)
+        link_free = start + best_transfer_time(int(nbytes), fabric)
+    total = max(link_free, t)
+    return total, total - t

@@ -1,0 +1,282 @@
+"""Chunked prefill as an execution contract, end to end.
+
+Fast tier: the ``prefill_chunk`` contract on the cost-model backend and
+the buffering fallback, chunk-stream KV slicing/assembly/overlap models.
+Slow tier (``TestJAX``): bit-identity of chunked vs monolithic prefill
+on ``JAXBackend`` (logits AND final KV cache on the valid region), the
+chunked FlowServe engine, and chunk-streamed PD disaggregation.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.serving.backend import ExecutionBackend
+from repro.serving.request import Request
+from repro.serving.scheduler import ChunkWork
+from repro.sim.fabric import CostModelBackend, SuperPodCostModel
+
+
+def _cost():
+    cfg = get_config("deepseek-v3-671b")
+    return SuperPodCostModel(cfg, plan_partition(cfg, 768))
+
+
+# ---------------------------------------------------------------------------
+# contract: cost-model backend + buffering fallback (fast tier)
+# ---------------------------------------------------------------------------
+def test_cost_backend_chunked_matches_monolithic():
+    be = CostModelBackend(0, _cost())
+    toks = list(range(2, 90))
+    _, logits_m = be.prefill(toks)
+    cache = None
+    out = None
+    for off in range(0, len(toks), 32):
+        cache, out = be.prefill_chunk(cache, toks[off:off + 32], off,
+                                      len(toks))
+    np.testing.assert_array_equal(logits_m, out)
+    assert be.n_prefill_chunks == 3
+    assert cache["prefill_len"] == len(toks)
+
+
+def test_cost_backend_non_final_chunks_return_no_logits():
+    be = CostModelBackend(0, _cost())
+    cache, out = be.prefill_chunk(None, [1, 2, 3], 0, 6)
+    assert out is None
+    with pytest.raises(ValueError, match="non-contiguous"):
+        be.prefill_chunk(cache, [4], 5, 6)
+    with pytest.raises(ValueError, match="offset 0"):
+        be.prefill_chunk(None, [4], 3, 6)
+
+
+class _BufferingBackend(ExecutionBackend):
+    """Minimal backend exercising the base-class fallback (architectures
+    without incremental prefill)."""
+    vocab_size = 8
+
+    def init_cache(self, max_batch, max_len):
+        return {}
+
+    def prefill(self, tokens):
+        logits = np.zeros((8,), np.float32)
+        logits[sum(tokens) % 8] = 1.0
+        return {"n": len(tokens)}, logits
+
+    def write_slot(self, cache, cache1, slot):
+        return cache
+
+    def decode(self, cache, tokens, positions):
+        raise NotImplementedError
+
+    def decode_sample(self, cache, tokens, positions, temperatures, step,
+                      *, donate=True):
+        raise NotImplementedError
+
+
+def test_default_fallback_buffers_until_final_chunk():
+    be = _BufferingBackend()
+    assert not be.supports_chunked_prefill
+    toks = list(range(10))
+    cache, out = be.prefill_chunk(None, toks[:4], 0, 10)
+    assert out is None
+    cache, out = be.prefill_chunk(cache, toks[4:], 4, 10)
+    _, ref = be.prefill(toks)
+    np.testing.assert_array_equal(out, ref)
+    assert cache == {"n": 10}
+
+
+# ---------------------------------------------------------------------------
+# chunk-stream KV model (fast tier)
+# ---------------------------------------------------------------------------
+def test_chunk_stream_time_overlap():
+    from repro.xccl.pd_transfer import chunk_stream_time
+    cost = _cost()
+    kv_per_tok = cost.kv_bytes_per_token * (cost.n_moe_layers
+                                            + cost.n_dense_layers)
+    chunks = [2048] * 4
+    cbytes = [int(c * kv_per_tok) for c in chunks]
+    ctimes = [cost.prefill_chunk_time(c, context=i * 2048)
+              for i, c in enumerate(chunks)]
+    total, exposed = chunk_stream_time(cbytes, ctimes)
+    bulk = cost.kv_transfer_time(sum(chunks))
+    assert exposed < bulk, "streamed chunks must hide transfer time"
+    # exposed tail is at least the final chunk's wire time
+    assert exposed >= cost.kv_transfer_time(2048) * 0.99
+    assert total == pytest.approx(sum(ctimes) + exposed)
+    # degenerate single chunk: nothing to overlap with
+    t1, e1 = chunk_stream_time([cbytes[0]], [ctimes[0]])
+    assert e1 == pytest.approx(cost.kv_transfer_time(2048), rel=1e-6)
+    with pytest.raises(ValueError):
+        chunk_stream_time([1, 2], [0.1])
+
+
+def test_slice_and_assemble_roundtrip():
+    import jax.numpy as jnp
+    from repro.xccl.pd_transfer import (assemble_chunks, pytree_bytes,
+                                        slice_kv_chunk)
+    rng = np.random.default_rng(0)
+    kv = {
+        "prefix": ({"k": jnp.asarray(rng.normal(size=(1, 16, 2, 4)),
+                                     jnp.float32)},),
+        "blocks": {"pos0": {"ckv": jnp.asarray(
+            rng.normal(size=(3, 1, 16, 8)), jnp.float32)}},
+    }
+    parts = [slice_kv_chunk(kv, a, b) for a, b in ((0, 6), (6, 12),
+                                                   (12, 16))]
+    # chunk payloads split the bytes exactly
+    assert sum(pytree_bytes(p) for p in parts) == pytree_bytes(kv)
+    back = assemble_chunks(parts)
+    np.testing.assert_array_equal(back["prefix"][0]["k"],
+                                  kv["prefix"][0]["k"])
+    np.testing.assert_array_equal(back["blocks"]["pos0"]["ckv"],
+                                  kv["blocks"]["pos0"]["ckv"])
+
+
+# ---------------------------------------------------------------------------
+# chunk pricing (fast tier)
+# ---------------------------------------------------------------------------
+def test_prefill_chunk_time_grows_with_context():
+    cost = _cost()
+    t0 = cost.prefill_chunk_time(1024, context=0)
+    t_late = cost.prefill_chunk_time(1024, context=16384)
+    assert t_late > t0 * 1.05, \
+        "late chunks attend over more context and must cost more"
+    # monotone in chunk size; overhead floors tiny chunks
+    ts = [cost.prefill_chunk_time(c) for c in (64, 256, 1024, 4096)]
+    assert ts == sorted(ts)
+    assert ts[0] >= cost.prefill_chunk_overhead
+    # chunking shares the dense-GEMM FLOPs model with the monolithic
+    # entry: the split prompt costs the whole-prompt compute plus the
+    # per-chunk overheads and the (real) attention-context term — more
+    # than monolithic, but bounded
+    whole = cost.prefill_time(4096, n_dies=16)
+    split = sum(cost.prefill_chunk_time(1024, context=i * 1024, n_dies=16)
+                for i in range(4))
+    assert whole - 2e-3 < split < 2.0 * whole
+
+
+def test_from_calibration_prefill_rows(tmp_path):
+    import json
+    cfg = get_config("deepseek-v3-671b")
+    plan = plan_partition(cfg, 768)
+    rows = [
+        {"name": "prefill/chunk_time/c256", "us_per_call": 1000.0,
+         "derived": ""},
+        {"name": "prefill/chunk_time/c1024", "us_per_call": 3000.0,
+         "derived": ""},
+        {"name": "prefill/decode_contention", "us_per_call": 2.5,
+         "derived": "ratio"},
+    ]
+    p = tmp_path / "BENCH_prefill_interference.json"
+    p.write_text(json.dumps({"benchmark": "prefill_interference",
+                             "rows": rows}))
+    cal = SuperPodCostModel.from_calibration(cfg, plan, str(p))
+    assert cal.prefill_decode_contention == 2.5
+    # measured curve replaces the compute term; the analytic context/
+    # self-attention term and the per-chunk overhead stay on top
+    from repro.roofline.analysis import PEAK_FLOPS
+    nl = cal.n_moe_layers + cal.n_dense_layers
+
+    def self_term(n, dies=8):
+        return (n * (n / 2.0) * cal.attn_flops_per_ctx_tok * nl
+                / (dies * PEAK_FLOPS * cal.prefill_mfu))
+
+    assert cal.prefill_chunk_time(256) == pytest.approx(
+        1000e-6 + cal.prefill_chunk_overhead + self_term(256))
+    assert cal.prefill_chunk_time(1024) == pytest.approx(
+        3000e-6 + cal.prefill_chunk_overhead + self_term(1024))
+    # interpolated between sampled chunk sizes
+    t_mid = cal.prefill_chunk_time(512) - self_term(512) \
+        - cal.prefill_chunk_overhead
+    assert 1000e-6 < t_mid < 3000e-6
+
+
+# ---------------------------------------------------------------------------
+# JAX backend: bit-identity + engines (slow tier)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestJAX:
+    @pytest.mark.parametrize("arch", ["internlm2-1.8b",
+                                      "deepseek-v3-671b"])
+    def test_chunked_bit_identical_to_monolithic(self, arch, make_model):
+        """Acceptance gate: same logits AND same KV cache (valid region)
+        from N chunks as from one monolithic prefill — exactly, not
+        approximately — on both a GQA+MLP and an MLA+MoE stack."""
+        from repro.serving.backend import JAXBackend
+        from repro.xccl.pd_transfer import slice_kv_chunk
+        cfg, m, params = make_model(arch)
+        be = JAXBackend(m, params, max_len=256)
+        assert be.supports_chunked_prefill
+        rng = np.random.default_rng(3)
+        toks = rng.integers(2, 60, 100).tolist()
+        cache_m, logits_m = be.prefill(toks)
+        cache_c = None
+        off = 0
+        for n in (48, 48, 4):
+            cache_c, logits_c = be.prefill_chunk(cache_c,
+                                                 toks[off:off + n], off,
+                                                 len(toks))
+            off += n
+        np.testing.assert_array_equal(np.asarray(logits_m),
+                                      np.asarray(logits_c))
+        valid_m = slice_kv_chunk(cache_m, 0, len(toks))
+        valid_c = slice_kv_chunk(cache_c, 0, len(toks))
+        import jax
+        for lm, lc in zip(jax.tree.leaves(valid_m),
+                          jax.tree.leaves(valid_c)):
+            np.testing.assert_array_equal(np.asarray(lm, np.float32),
+                                          np.asarray(lc, np.float32))
+
+    def test_single_chunk_equals_monolithic(self, make_model):
+        cfg, m, params = make_model("internlm2-1.8b")
+        from repro.serving.backend import JAXBackend
+        be = JAXBackend(m, params, max_len=256)
+        toks = list(range(2, 50))
+        _, logits_m = be.prefill(toks)
+        _, logits_c = be.prefill_chunk(None, toks, 0, len(toks))
+        np.testing.assert_array_equal(np.asarray(logits_m),
+                                      np.asarray(logits_c))
+
+    def test_chunked_engine_matches_monolithic_outputs(self):
+        from repro.serving import FlowServeEngine
+        cfg = get_config("internlm2-1.8b-smoke")
+        eng = FlowServeEngine(cfg, n_dp_groups=2, max_batch=2,
+                              max_len=128, seed=7)
+        prompts = ["hello world", "chunked prefill test", "abc"]
+        out_m = eng.generate(prompts, max_new_tokens=6)
+        chunked = FlowServeEngine(cfg, params=eng.params, n_dp_groups=2,
+                                  max_batch=2, max_len=128, seed=7,
+                                  chunk_tokens=8)
+        out_c = chunked.generate(prompts, max_new_tokens=6)
+        assert out_m == out_c
+        req = chunked.submit_text("count those chunks please", 4,
+                                  ignore_eos=True)
+        chunked.run_until_done()
+        assert req.n_prefill_chunks > 1
+        assert req.prefill_pos == req.prompt_len
+        eng.close()
+        chunked.close()
+
+    def test_pd_disagg_streams_chunk_kv(self):
+        """The disaggregated pipeline ships KV per chunk (overlapped
+        with the next chunk's compute) and still matches the colocated
+        engine's greedy tokens."""
+        from repro.core import DisaggregatedPD
+        from repro.serving import FlowServeEngine
+        cfg = get_config("internlm2-1.8b-smoke")
+        eng = FlowServeEngine(cfg, n_dp_groups=1, max_batch=2,
+                              max_len=128, seed=7)
+        out_co = eng.generate(["same tokens please"], max_new_tokens=6)
+        pd = DisaggregatedPD(cfg, params=eng.params, n_prefill_te=1,
+                             n_decode_te=1, dp_per_te=1, max_batch=2,
+                             max_len=128, chunk_tokens=8)
+        reqs = [Request(prompt="same tokens please", max_new_tokens=6)]
+        done = pd.run_until_done(reqs)
+        assert eng.tokenizer.decode(done[0].output_tokens) == out_co[0]
+        streamed = sum(f.chunks_streamed for f in pd.distflow.values())
+        assert streamed > 1, "KV must ship chunk by chunk"
+        assert sum(f.bytes_moved for f in pd.distflow.values()) > 0
+        assert not any(f.streams for f in pd.distflow.values()), \
+            "streams must be consumed at admission"
+        eng.close()
+        pd.close()

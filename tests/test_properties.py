@@ -370,3 +370,59 @@ def test_prefix_cache_exact_hit_semantics(toks):
         assert h2 is None or h2.tokens == tuple(other)
     else:
         assert pc.lookup(toks) is None
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill scheduler (§4.3 token-budget admission over chunks)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, 3000), min_size=1, max_size=24),
+    n_dps=st.integers(1, 4),
+    budget=st.integers(64, 4096),
+    chunk=st.one_of(st.none(), st.integers(16, 2048)),
+)
+def test_chunk_scheduler_invariants(lens, n_dps, budget, chunk):
+    """1) No chunk exceeds the token budget (or the chunk size), 2)
+    every admitted request's chunks are contiguous, non-overlapping and
+    cover the whole prompt exactly once, on a single DP, 3) per-DP
+    per-step emissions respect the token budget, 4) with the default
+    chunk size, budget-sized prompts degenerate to ONE chunk."""
+    from repro.serving.request import Request
+    from repro.serving.scheduler import PrefillScheduler
+    s = PrefillScheduler(n_dps=n_dps, token_budget=budget,
+                         chunk_tokens=chunk)
+    reqs = [Request(prompt_tokens=[0] * n) for n in lens]
+    for r in reqs:
+        s.submit(r)
+    per_req = {r.req_id: [] for r in reqs}
+    req_dp = {}
+    for _ in range(1000):
+        batches = s.schedule_step()
+        for dp, works in enumerate(batches):
+            step_toks = 0
+            for w in works:
+                assert w.n_tokens <= s.token_budget
+                assert w.n_tokens <= s.chunk_tokens
+                step_toks += w.n_tokens
+                per_req[w.req.req_id].append(w)
+                req_dp.setdefault(w.req.req_id, dp)
+                assert req_dp[w.req.req_id] == dp, \
+                    "chunks must stay on the DP holding the partial KV"
+            assert step_toks <= s.token_budget
+        if not s.pending and not s.queue:
+            break
+    else:
+        raise AssertionError("scheduler did not drain")
+    for r in reqs:
+        works = per_req[r.req_id]
+        assert works, f"prompt of {r.prompt_len} never scheduled"
+        assert works[0].start == 0
+        for a, b in zip(works, works[1:]):
+            assert b.start == a.end, "chunks must be contiguous"
+        assert works[-1].end == r.prompt_len, "chunks must cover all"
+        assert r.prefill_pos == r.prompt_len
+        assert r.n_prefill_chunks == len(works)
+        if chunk is None and r.prompt_len <= budget:
+            assert len(works) == 1, \
+                "budget-sized prompts degenerate to one chunk"

@@ -1,11 +1,13 @@
-"""DP load-balancer unit coverage (§4.3): PrefillScheduler length-bucket
-anti-straggler batching, DecodeLoadBalancer KV-headroom exclusion, and
-JE-level prefill-TE selection. Pure control-plane — no JAX."""
+"""DP load-balancer unit coverage (§4.3): PrefillScheduler chunk-granular
+length-bucket anti-straggler batching, DecodeLoadBalancer KV-headroom
+exclusion, and JE-level prefill-TE selection. Pure control-plane — no
+JAX."""
 import pytest
 
 from repro.serving.request import Request
-from repro.serving.scheduler import (DecodeLoadBalancer, DPStatus,
-                                     PrefillScheduler, pick_prefill_te)
+from repro.serving.scheduler import (ChunkWork, DecodeLoadBalancer,
+                                     DPStatus, PrefillScheduler,
+                                     pick_prefill_te)
 
 
 def req(n: int, **kw) -> Request:
@@ -13,7 +15,7 @@ def req(n: int, **kw) -> Request:
 
 
 # ---------------------------------------------------------------------------
-# PrefillScheduler: anti-straggler length bucketing
+# PrefillScheduler: anti-straggler length bucketing over chunks
 # ---------------------------------------------------------------------------
 def test_mixed_length_queue_stays_balanced():
     """No DP may draw a batch >2x the token count of another when the
@@ -24,7 +26,7 @@ def test_mixed_length_queue_stays_balanced():
     for n in lens:
         s.submit(req(n))
     batches = s.schedule_step()
-    toks = [sum(r.prompt_len for r in b) for b in batches]
+    toks = [sum(w.n_tokens for w in b) for b in batches]
     assert all(b for b in batches), f"every DP gets work: {toks}"
     assert max(toks) <= 2 * min(toks), f"straggler imbalance: {toks}"
 
@@ -37,7 +39,7 @@ def test_length_buckets_keep_batches_homogeneous():
         s.submit(req(n))
     batches = s.schedule_step()
     for b in batches:
-        kinds = {r.prompt_len for r in b}
+        kinds = {w.req.prompt_len for w in b}
         assert kinds == {64, 2048}, "round-robin within buckets"
 
 
@@ -59,7 +61,103 @@ def test_cache_hit_priority():
     s.submit(hot)
     batches = s.schedule_step(hit_rate_fn=lambda r: 1.0 if r is hot
                               else 0.0)
-    assert batches[0][0] is hot, "cache-hot request schedules first"
+    assert batches[0][0].req is hot, "cache-hot request schedules first"
+
+
+# ---------------------------------------------------------------------------
+# PrefillScheduler: chunk-granular behavior
+# ---------------------------------------------------------------------------
+def drain_chunks(s: PrefillScheduler, max_steps: int = 100):
+    """Run schedule_step until no work remains; returns all emitted
+    ChunkWork in order (per-DP lists flattened per step)."""
+    out = []
+    for _ in range(max_steps):
+        batches = s.schedule_step()
+        works = [w for b in batches for w in b]
+        if not works and not s.pending:
+            return out
+        out.extend(works)
+    raise AssertionError("scheduler did not drain")
+
+
+def test_prompt_splits_into_contiguous_chunks():
+    s = PrefillScheduler(n_dps=1, token_budget=4096, chunk_tokens=512)
+    r = req(1700)
+    s.submit(r)
+    works = drain_chunks(s)
+    assert [w.n_tokens for w in works] == [512, 512, 512, 164]
+    assert [w.start for w in works] == [0, 512, 1024, 1536]
+    assert works[0].is_first and works[-1].is_last
+    assert r.prefill_pos == 1700 and r.n_prefill_chunks == 4
+
+
+def test_budget_sized_prompt_degenerates_to_one_chunk():
+    """chunk_tokens defaults to the token budget: prompts within it get
+    exactly one chunk — the pre-chunking behavior."""
+    s = PrefillScheduler(n_dps=2, token_budget=4096)
+    rs = [req(600), req(4096)]
+    for r in rs:
+        s.submit(r)
+    works = drain_chunks(s)
+    assert len(works) == 2
+    assert all(w.is_first and w.is_last for w in works)
+
+
+def test_inflight_continues_before_new_admissions():
+    """A partially-prefilled request's next chunk is emitted before a
+    newly queued request gets its first chunk on the same DP."""
+    s = PrefillScheduler(n_dps=1, token_budget=512, chunk_tokens=512)
+    long_req = req(2048)
+    s.submit(long_req)
+    first = s.schedule_step()[0]
+    assert [w.req for w in first] == [long_req]
+    s.submit(req(512))
+    nxt = s.schedule_step()[0]
+    # budget 512 per step: the in-flight request's chunk consumes it all
+    assert [w.req for w in nxt] == [long_req]
+    assert nxt[0].start == 512
+
+
+def test_inflight_requests_stay_pinned_to_their_dp():
+    s = PrefillScheduler(n_dps=4, token_budget=1024, chunk_tokens=256)
+    rs = [req(1000) for _ in range(4)]
+    for r in rs:
+        s.submit(r)
+    assignment = {}
+    for _ in range(10):
+        batches = s.schedule_step()
+        for dp, b in enumerate(batches):
+            for w in b:
+                assignment.setdefault(w.req.req_id, set()).add(dp)
+        if not s.pending:
+            break
+    assert all(len(dps) == 1 for dps in assignment.values()), \
+        "chunks of one request must all run where its KV cache lives"
+
+
+def test_can_admit_fn_vetoes_new_first_chunks():
+    s = PrefillScheduler(n_dps=2, token_budget=1024)
+    s.submit(req(100))
+    batches = s.schedule_step(can_admit_fn=lambda dp, r: dp == 1)
+    assert not batches[0] and len(batches[1]) == 1
+
+
+def test_requeue_dp_resets_cursor_and_moves_back_to_queue():
+    """§6.2 failover for in-flight chunked prefills: the partial KV on
+    a dead DP is lost, so the request restarts from token 0 wherever
+    the next step places it."""
+    s = PrefillScheduler(n_dps=2, token_budget=512, chunk_tokens=512)
+    r = req(2000)
+    s.submit(r)
+    first = s.schedule_step()
+    dp = next(i for i, b in enumerate(first) if b)
+    assert r.prefill_pos == 512 and r in s.inflight[dp]
+    moved = s.requeue_dp(dp)
+    assert moved == [r] and r.prefill_pos == 0
+    assert not s.inflight[dp] and r in s.queue
+    # rescheduling restarts from the first chunk
+    works = drain_chunks(s)
+    assert works[0].start == 0 and works[-1].end == 2000
 
 
 # ---------------------------------------------------------------------------

@@ -74,7 +74,7 @@ def test_prefill_scheduler_balances_lengths():
     for r in short + long:
         s.submit(r)
     batches = s.schedule_step()
-    tok = [sum(r.prompt_len for r in b) for b in batches]
+    tok = [sum(w.n_tokens for w in b) for b in batches]
     assert abs(tok[0] - tok[1]) <= 1024, f"straggler imbalance: {tok}"
 
 

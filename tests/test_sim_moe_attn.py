@@ -299,3 +299,51 @@ def test_per_pool_metrics_reported():
     col = run_sim(sim_kw={"deployment": "colocated"})
     assert col.summary["a2e_bytes"] == 0
     assert col.summary["expert_pool_util"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-DOMAIN fault targeting (ROADMAP leftover): a straggling attention
+# die gates every domain-mate's pipeline slot, not just its own group
+# ---------------------------------------------------------------------------
+def test_attention_straggler_slows_domain_mates():
+    from repro.serving.dp_group import Slot
+    from repro.serving.request import Request
+    sim = SuperPodSim(SimConfig(arch=ARCH, **SMALL),
+                      WorkloadConfig(seed=5, **WL))
+    # 4 sim DPs folded onto 3 DP domains: dps 0,1 share domain 0
+    assert sim._dp_domain == [0, 0, 1, 2]
+    for dp in sim.dps:
+        dp.slots[0] = Slot(req=Request(prompt_tokens=[1] * 8,
+                                       max_new_tokens=4),
+                           next_token=3, position=64)
+    base = [sim._iter_time(i) for i in range(4)]
+    sim.dies[1].slowdown = 3.0
+    slowed = [sim._iter_time(i) for i in range(4)]
+    # the straggler itself is slowest (own dense layers + pipeline)
+    assert slowed[1] > slowed[0] > base[0] * 1.01, \
+        "domain-mate 0 must inherit the pipeline-slot slowdown"
+    # other domains' pipelines are untouched
+    assert slowed[2] == pytest.approx(base[2], rel=1e-9)
+    assert slowed[3] == pytest.approx(base[3], rel=1e-9)
+
+
+def test_attn_stage_slowdown_scales_pipeline_only():
+    """Cost-model seam for the per-domain targeting: the stage factor
+    inflates the DomainPipeline share; the per-die factor inflates the
+    attention-side dense/overhead terms; defaults reproduce each
+    other."""
+    cfg = get_config(ARCH)
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    c0 = cost.moe_attn_decode_iter_time(96, 1024)
+    c_stage = cost.moe_attn_decode_iter_time(96, 1024,
+                                             attn_stage_slowdown=3.0)
+    assert c_stage.t_pipeline > c0.t_pipeline * 1.5
+    # dense-layer + overhead share is NOT scaled by the stage factor
+    assert c_stage.t_iter - c_stage.t_pipeline == pytest.approx(
+        c0.t_iter - c0.t_pipeline, rel=1e-9)
+    # default: attn_stage_slowdown falls back to the die's own slowdown
+    c_own = cost.moe_attn_decode_iter_time(96, 1024, slowdown=2.0)
+    c_expl = cost.moe_attn_decode_iter_time(96, 1024, slowdown=2.0,
+                                            attn_stage_slowdown=2.0)
+    assert c_own.t_iter == c_expl.t_iter
+    assert c_own.t_iter > c0.t_iter
