@@ -1,0 +1,165 @@
+"""Radix prefix cache: seed-vs-compute cost + sim prefix-share sweep.
+
+Measures, on the real jitted smoke model:
+
+* ``prefix_cache/seed_time`` / ``prefix_cache/prefix_compute`` — wall
+  time of seeding a prefill cache from stored KV block payloads vs
+  recomputing the same prefix through the chunk program.
+* ``prefill/hit_skip`` — the DIMENSIONLESS skip factor derived from the
+  two (1.0 = seeding is free, 0.0 = seeding costs as much as the
+  compute it replaces; rides the ``us_per_call`` column). Loaded by
+  ``SuperPodCostModel.from_calibration`` to price the residual cost of
+  radix chunk-skips in the simulator.
+* ``prefix_cache/match_us`` / ``prefix_cache/insert_us`` — radix tree
+  operation latency on a populated tree (control-plane overhead of the
+  cache itself).
+
+Then sweeps the SuperPod simulator's multi-turn session workload over
+``prefix_share`` and emits mean TTFT / hit counters per share. The smoke
+gate asserts TTFT DROPS as shared-prefix traffic rises — the paper's
+prefix-caching payoff, end to end through scheduler, radix directory,
+chunk-skip and pricing.
+
+Writes ``BENCH_prefix_cache.json`` for
+``SuperPodCostModel.from_calibration`` / CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, reset, time_fn, write_json
+
+
+def bench_seed_vs_compute(smoke: bool) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.mesh_ctx import make_smoke_ctx
+    from repro.models.transformer import build_model
+    from repro.serving.backend import JAXBackend
+
+    iters = 5 if smoke else 20
+    max_len = 256 if smoke else 1024
+    cfg = get_config("deepseek-v3-671b-smoke")
+    model = build_model(cfg, make_smoke_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    be = JAXBackend(model, params, max_len=max_len)
+    assert be.supports_prefix_kv
+    rng = np.random.default_rng(0)
+
+    bs = 16
+    n_prefix = (128 if smoke else 512)          # full blocks
+    n_suffix = 64
+    total = n_prefix + n_suffix
+    toks = rng.integers(2, 60, total).tolist()
+
+    # stored payloads: what a radix hit hands to seed_prefill_cache
+    cache_p, _ = be.prefill_chunk(None, toks[:n_prefix], 0, n_prefix)
+    payloads = [be.slice_prefill_kv(cache_p, toks[:n_prefix],
+                                    b * bs, (b + 1) * bs)
+                for b in range(n_prefix // bs)]
+
+    def seed():
+        return be.seed_prefill_cache(payloads, n_prefix, total)
+
+    def prefix_compute():
+        cache, _ = be.prefill_chunk(None, toks[:n_prefix], 0, total)
+        return cache
+
+    def warm_path():
+        cache = be.seed_prefill_cache(payloads, n_prefix, total)
+        _, logits = be.prefill_chunk(cache, toks[n_prefix:], n_prefix,
+                                     total)
+        return logits
+
+    def cold_path():
+        _, logits = be.prefill_chunk(None, toks, 0, total)
+        return logits
+
+    seed_us = time_fn(seed, iters=iters, warmup=2)
+    prefix_us = time_fn(prefix_compute, iters=iters, warmup=2)
+    warm_us = time_fn(warm_path, iters=iters, warmup=2)
+    cold_us = time_fn(cold_path, iters=iters, warmup=2)
+    emit("prefix_cache/seed_time", seed_us,
+         f"seed_prefill_cache of {n_prefix} cached tokens")
+    emit("prefix_cache/prefix_compute", prefix_us,
+         f"prefill_chunk of the same {n_prefix} tokens")
+    emit("prefix_cache/warm_prefill", warm_us,
+         f"seed + {n_suffix}-token suffix chunk")
+    emit("prefix_cache/cold_prefill", cold_us,
+         f"monolithic {total}-token prefill")
+    # skip factor: fraction of the replaced compute the seed does NOT
+    # pay (the sim charges (1 - skip) * prefill_chunk_time(hit))
+    hit_skip = float(np.clip(1.0 - seed_us / max(prefix_us, 1e-9),
+                             0.0, 1.0))
+    emit("prefill/hit_skip", hit_skip,
+         f"seed {seed_us:.0f}us vs compute {prefix_us:.0f}us "
+         "(dimensionless skip factor in us_per_call column)")
+
+    # radix control-plane latency on a populated tree
+    from repro.serving.kv_cache import RadixTree
+    tree = RadixTree(capacity_blocks=4096, block_size=bs)
+    prompts = []
+    for _ in range(64):
+        base = prompts[-1][:rng.integers(0, 128)] if prompts else []
+        p = list(base) + rng.integers(2, 60, 256).tolist()
+        tree.insert(p)
+        prompts.append(p)
+    q = prompts[-1] + rng.integers(2, 60, 64).tolist()
+    match_us = time_fn(lambda: tree.match_blocks(list(q)),
+                       iters=50, warmup=5)
+    insert_us = time_fn(
+        lambda: tree.insert(list(rng.integers(2, 60, 256))),
+        iters=50, warmup=5)
+    emit("prefix_cache/match_us", match_us,
+         f"match_blocks over {len(tree)} nodes")
+    emit("prefix_cache/insert_us", insert_us, "insert of 16 new blocks")
+
+
+def sweep_prefix_share(smoke: bool) -> None:
+    from repro.sim import SimConfig, SuperPodSim, WorkloadConfig
+
+    shares = (0.0, 0.5) if smoke else (0.0, 0.25, 0.5, 0.75)
+    ttfts = {}
+    for share in shares:
+        sim = SuperPodSim(
+            SimConfig(arch="deepseek-v3-671b", n_sim_dps=4,
+                      n_prefill_tes=1, eplb_interval_s=0.5),
+            WorkloadConfig(arrival_rate=40.0,
+                           duration_s=1.0 if smoke else 2.0,
+                           prefix_share=share, seed=5))
+        s = sim.run().summary
+        ttfts[share] = s["ttft_mean_s"]
+        emit(f"prefix_cache/ttft_mean/share{share:g}",
+             s["ttft_mean_s"] * 1e6,
+             f"hits={s['n_prefix_hits']} "
+             f"hit_toks={s['n_prefix_hit_tokens']} "
+             f"chunks_skipped={s['n_prefill_chunks_skipped']} "
+             f"n={s['n_finished']}")
+    lo, hi = min(shares), max(shares)
+    if ttfts[hi] >= ttfts[lo]:
+        raise RuntimeError(
+            f"prefix cache must cut TTFT: share {hi} gives "
+            f"{ttfts[hi]:.4f}s vs {ttfts[lo]:.4f}s at share {lo}")
+    emit("prefix_cache/ttft_speedup", ttfts[lo] / max(ttfts[hi], 1e-9),
+         f"mean-TTFT ratio share {lo} vs {hi} "
+         "(ratio in us_per_call column)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model / few iters (CI)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default BENCH_prefix_cache.json)")
+    args, _ = ap.parse_known_args()
+    reset()
+    bench_seed_vs_compute(args.smoke)
+    sweep_prefix_share(args.smoke)
+    write_json("prefix_cache", args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,9 +61,12 @@ class PrefillTE:
         return {
             "te_id": self.te_id,
             "load": sum(len(self.scheduler.queue) for _ in (0,)),
+            # real radix-cache hit rate (lifetime fraction of queried
+            # blocks served from cache) — feeds the hit-fraction-aware
+            # TE routing of pick_prefill_te
             "cache_hit": float(np.mean([
-                d.prefix_cache.match_fraction([1, 2, 3, 4]) or 0.0
-                for d in self.dps]) if self.dps else 0.0),
+                d.prefix_cache.hit_rate for d in self.dps])
+                if self.dps else 0.0),
             "mean_len": 512,
             "long": self.long_capable,
         }
@@ -129,6 +132,11 @@ class DisaggregatedPD:
                 self.distflow[key] = DistFlowInstance(key, fabric=p.fabric)
 
         self._pending_admit: List[Dict] = []
+        # per-request KV-stream watermark: tokens shipped to decode so
+        # far (radix chunk-skips make shipped ranges diverge from
+        # ChunkWork boundaries — the seeded prefix is never executed but
+        # must still reach the decode TE)
+        self._shipped: Dict[int, int] = {}
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -164,21 +172,28 @@ class DisaggregatedPD:
             if req.req_id not in flow.streams:
                 flow.open_stream(req.req_id,
                                  {"prompt_len": req.prompt_len})
+            lo = self._shipped.get(req.req_id, 0)
             if done is None:
-                # step 3/7 chunk-wise: ship the finished chunk's layers
-                # now — the wire time hides under the next chunk's
-                # compute (async SEND on the MTE/SDMA engines)
-                flow.stream_chunk(
-                    req.req_id,
-                    slice_kv_chunk(dp.partial_prefill_cache(req),
-                                   work.start, end))
+                # step 3/7 chunk-wise: ship every valid-but-unshipped
+                # position now — the wire time hides under the next
+                # chunk's compute (async SEND on the MTE/SDMA engines).
+                # The valid watermark is the executed end OR the radix-
+                # seeded prefix (prefill_pos after a chunk-skip),
+                # whichever is further.
+                hi = max(end, min(req.prefill_pos, req.prompt_len))
+                if hi > lo:
+                    flow.stream_chunk(
+                        req.req_id,
+                        slice_kv_chunk(dp.partial_prefill_cache(req),
+                                       lo, hi))
+                    self._shipped[req.req_id] = hi
                 return
             cache1, logits = done
-            # final (or prefix-cache-hit) slice: stream whatever the
-            # earlier chunks have not shipped yet
-            shipped = work.start if not work.is_first else 0
+            # final slice: stream whatever earlier chunks have not
+            # shipped yet (from 0 when the prompt completed in one go)
+            self._shipped.pop(req.req_id, None)
             flow.stream_chunk(req.req_id,
-                              slice_kv_chunk(cache1, shipped,
+                              slice_kv_chunk(cache1, lo,
                                              req.prompt_len),
                               last=True)
             req.state = RequestState.TRANSFERRING

@@ -1,7 +1,8 @@
 from repro.serving.request import Job, Request, RequestState, SLA
 from repro.serving.tokenizer import ByteTokenizer, EOS, PAD
-from repro.serving.kv_cache import (BlockAllocator, OutOfBlocks, PrefixCache,
-                                    hash_blocks)
+from repro.serving.kv_cache import (BlockAllocator, DoubleFree, OutOfBlocks,
+                                    PrefixCache, PrefixMatch, RadixNode,
+                                    RadixTree, hash_blocks)
 from repro.serving.scheduler import (ChunkWork, DecodeLoadBalancer,
                                      DPStatus, PrefillScheduler,
                                      pick_prefill_te)

@@ -81,6 +81,36 @@ Contract details:
   the final chunk — chunk SCHEDULING still applies, execution cost
   does not split.
 
+The prefix-KV contract — radix-cache seeding
+--------------------------------------------
+
+``slice_prefill_kv(cache, tokens, start, end)`` extracts the KV payload
+of token range ``[start, end)`` from a completed (or partial) batch-1
+prefill cache, and ``seed_prefill_cache(payloads, prefix_len, total_len)``
+rebuilds a partial-prefill cache whose first ``prefix_len`` positions
+hold those payloads — the handle it returns is what ``prefill_chunk``
+accepts at ``offset == prefix_len``. Together they are the storage/reuse
+half of the radix-tree prefix cache (``serving/kv_cache.py``): on insert
+the :class:`~repro.serving.dp_group.DPGroup` slices one payload per KV
+block, and on a partial hit it seeds a fresh cache from the stored
+blocks so only the un-cached suffix runs through the chunk programs.
+Contract details:
+
+* ``payloads`` is a list of consecutive block slices (as produced by
+  ``slice_prefill_kv``) covering ``[0, prefix_len)`` in order.
+* The seeded cache must make a subsequent
+  ``prefill_chunk(seeded, tokens[prefix_len:], prefix_len, total_len)``
+  BIT-IDENTICAL to the cold chunked prefill of the same prompt — same
+  final logits, same KV on the valid region. On :class:`JAXBackend`
+  the payload slices are fresh arrays (never the donated chunk buffer)
+  and seeding writes them into a fresh ``init_cache`` buffer, so the
+  donation discipline of ``prefill_chunk`` is preserved.
+* ``supports_prefix_kv`` gates the whole path: it requires
+  ``supports_chunked_prefill`` (seeding continues mid-prompt) and a
+  seq-addressed cache layout (``xccl/pd_transfer.py`` slicing). When
+  False, the radix tree still tracks hit statistics for scheduler
+  routing, but no KV is stored and no compute is skipped.
+
 The ``apply_placement`` contract — the EPLB data plane
 ------------------------------------------------------
 
@@ -151,6 +181,28 @@ class ExecutionBackend(abc.ABC):
         if len(buf) >= total_len:
             return self.prefill(buf)
         return cache, None
+
+    #: True when the backend can slice per-block KV payloads out of a
+    #: prefill cache and seed a new partial-prefill cache from them —
+    #: see the prefix-KV contract in the module docstring.
+    supports_prefix_kv: bool = False
+
+    def slice_prefill_kv(self, cache: PyTree, tokens: List[int],
+                         start: int, end: int) -> PyTree:
+        """Extract the KV payload for token range ``[start, end)`` from a
+        batch-1 prefill cache (``tokens`` is the full prompt — backends
+        whose cache has no per-position content, like the sim's cost
+        model, derive the payload from the token range instead)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support prefix-KV slicing")
+
+    def seed_prefill_cache(self, payloads: List[PyTree], prefix_len: int,
+                           total_len: int) -> PyTree:
+        """Build a partial-prefill cache whose ``[0, prefix_len)`` region
+        holds the given consecutive block payloads; the result is valid
+        ``prefill_chunk`` input at ``offset == prefix_len``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support prefix-KV seeding")
 
     @abc.abstractmethod
     def write_slot(self, cache: PyTree, cache1: PyTree,
@@ -318,6 +370,41 @@ class JAXBackend(ExecutionBackend):
             self.params, cache, arr, jnp.int32(offset),
             jnp.asarray([n - 1], jnp.int32))
         return cache, np.asarray(logits[0], np.float32)
+
+    @property
+    def supports_prefix_kv(self) -> bool:
+        """Prefix-KV seeding rides the same incremental-prefill machinery
+        as chunking (seq-addressed cache, resumable mid-prompt)."""
+        return self.supports_chunked_prefill
+
+    def slice_prefill_kv(self, cache: PyTree, tokens: List[int],
+                         start: int, end: int) -> PyTree:
+        from repro.xccl.pd_transfer import slice_kv_chunk
+
+        # slice_kv_chunk produces fresh arrays — required, since the
+        # chunk programs donate their cache buffer and the radix tree
+        # must hold payloads that outlive it
+        return slice_kv_chunk(cache, start, end)
+
+    def seed_prefill_cache(self, payloads: List[PyTree], prefix_len: int,
+                           total_len: int) -> PyTree:
+        """Write the stored block payloads into a fresh full-length cache
+        buffer at positions ``[0, prefix_len)``. Eager (one-shot per hit):
+        the buffer then flows through the jitted chunk programs, which
+        only touch positions >= offset, so the seeded region survives
+        bit-exactly."""
+        import jax
+        from repro.xccl.pd_transfer import assemble_chunks
+
+        Lc = min(_bucket_len(max(total_len, 1)), self.max_len)
+        fresh = self.model.init_cache(1, Lc)
+        kv = assemble_chunks(list(payloads))
+
+        def one(full, part):
+            return jax.lax.dynamic_update_slice(
+                full, part.astype(full.dtype), (0,) * full.ndim)
+
+        return jax.tree_util.tree_map(one, fresh, kv)
 
     @staticmethod
     def _write_slot_impl(cache: PyTree, cache1: PyTree, slot):

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.serving.backend import ExecutionBackend
 from repro.serving.gc_control import ProactiveGC, pin_to_core
-from repro.serving.kv_cache import BlockAllocator, PrefixCache
+from repro.serving.kv_cache import BlockAllocator, RadixTree
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import DPStatus
 from repro.serving.tokenizer import EOS, PAD, ByteTokenizer
@@ -52,6 +52,7 @@ class DPGroup:
     def __init__(self, dp_id: int, backend: ExecutionBackend, *,
                  max_batch: int = 4, max_len: int = 256,
                  n_kv_blocks: int = 512, block_size: int = 16,
+                 n_cache_blocks: Optional[int] = None,
                  gc_every: int = 200, pin_core: Optional[int] = None):
         self.dp_id = dp_id
         self.backend = backend
@@ -59,7 +60,19 @@ class DPGroup:
         self.max_len = max_len
         self.tokenizer = ByteTokenizer()
         self.allocator = BlockAllocator(n_kv_blocks, block_size)
-        self.prefix_cache = PrefixCache()
+        # the radix prefix cache pages its stored KV out of its OWN block
+        # pool (default: same size as the request pool), so cached-but-
+        # unreferenced KV never counts against live requests in the
+        # kv_usage-based DP balancing of §4.3
+        self.prefix_cache = RadixTree(
+            capacity_blocks=(n_kv_blocks if n_cache_blocks is None
+                             else n_cache_blocks),
+            block_size=block_size)
+        # payload storage/seeding only when the backend can slice KV and
+        # resume mid-prompt; otherwise the tree still tracks hit stats
+        self._prefix_kv = bool(
+            getattr(backend, "supports_prefix_kv", False)
+            and backend.supports_chunked_prefill)
         self.gc_ctl = ProactiveGC(gc_every)
         pin_to_core(pin_core)
 
@@ -88,6 +101,8 @@ class DPGroup:
         # chunked prefill: req_id → backend-opaque partial-prefill cache
         # (dropped when the final chunk completes or the request leaves)
         self._chunk_caches: Dict[int, PyTree] = {}
+        # req_id → locked radix path while the request seeds from it
+        self._chunk_locks: Dict[int, List[Any]] = {}
 
     # ------------------------------------------------------------------
     # output shortcutting worker
@@ -103,8 +118,26 @@ class DPGroup:
     # ------------------------------------------------------------------
     # prefill path
     # ------------------------------------------------------------------
+    def _cache_insert(self, toks: List[int], cache: PyTree) -> None:
+        """Store the prompt's full KV blocks in the radix cache. The
+        slicer runs only for blocks not already cached; without prefix-KV
+        backend support the tree is accounting-only (hit statistics for
+        TE routing)."""
+        if self._prefix_kv:
+            self.prefix_cache.insert(
+                toks,
+                lambda s, e: self.backend.slice_prefill_kv(
+                    cache, toks, s, e))
+        else:
+            self.prefix_cache.insert(toks)
+
     def run_prefill(self, req: Request) -> Tuple[PyTree, np.ndarray]:
-        """Returns (batch-1 cache, last-position logits [V])."""
+        """Returns (batch-1 cache, last-position logits [V]).
+
+        A radix-cache hit seeds a fresh prefill cache from the stored
+        block payloads and runs only the un-cached suffix through the
+        chunk program (the match is capped below the prompt length, so
+        there is always a real forward producing last-token logits)."""
         toks = req.prompt_tokens
         # context clipping: a prompt must leave room for generation inside
         # this DP's cache (production would route it to a long-capable TE;
@@ -113,12 +146,23 @@ class DPGroup:
         if len(toks) > limit:
             toks = toks[-limit:]
             req.prompt_tokens = toks
-        hit = self.prefix_cache.lookup(toks)
-        if hit is not None and hit.cache is not None:
-            return hit.cache, np.asarray(hit.last_logits)
-        cache, logits = self.backend.prefill(toks)
+        m = self.prefix_cache.match_blocks(toks) if self._prefix_kv \
+            else None
+        if m is not None and m.n_blocks > 0 and m.has_payloads:
+            self.prefix_cache.lock(m.nodes)
+            try:
+                seeded = self.backend.seed_prefill_cache(
+                    m.payloads, m.n_tokens, len(toks))
+                cache, logits = self.backend.prefill_chunk(
+                    seeded, toks[m.n_tokens:], m.n_tokens, len(toks))
+            finally:
+                self.prefix_cache.unlock(m.nodes)
+            req.prefix_hit_tokens = max(req.prefix_hit_tokens,
+                                        m.n_tokens)
+        else:
+            cache, logits = self.backend.prefill(toks)
         logits = np.asarray(logits, np.float32)
-        self.prefix_cache.insert(toks, cache, logits)
+        self._cache_insert(toks, cache)
         return cache, logits
 
     def run_prefill_chunk(self, work) -> Optional[Tuple[PyTree,
@@ -126,11 +170,18 @@ class DPGroup:
         """Execute one :class:`~repro.serving.scheduler.ChunkWork` via
         the backend's ``prefill_chunk`` contract.
 
+        On the FIRST chunk the radix cache is consulted: a matched block
+        prefix seeds the partial prefill cache from stored KV, advances
+        ``req.prefill_pos`` past fully-cached chunks (the scheduler then
+        emits only suffix chunks), and locks the matched path until the
+        prefill completes or is dropped. Blocks are allocated chunk-
+        granularly — the request only holds blocks for tokens prefilled
+        so far.
+
         Returns ``(batch-1 cache, last-position logits [V])`` once the
-        prompt's prefill COMPLETES (final chunk, or a full prefix-cache
-        hit on the first chunk — which jumps ``req.prefill_pos`` so the
-        scheduler drops the now-moot remaining chunks); ``None`` while
-        chunks are still outstanding."""
+        prompt's prefill COMPLETES (final chunk); ``None`` while chunks
+        are still outstanding or when this chunk was skipped entirely
+        off a cache hit."""
         req = work.req
         toks = req.prompt_tokens
         # context clipping mirrors run_prefill — engines clip at submit,
@@ -140,19 +191,36 @@ class DPGroup:
             toks = toks[-limit:]
             req.prompt_tokens = toks
             req.prefill_pos = min(req.prefill_pos, len(toks))
+        start = work.start
         if work.is_first:
-            self._chunk_caches.pop(req.req_id, None)
-            hit = self.prefix_cache.lookup(toks)
-            if hit is not None and hit.cache is not None:
-                req.prefill_pos = len(toks)   # cancel remaining chunks
-                return hit.cache, np.asarray(hit.last_logits)
-        chunk = toks[work.start:min(work.end, len(toks))]
+            self._drop_chunk_state(req)
+            if self._prefix_kv:
+                m = self.prefix_cache.match_blocks(toks)
+                if m.n_blocks > 0 and m.has_payloads:
+                    self.prefix_cache.lock(m.nodes)
+                    self._chunk_locks[req.req_id] = m.nodes
+                    self._chunk_caches[req.req_id] = \
+                        self.backend.seed_prefill_cache(
+                            m.payloads, m.n_tokens, len(toks))
+                    req.prefix_hit_tokens = m.n_tokens
+                    self.allocator.extend(req.req_id, m.n_tokens)
+                    if m.n_tokens >= work.end:
+                        # whole chunk cached: skip execution, jump the
+                        # cursor past every fully-cached chunk
+                        req.prefill_pos = max(req.prefill_pos,
+                                              m.n_tokens)
+                        return None
+                    start = m.n_tokens    # run only the chunk's suffix
+        end = min(work.end, len(toks))
+        chunk = toks[start:end]
+        self.allocator.extend(req.req_id, end)
         cache, logits = self.backend.prefill_chunk(
-            self._chunk_caches.pop(req.req_id, None), chunk, work.start,
+            self._chunk_caches.pop(req.req_id, None), chunk, start,
             len(toks))
         if work.end >= len(toks):             # prompt complete
             logits = np.asarray(logits, np.float32)
-            self.prefix_cache.insert(toks, cache, logits)
+            self._unlock_chunk(req)
+            self._cache_insert(toks, cache)
             return cache, logits
         self._chunk_caches[req.req_id] = cache
         return None
@@ -164,24 +232,44 @@ class DPGroup:
         compute."""
         return self._chunk_caches.get(req.req_id)
 
-    def drop_partial_prefill(self, req: Request) -> None:
-        """Release a partially-prefilled request's chunk cache (failover
-        or cancellation)."""
+    def _unlock_chunk(self, req: Request) -> None:
+        nodes = self._chunk_locks.pop(req.req_id, None)
+        if nodes:
+            self.prefix_cache.unlock(nodes)
+
+    def _drop_chunk_state(self, req: Request) -> None:
         self._chunk_caches.pop(req.req_id, None)
+        self._unlock_chunk(req)
+        # chunk-granular blocks held by an unfinished prefill go back to
+        # the pool (an admitted request's blocks are freed by
+        # _finish/evict instead)
+        if all(s.req is not req for s in self.slots):
+            self.allocator.free(req.req_id, missing_ok=True)
+
+    def drop_partial_prefill(self, req: Request) -> None:
+        """Release a partially-prefilled request's chunk cache, radix
+        locks and chunk-granular block allocation (failover or
+        cancellation) — without this, cancelled requests would strand
+        blocks and pin cached subtrees."""
+        self._drop_chunk_state(req)
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
     def can_admit(self, req: Request) -> bool:
         has_slot = any(s.free for s in self.slots)
-        return has_slot and self.allocator.can_allocate(
-            req.prompt_len + req.max_new_tokens)
+        # chunk-granular allocation means the request may already hold
+        # blocks for its prefilled tokens — only the growth must fit
+        need = req.prompt_len + req.max_new_tokens
+        have = self.allocator.owned_tokens(req.req_id)
+        return has_slot and (need <= have
+                             or self.allocator.can_allocate(need - have))
 
     def admit(self, req: Request, cache1: PyTree,
               last_logits: np.ndarray) -> int:
         slot_id = next(i for i, s in enumerate(self.slots) if s.free)
-        self.allocator.allocate(req.req_id,
-                                req.prompt_len + req.max_new_tokens)
+        self.allocator.extend(req.req_id,
+                              req.prompt_len + req.max_new_tokens)
         self.cache = self.backend.write_slot(self.cache, cache1, slot_id)
         first = self._sample(last_logits, req.temperature)
         req.n_emitted += 1

@@ -1,26 +1,48 @@
-"""Paged KV block allocator + RTC-style prefix cache.
+"""Paged KV block allocator + radix-tree prefix cache (FlowServe RTC).
 
 Each DP group owns a :class:`BlockAllocator` accounting for its NPU-local
 KV memory in fixed-size blocks (decode admission control and the
-KV-usage-based DP load balancing of §4.3 read these counters), and a
-:class:`PrefixCache` (the Relational Tensor Cache role from FlowServe
-[10]): prompts are hashed block-wise; an exact-prefix hit returns the
-stored prefill artifacts so the prefill forward is skipped entirely.
+KV-usage-based DP load balancing of §4.3 read these counters).  Requests
+hold blocks chunk-granularly: a chunked prefill extends its allocation as
+each `ChunkWork` executes, so a request only ever owns blocks for tokens
+prefilled so far.
+
+:class:`RadixTree` is the Relational Tensor Cache role from FlowServe
+[10], in the RadixAttention idiom: prompts are keyed by *cumulative*
+block hashes (`hash_blocks` — hash equality implies an identical token
+prefix), stored as path-compressed edges whose nodes reference per-block
+KV payloads plus the `BlockAllocator` blocks that back them.  A lookup
+returns the longest cached block-prefix; `DPGroup.run_prefill_chunk`
+seeds the partial prefill cache from the stored KV and runs only the
+un-cached suffix through the chunk programs — a *partial* hit skips
+compute, not just an exact whole-prompt hit.  Per-node refcounts pin
+in-use paths (lock/unlock covers the whole matched root path) and
+eviction is strictly leaf-wise: only a childless unreferenced node is
+ever removed, so a locked node — and every ancestor above it, which by
+construction still has children — survives any amount of pool pressure,
+and freed blocks go back to the pool.
 
 The tensor payloads live host-side as pytrees (the app-data area in XCCL
-terms); slot insertion copies them into the DP's dense decode cache.
+terms), one per block; seeding assembles them into a fresh prefill cache
+via the backend's `seed_prefill_cache` contract (`serving/backend.py`).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+import itertools
+from typing import Any, Callable, Dict, List, Optional
 
 PyTree = Any
 
 
 class OutOfBlocks(RuntimeError):
+    pass
+
+
+class DoubleFree(RuntimeError):
+    """Raised when `BlockAllocator.free` is called for an owner that holds
+    no blocks (double-free / free-of-unknown-owner)."""
     pass
 
 
@@ -69,8 +91,19 @@ class BlockAllocator:
             return []
         return self.allocate(owner, need_tokens)
 
-    def free(self, owner: int) -> int:
-        blocks = self._owned.pop(owner, [])
+    def holds(self, owner: int) -> bool:
+        return owner in self._owned
+
+    def owned_tokens(self, owner: int) -> int:
+        """Token capacity of the blocks an owner currently holds."""
+        return len(self._owned.get(owner, ())) * self.block_size
+
+    def free(self, owner: int, *, missing_ok: bool = False) -> int:
+        if owner not in self._owned:
+            if missing_ok:
+                return 0
+            raise DoubleFree(f"owner {owner} holds no blocks")
+        blocks = self._owned.pop(owner)
         self._free.extend(blocks)
         return len(blocks)
 
@@ -80,7 +113,8 @@ class BlockAllocator:
 
 def hash_blocks(tokens: List[int], block_size: int = 16) -> List[str]:
     """Rolling block hashes (each hash covers the whole prefix up to and
-    including its block — standard prefix-cache keying)."""
+    including its block — standard prefix-cache keying, so hash equality
+    implies token-prefix equality)."""
     out = []
     h = hashlib.sha256()
     n_full = len(tokens) // block_size
@@ -92,65 +126,286 @@ def hash_blocks(tokens: List[int], block_size: int = 16) -> List[str]:
 
 
 @dataclasses.dataclass
-class PrefixEntry:
-    tokens: Tuple[int, ...]
-    cache: PyTree              # prefill cache pytree (host refs)
-    last_logits: PyTree
+class RadixNode:
+    """One path-compressed edge of the radix tree.
+
+    `hashes[i]` keys the i-th block of the edge; `payloads[i]` is that
+    block's KV pytree (None when the tree is accounting-only) and
+    `block_ids[i]` its backing block in the tree's allocator.  `start`
+    is the token offset of the edge's first block, so the edge covers
+    tokens [start, start + len(hashes) * block_size).
+    """
+    hashes: List[str]
+    start: int
+    parent: Optional["RadixNode"]
+    payloads: List[PyTree]
+    block_ids: List[int]
+    node_id: int
+    children: Dict[str, "RadixNode"] = dataclasses.field(default_factory=dict)
+    ref: int = 0
+    tick: int = 0
     hits: int = 0
 
 
-class PrefixCache:
-    """Exact-prefix reuse keyed by rolling block hashes with LRU eviction.
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of `RadixTree.match_blocks`: the longest cached block-prefix
+    of the query, as the root path of matched nodes plus their flattened
+    per-block payloads."""
+    n_tokens: int
+    n_blocks: int
+    nodes: List[RadixNode]
+    payloads: List[PyTree]
 
-    A full RTC also supports partial-prefix continuation (prefilling only
-    the un-cached suffix); our Model.prefill is whole-prompt, so partial
-    hits contribute to the scheduler's cost model (hit-rate aware routing,
-    §4.3) but only exact hits skip compute. Noted in DESIGN.md.
+    @property
+    def has_payloads(self) -> bool:
+        return all(p is not None for p in self.payloads)
+
+
+class RadixTree:
+    """Radix-tree prefix cache over paged KV blocks.
+
+    - `match_blocks(tokens)` walks the cumulative-hash chain and returns
+      the longest cached block-prefix, capped below `len(tokens)` so at
+      least one suffix token is always left to prefill (the chunk
+      programs need a real forward to produce last-token logits).
+    - `lock/unlock(nodes)` pin a matched root path while a request seeds
+      from it; eviction is leaf-only, so the locked path's deepest node
+      is protected by its ref and every node above it by its children
+      (a later `_split` of a locked node leaves the new parent
+      unreferenced on purpose — lock holders release exactly the node
+      objects they locked).
+    - `insert(tokens, payload_fn)` adds the un-cached suffix blocks,
+      allocating from the tree's own allocator (evicting unreferenced
+      LRU leaves on pressure) — re-inserting a cached prefix is a no-op,
+      and *only* real payload-bearing blocks are ever stored (no
+      placeholder sentinel entries: interior prefixes are simply interior
+      nodes of the tree).
+    - `evict(n_blocks)` removes unreferenced LRU leaves until the target
+      is met, freeing their blocks back to the pool.
     """
 
-    def __init__(self, capacity: int = 64, block_size: int = 16):
-        self.capacity = capacity
+    def __init__(self, capacity_blocks: int = 4096, block_size: int = 16,
+                 allocator: Optional[BlockAllocator] = None):
         self.block_size = block_size
-        self._store: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+        self.allocator = allocator if allocator is not None else \
+            BlockAllocator(capacity_blocks, block_size)
+        self._ids = itertools.count()
+        self.root = RadixNode([], 0, None, [], [], next(self._ids))
+        self._nodes: Dict[int, RadixNode] = {}
+        self._tick = 0
+        # hit statistics (scheduler cost model / TE routing)
+        self.n_queries = 0
+        self.query_blocks = 0
+        self.hit_blocks = 0
 
-    def _key(self, tokens: List[int]) -> Optional[str]:
-        hs = hash_blocks(tokens, self.block_size)
-        return hs[-1] if hs else None
-
-    def lookup(self, tokens: List[int]) -> Optional[PrefixEntry]:
-        key = self._key(tokens)
-        if key is None:
-            return None
-        e = self._store.get(key)
-        if e is not None and tuple(tokens) == e.tokens:
-            e.hits += 1
-            self._store.move_to_end(key)
-            return e
-        return None
-
-    def match_fraction(self, tokens: List[int]) -> float:
-        """Longest cached block-prefix fraction (scheduler cost model)."""
-        hs = hash_blocks(tokens, self.block_size)
-        hit = 0
-        for h in hs:
-            if h in self._store:
-                hit += 1
-            else:
-                break
-        return hit / max(len(hs), 1)
-
-    def insert(self, tokens: List[int], cache: PyTree, last_logits) -> None:
-        key = self._key(tokens)
-        if key is None:
-            return
-        # register every block prefix for match_fraction lookups
-        for h in hash_blocks(tokens, self.block_size)[:-1]:
-            self._store.setdefault(
-                h, PrefixEntry(tuple(), None, None))
-        self._store[key] = PrefixEntry(tuple(tokens), cache, last_logits)
-        self._store.move_to_end(key)
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+    # -- introspection ------------------------------------------------
 
     def __len__(self) -> int:
-        return len(self._store)
+        """Number of cached nodes (edges)."""
+        return len(self._nodes)
+
+    @property
+    def n_cached_blocks(self) -> int:
+        return self.allocator.used_blocks
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of queried blocks served from cache (lifetime)."""
+        return self.hit_blocks / max(self.query_blocks, 1)
+
+    def evictable_blocks(self) -> int:
+        return sum(len(n.block_ids) for n in self._nodes.values()
+                   if n.ref == 0)
+
+    # -- matching -----------------------------------------------------
+
+    def _match_cap(self, tokens: List[int]) -> int:
+        # never match the whole prompt: reserve >= 1 token of suffix
+        return max(len(tokens) - 1, 0) // self.block_size
+
+    def match_fraction(self, tokens: List[int]) -> float:
+        """Longest cached block-prefix fraction (read-only: no splits,
+        no LRU/stat updates — safe to call from scheduler scoring loops)."""
+        hs = hash_blocks(tokens, self.block_size)
+        if not hs:
+            return 0.0
+        hit, node = 0, self.root
+        while hit < len(hs):
+            child = node.children.get(hs[hit])
+            if child is None:
+                break
+            k = 0
+            while (k < len(child.hashes) and hit + k < len(hs)
+                   and child.hashes[k] == hs[hit + k]):
+                k += 1
+            hit += k
+            if k < len(child.hashes):
+                break
+            node = child
+        return hit / len(hs)
+
+    def match_blocks(self, tokens: List[int]) -> PrefixMatch:
+        """Longest cached block-prefix (mutating walk: splits a
+        partially-matched edge so the returned path covers the match
+        exactly, and touches LRU ticks / hit counters)."""
+        hs_full = hash_blocks(tokens, self.block_size)
+        hs = hs_full[:self._match_cap(tokens)]
+        self.n_queries += 1
+        self.query_blocks += len(hs_full)
+        node, i, path = self.root, 0, []
+        while i < len(hs):
+            child = node.children.get(hs[i])
+            if child is None:
+                break
+            k = 0
+            while (k < len(child.hashes) and i + k < len(hs)
+                   and child.hashes[k] == hs[i + k]):
+                k += 1
+            if k == 0:
+                break
+            if k < len(child.hashes):
+                child = self._split(child, k)
+            path.append(child)
+            node, i = child, i + k
+        self._tick += 1
+        for n in path:
+            n.tick = self._tick
+            n.hits += 1
+        self.hit_blocks += i
+        payloads = [p for n in path for p in n.payloads]
+        return PrefixMatch(i * self.block_size, i, path, payloads)
+
+    def _split(self, node: RadixNode, k: int) -> RadixNode:
+        """Split `node`'s edge after its k-th block; returns the new
+        upper node (parent of the shortened `node`)."""
+        # the upper node starts UNREFERENCED even when `node` is locked:
+        # lock holders only know the original node objects, so a copied
+        # ref could never be released. Leaf-only eviction keeps this
+        # safe — upper has a child (node) and is not evictable until
+        # the whole lower subtree (incl. any locked node) is gone.
+        upper = RadixNode(node.hashes[:k], node.start, node.parent,
+                          node.payloads[:k], node.block_ids[:k],
+                          next(self._ids), tick=node.tick,
+                          hits=node.hits)
+        node.parent.children[node.hashes[0]] = upper
+        node.hashes = node.hashes[k:]
+        node.payloads = node.payloads[k:]
+        node.block_ids = node.block_ids[k:]
+        node.start += k * self.block_size
+        node.parent = upper
+        upper.children[node.hashes[0]] = node
+        # re-home the allocator blocks that moved to the upper node
+        moved = self.allocator._owned.get(node.node_id, [])
+        keep = [b for b in moved if b in set(node.block_ids)]
+        up = [b for b in moved if b not in set(node.block_ids)]
+        if up:
+            self.allocator._owned[node.node_id] = keep
+            self.allocator._owned[upper.node_id] = up
+        self._nodes[upper.node_id] = upper
+        return upper
+
+    # -- refcounts ----------------------------------------------------
+
+    def lock(self, nodes: List[RadixNode]) -> None:
+        """Pin a matched root path (call with `PrefixMatch.nodes`)."""
+        for n in nodes:
+            n.ref += 1
+
+    def unlock(self, nodes: List[RadixNode]) -> None:
+        for n in nodes:
+            if n.ref <= 0:
+                raise RuntimeError(
+                    f"unlock of unreferenced radix node {n.node_id}")
+            n.ref -= 1
+
+    # -- insertion / eviction -----------------------------------------
+
+    def insert(self, tokens: List[int],
+               payload_fn: Optional[Callable[[int, int], PyTree]] = None
+               ) -> int:
+        """Cache `tokens`' full blocks; `payload_fn(start, end)` slices
+        the KV pytree for one block's token range (None for an
+        accounting-only tree, e.g. the sim's TE prefix directory).
+        Returns the number of newly cached blocks."""
+        hs = hash_blocks(tokens, self.block_size)
+        node, i = self.root, 0
+        while i < len(hs):
+            child = node.children.get(hs[i])
+            if child is None:
+                break
+            k = 0
+            while (k < len(child.hashes) and i + k < len(hs)
+                   and child.hashes[k] == hs[i + k]):
+                k += 1
+            if k == 0:
+                break
+            if k < len(child.hashes):
+                if i + k == len(hs):
+                    return 0  # fully matched mid-edge: nothing new
+                child = self._split(child, k)
+            node, i = child, i + k
+        if i >= len(hs):
+            self._tick += 1
+            node.tick = self._tick
+            return 0
+        # allocate blocks for the new suffix, evicting LRU on pressure;
+        # store only as many blocks as the pool can hold
+        want = len(hs) - i
+        have = self._ensure_blocks(want)
+        if have <= 0:
+            return 0
+        nid = next(self._ids)
+        block_ids = self.allocator.allocate(nid, have * self.block_size)
+        bs = self.block_size
+        payloads = [payload_fn(b * bs, (b + 1) * bs)
+                    if payload_fn is not None else None
+                    for b in range(i, i + have)]
+        new = RadixNode(hs[i:i + have], i * bs, node, payloads, block_ids,
+                        nid)
+        node.children[new.hashes[0]] = new
+        self._nodes[nid] = new
+        self._tick += 1
+        new.tick = self._tick
+        return have
+
+    def _ensure_blocks(self, want: int) -> int:
+        """Evict until `want` blocks fit (or nothing evictable is left);
+        returns how many blocks can actually be allocated."""
+        want = min(want, self.allocator.n_blocks)
+        if want > self.allocator.free_blocks:
+            self.evict(want - self.allocator.free_blocks)
+        return min(want, self.allocator.free_blocks)
+
+    def evict(self, n_blocks: int) -> int:
+        """Remove unreferenced LRU leaves until >= n_blocks are freed (or
+        no candidates remain); never touches a referenced node.  Returns
+        blocks actually freed."""
+        freed = 0
+        while freed < n_blocks:
+            victim = None
+            for n in self._nodes.values():
+                if n.ref == 0 and not n.children:
+                    if victim is None or n.tick < victim.tick:
+                        victim = n
+            if victim is None:
+                break
+            freed += self._remove(victim)
+        return freed
+
+    def _remove(self, node: RadixNode) -> int:
+        assert node.ref == 0 and not node.children
+        node.parent.children.pop(node.hashes[0], None)
+        del self._nodes[node.node_id]
+        if node.block_ids:
+            return self.allocator.free(node.node_id)
+        return 0
+
+    def clear(self) -> None:
+        for n in list(self._nodes.values()):
+            n.ref = 0
+        self.evict(1 << 60)  # leaves first; loop re-leafs parents
+
+
+# Backwards-compatible name: the RTC role is now radix-backed.
+PrefixCache = RadixTree

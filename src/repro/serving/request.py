@@ -43,11 +43,16 @@ class Request:
     state: RequestState = RequestState.QUEUED
     # chunked-prefill cursor (§4.3 token-budget admission): tokens of the
     # prompt already COVERED by emitted chunk work items. Advanced by the
-    # PrefillScheduler when it emits a chunk (and jumped to prompt_len by
-    # the executor on a full prefix-cache hit, which cancels the
-    # remaining chunks). prompt_len - prefill_pos is the work left.
+    # PrefillScheduler when it emits a chunk (and jumped forward by the
+    # executor on a radix prefix-cache hit, which cancels the
+    # fully-cached chunks). prompt_len - prefill_pos is the work left.
     prefill_pos: int = 0
     n_prefill_chunks: int = 0
+    # tokens served from the radix prefix cache (longest cached block
+    # prefix at prefill start): the executor seeds this many positions
+    # of KV from stored blocks and advances prefill_pos past
+    # fully-cached chunks, so only the un-cached suffix runs
+    prefix_hit_tokens: int = 0
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     # tokens handed to the output path, counted synchronously by the DP
     # group (output_tokens is appended by the async output-shortcutting

@@ -62,6 +62,7 @@ from repro.configs import get_config
 from repro.core.transformerless import plan_partition
 from repro.serving.dp_group import DPGroup
 from repro.serving.eplb import ExpertReconfigurator, ReconfigState
+from repro.serving.kv_cache import RadixTree
 from repro.serving.reliability import HeartbeatPeer
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (ChunkWork, PrefillScheduler,
@@ -148,6 +149,19 @@ class SimConfig:
     # prompts degenerate to one chunk)
     prefill_chunk_tokens: int = 2048
     prefill_token_budget: int = 8192
+    # radix prefix directory per prefill TE (block capacity of the
+    # accounting tree): arriving prompts match against what the TE has
+    # already prefilled, fully-cached chunks are skipped (fewer chunk
+    # events), and the residual seed cost is priced by the cost model's
+    # ``prefill_hit_skip`` (calibratable ``prefill/hit_skip`` row)
+    te_prefix_cache_blocks: int = 8192
+    # per-link FIFO for the prefill→decode KV path: each TE multiplexes
+    # its streams' ChunkStream transfers over n_kv_links_per_te UB
+    # links; overlapping transfers on one link queue behind each other.
+    # Default False preserves the legacy uncontended transfer model
+    # (and byte-identical traces for existing seeds).
+    kv_link_fifo: bool = False
+    n_kv_links_per_te: int = 1
     # PD-colocated interference: map (non-dedicated) prefill streams
     # onto decode DP dies — a decode iteration overlapping a prefill
     # chunk on its die stretches by the cost model's contention factor.
@@ -171,7 +185,8 @@ class _PrefillTE:
 
     def __init__(self, te_id: int, n_streams: int, long_capable: bool,
                  long_only: bool = False, token_budget: int = 8192,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 prefix_cache_blocks: int = 8192):
         self.te_id = te_id
         self.scheduler = PrefillScheduler(n_dps=n_streams,
                                           token_budget=token_budget,
@@ -182,12 +197,19 @@ class _PrefillTE:
         self.long_capable = long_capable
         self.long_only = long_only
         self.mean_len = 512.0
+        # accounting-only radix directory of prompts this TE has
+        # prefilled (stands for the KV its DP dies hold); arriving
+        # prompts match their block prefix here and skip cached chunks
+        self.prefix_dir = RadixTree(capacity_blocks=prefix_cache_blocks)
+        # EWMA of per-request hit fraction: the pick_prefill_te routing
+        # signal (stays exactly 0.0 while no request ever hits)
+        self.hit_ewma = 0.0
 
     def stats(self, now: float) -> Dict:
         backlog = sum(len(q) for q in self.queues) + sum(self.busy)
         return {"te_id": self.te_id,
                 "load": len(self.scheduler.queue) + backlog,
-                "cache_hit": 0.0,
+                "cache_hit": self.hit_ewma,
                 "mean_len": self.mean_len,
                 "long": self.long_capable,
                 "long_only": self.long_only}
@@ -290,7 +312,8 @@ class SuperPodSim:
             long_capable=(i < n_long if n_long else i == 0),
             long_only=i < n_long,
             token_budget=sim_cfg.prefill_token_budget,
-            chunk_tokens=sim_cfg.prefill_chunk_tokens)
+            chunk_tokens=sim_cfg.prefill_chunk_tokens,
+            prefix_cache_blocks=sim_cfg.te_prefix_cache_blocks)
             for i in range(sim_cfg.n_prefill_tes)]
         # PD-colocation map: non-dedicated prefill streams share decode
         # dies round-robin; dedicated long-context TEs run on their own
@@ -306,6 +329,8 @@ class SuperPodSim:
                     g += 1
         self._prefill_busy_until = [0.0] * sim_cfg.n_sim_dps
         self._pending_contended: Dict[int, bool] = {}
+        # per-(te, link) FIFO horizon for prefill→decode KV transfers
+        self._kv_link_free: Dict[Tuple[int, int], float] = {}
         # DP-domain fold: which §5.2 domain each simulated attention DP
         # belongs to (contiguous split of the folded groups) — a
         # straggling die gates its whole domain's pipeline slot
@@ -358,6 +383,21 @@ class SuperPodSim:
             self.metrics.n_long_prompts += 1
             if te.long_only:
                 self.metrics.n_long_routed_dedicated += 1
+        # radix prefix hit: jump the chunk cursor past the cached block
+        # prefix — the scheduler then emits only suffix chunks, so the
+        # skip-fraction directly scales the chunk event count
+        m = te.prefix_dir.match_blocks(req.prompt_tokens)
+        if m.n_tokens > 0:
+            req.prefill_pos = m.n_tokens
+            req.prefix_hit_tokens = m.n_tokens
+            chunk = te.scheduler.chunk_tokens
+            cold = -(-req.prompt_len // chunk)
+            warm = -(-(req.prompt_len - m.n_tokens) // chunk)
+            self.metrics.n_prefill_chunks_skipped += cold - warm
+            self.metrics.n_prefix_hit_tokens += m.n_tokens
+            self.metrics.n_prefix_hits += 1
+        te.hit_ewma = (0.9 * te.hit_ewma
+                       + 0.1 * (m.n_tokens / max(req.prompt_len, 1)))
         te.scheduler.submit(req)
 
     def _done(self) -> bool:
@@ -387,6 +427,17 @@ class SuperPodSim:
         t = self.cost.prefill_chunk_time(
             work.n_tokens, context=work.start,
             n_dies=self.cfg.prefill_dies_per_stream)
+        hit = work.req.prefix_hit_tokens
+        if hit > 0 and work.start == hit:
+            # first executed chunk after a radix skip: seeding the cached
+            # prefix saves prefill_hit_skip of its cold compute; the
+            # residue (payload assembly, cache-buffer writes) is charged
+            # here (prefill_hit_skip=1.0 ⇒ seeding is free)
+            waste = 1.0 - self.cost.prefill_hit_skip
+            if waste > 0.0:
+                t += waste * self.cost.prefill_chunk_time(
+                    hit, context=0,
+                    n_dies=self.cfg.prefill_dies_per_stream)
         die = self._stream_die.get((te.te_id, stream))
         if die is not None:
             # decode iterations overlapping [now, now+t] on this die
@@ -409,11 +460,31 @@ class SuperPodSim:
         self.metrics.n_prefill_chunks += 1
         req = work.req
         if work.end >= req.prompt_len:
+            te.prefix_dir.insert(req.prompt_tokens)
             req.state = RequestState.TRANSFERRING
             kv_t = self.cost.kv_transfer_time(work.n_tokens)
-            self.loop.schedule(kv_t, f"kv_done:{req.req_id}",
+            delay = self._kv_link_delay(te.te_id, stream, kv_t)
+            self.loop.schedule(delay, f"kv_done:{req.req_id}",
                                lambda req=req: self._enqueue_admit(req))
         self._stream_kick(te, stream)
+
+    def _kv_link_delay(self, te_id: int, stream: int,
+                       kv_t: float) -> float:
+        """FIFO queueing on the TE's KV egress links: streams multiplex
+        over ``n_kv_links_per_te`` links round-robin, and a transfer
+        whose link is still draining an earlier ChunkStream waits for
+        it. Returns wait + wire time (just the wire time when
+        ``kv_link_fifo`` is off — the legacy uncontended model)."""
+        if not self.cfg.kv_link_fifo:
+            return kv_t
+        link = (te_id, stream % max(self.cfg.n_kv_links_per_te, 1))
+        now = self.loop.now
+        start = max(now, self._kv_link_free.get(link, 0.0))
+        if start > now:
+            self.metrics.n_kv_xfers_queued += 1
+            self.metrics.kv_link_wait_s += start - now
+        self._kv_link_free[link] = start + kv_t
+        return (start - now) + kv_t
 
     # -- decode admission -------------------------------------------------
     def _enqueue_admit(self, req: Request) -> None:

@@ -130,6 +130,12 @@ class SuperPodCostModel:
         self.expert_op_overhead = EXPERT_OP_OVERHEAD
         self.prefill_chunk_overhead = PREFILL_CHUNK_OVERHEAD
         self.prefill_decode_contention = PREFILL_DECODE_CONTENTION
+        # prefix-cache hit efficiency: fraction of a cached prefix's cold
+        # prefill compute actually saved on a radix hit (1.0 = seeding
+        # from stored KV is free; < 1.0 charges the residue — payload
+        # assembly, cache-buffer writes — as measured by
+        # bench_prefix_cache's ``prefill/hit_skip`` row)
+        self.prefill_hit_skip = 1.0
         # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
         # t_comb_s)] interpolated in decode_iter_time when present
         self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
@@ -168,6 +174,10 @@ class SuperPodCostModel:
           stretch factor while a prefill chunk shares the die
           (DIMENSIONLESS ratio carried in the ``us_per_call`` column) →
           replaces ``PREFILL_DECODE_CONTENTION``.
+        * ``prefill/hit_skip`` — measured fraction of a cached prefix's
+          cold prefill compute saved by seeding from the radix cache
+          (DIMENSIONLESS in ``us_per_call``, clipped to [0, 1];
+          ``bench_prefix_cache``) → replaces ``prefill_hit_skip``.
 
         Extra keyword args override constants directly
         (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
@@ -201,6 +211,9 @@ class SuperPodCostModel:
             elif name == "prefill/decode_contention":
                 self.prefill_decode_contention = max(
                     float(row["us_per_call"]), 1.0)
+            elif name == "prefill/hit_skip":
+                self.prefill_hit_skip = float(
+                    np.clip(float(row["us_per_call"]), 0.0, 1.0))
         if comm:
             self._calib_comm = sorted(comm)
         if pref:
@@ -622,6 +635,7 @@ class CostModelBackend(ExecutionBackend):
         self.n_prefills = 0
         self.n_decode_steps = 0
         self.n_prefill_chunks = 0
+        self.n_prefill_seeds = 0
         # EPLB data plane (apply_placement contract): the active
         # PlacementTable and how many swaps this die has taken
         self.placement = None
@@ -670,6 +684,22 @@ class CostModelBackend(ExecutionBackend):
         logits = np.zeros((v,), np.float32)
         logits[nxt] = 1.0
         return cache, logits
+
+    # prefix-KV contract: the "KV" of a token range is just its token
+    # sum, so a seeded cache continues the hash accumulation exactly
+    # where a cold prefill of the same prefix would be — hit-seeded and
+    # cold prefill emit identical logits by construction
+    supports_prefix_kv = True
+
+    def slice_prefill_kv(self, cache, tokens: List[int], start: int,
+                         end: int) -> dict:
+        return {"tok_sum": int(sum(tokens[start:end])), "n": end - start}
+
+    def seed_prefill_cache(self, payloads: List[dict], prefix_len: int,
+                           total_len: int) -> dict:
+        self.n_prefill_seeds += 1
+        return {"sim_dp": self.dp_id, "prefill_len": prefix_len,
+                "tok_sum": int(sum(p["tok_sum"] for p in payloads))}
 
     def write_slot(self, cache, cache1, slot: int):
         return cache

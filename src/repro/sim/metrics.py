@@ -82,6 +82,14 @@ class MetricsCollector:
         self.n_contended_decode_iters = 0
         self.n_long_prompts = 0
         self.n_long_routed_dedicated = 0
+        # radix prefix cache: requests with a block-prefix hit, tokens
+        # served from cache, chunk events the skip removed; KV-link FIFO:
+        # transfers that queued behind an earlier one and total wait
+        self.n_prefix_hits = 0
+        self.n_prefix_hit_tokens = 0
+        self.n_prefill_chunks_skipped = 0
+        self.n_kv_xfers_queued = 0
+        self.kv_link_wait_s = 0.0
         # moe_attn deployment: per-pool accounting over the MoE-layer
         # pipeline windows (seconds are virtual, per simulated DP; byte
         # counts are scaled to the whole pod by die_scale)
@@ -178,6 +186,12 @@ class MetricsCollector:
             "n_contended_decode_iters": self.n_contended_decode_iters,
             "n_long_prompts": self.n_long_prompts,
             "n_long_routed_dedicated": self.n_long_routed_dedicated,
+            # radix prefix cache + KV-link contention
+            "n_prefix_hits": self.n_prefix_hits,
+            "n_prefix_hit_tokens": self.n_prefix_hit_tokens,
+            "n_prefill_chunks_skipped": self.n_prefill_chunks_skipped,
+            "n_kv_xfers_queued": self.n_kv_xfers_queued,
+            "kv_link_wait_s": round(self.kv_link_wait_s, 9),
             # per-pool view (moe_attn deployment; zeros when colocated):
             # utilizations are busy fractions of the MoE-layer pipeline
             # windows, bubble is the expert pool's idle share — the

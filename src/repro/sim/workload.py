@@ -45,6 +45,17 @@ class WorkloadConfig:
     # existing seeds reproduce byte-identically.
     long_context_fraction: float = 0.0
     long_context_len: int = 16384
+    # multi-turn sessions (the radix prefix-cache traffic): with
+    # probability ``prefix_share`` an arrival CONTINUES a live session —
+    # its prompt is the previous turn's prompt plus a fresh lognormal
+    # extension, so consecutive turns share a growing block prefix.
+    # Sessions retire after ``session_max_turns`` turns or at the prompt
+    # cap; at most ``max_sessions`` are live. 0 leaves the RNG stream
+    # untouched so existing seeds reproduce byte-identically.
+    prefix_share: float = 0.0
+    session_extend_len: int = 192     # mean tokens appended per turn
+    session_max_turns: int = 8
+    max_sessions: int = 512
     expert_skew: float = 0.0          # Zipf exponent; 0 → uniform experts
     seed: int = 0
 
@@ -56,6 +67,8 @@ class WorkloadGen:
         self.n_experts = n_experts
         self.n_layers = max(1, int(n_layers))
         self.rng = np.random.default_rng(cfg.seed)
+        # live multi-turn sessions: (prompt_tokens, turns_so_far)
+        self._sessions: List[tuple] = []
         self._expert_popularity = self._make_popularity()
 
     def _make_popularity(self) -> Optional[np.ndarray]:
@@ -88,6 +101,9 @@ class WorkloadGen:
 
     def _one_request(self) -> Request:
         c = self.cfg
+        if (c.prefix_share > 0 and self._sessions
+                and self.rng.random() < c.prefix_share):
+            return self._session_turn()
         if (c.long_context_fraction > 0
                 and self.rng.random() < c.long_context_fraction):
             # §7.2 long-context request: clipped only from below — it
@@ -109,6 +125,29 @@ class WorkloadGen:
         out = int(np.clip(self.rng.lognormal(np.log(c.mean_output), 0.6),
                           4, c.max_output))
         toks = self.rng.integers(2, 60, plen).tolist()
+        if c.prefix_share > 0 and len(self._sessions) < c.max_sessions:
+            self._sessions.append((toks, 1))   # opens a session
+        return Request(prompt_tokens=toks, max_new_tokens=out,
+                       ignore_eos=True, temperature=0.0)
+
+    def _session_turn(self) -> Request:
+        """Continue a live session: previous prompt + fresh extension
+        (the new user turn), so the old prompt is an exact block prefix
+        of the new one — exactly what the radix cache exploits."""
+        c = self.cfg
+        i = int(self.rng.integers(len(self._sessions)))
+        prev, turns = self._sessions[i]
+        ext = int(np.clip(self.rng.lognormal(np.log(c.session_extend_len),
+                                             0.4), 8, c.max_prompt))
+        toks = list(prev) + self.rng.integers(2, 60, ext).tolist()
+        if len(toks) > c.max_prompt:
+            toks = toks[:c.max_prompt]     # head-clip keeps the prefix
+        out = int(np.clip(self.rng.lognormal(np.log(c.mean_output), 0.6),
+                          4, c.max_output))
+        if turns + 1 >= c.session_max_turns or len(toks) >= c.max_prompt:
+            self._sessions.pop(i)          # session retires
+        else:
+            self._sessions[i] = (toks, turns + 1)
         return Request(prompt_tokens=toks, max_new_tokens=out,
                        ignore_eos=True, temperature=0.0)
 

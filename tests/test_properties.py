@@ -114,7 +114,8 @@ def test_expert_map_rotation_covers_replicas(n_exp, budget, n_npus, seed):
               st.integers(0, 7), st.integers(1, 300)),
     min_size=1, max_size=60))
 def test_allocator_no_leak_no_double_free(ops):
-    from repro.serving.kv_cache import BlockAllocator, OutOfBlocks
+    from repro.serving.kv_cache import (BlockAllocator, DoubleFree,
+                                        OutOfBlocks)
     a = BlockAllocator(n_blocks=64, block_size=16)
     live = set()
     for kind, owner, n_tok in ops:
@@ -126,8 +127,17 @@ def test_allocator_no_leak_no_double_free(ops):
             except OutOfBlocks:
                 assert a.free_blocks < a.blocks_for(n_tok)
         elif kind == "free":
-            a.free(owner)
-            live.discard(owner)
+            if owner in live:
+                a.free(owner)
+                live.discard(owner)
+            else:
+                # double-free / free-of-unknown-owner must raise (and
+                # must not change any accounting)
+                before = a.free_blocks
+                with pytest.raises(DoubleFree):
+                    a.free(owner)
+                assert a.free(owner, missing_ok=True) == 0
+                assert a.free_blocks == before
     for o in list(live):
         a.free(o)
     assert a.free_blocks == 64, "leak detected"
@@ -356,20 +366,27 @@ def test_tokenwise_quant_error_bound(t, d, scale, seed):
 @settings(max_examples=30, deadline=None)
 @given(toks=st.lists(st.integers(0, 255), min_size=16, max_size=80))
 def test_prefix_cache_exact_hit_semantics(toks):
+    """Radix semantics of the old exact-hit contract: re-querying an
+    inserted prompt matches every full block except the capped last one
+    (>= 1 suffix token always prefills), and a diverging final block
+    never matches past the common prefix."""
     from repro.serving.kv_cache import PrefixCache
-    pc = PrefixCache(block_size=16)
-    pc.insert(toks, cache={"dummy": 1}, last_logits=[0.0])
+    pc = PrefixCache(capacity_blocks=64, block_size=16)
+    stored = pc.insert(toks, lambda s, e: {"start": s})
     n_full = len(toks) // 16
+    assert stored == n_full
     if n_full:
-        hit = pc.lookup(toks)
-        assert hit is not None and hit.tokens == tuple(toks)
+        m = pc.match_blocks(toks)
+        assert m.n_blocks == max(len(toks) - 1, 0) // 16
+        assert m.n_tokens == m.n_blocks * 16 and m.has_payloads
         assert pc.match_fraction(toks) == 1.0
-        # a different suffix must not exact-hit
+        # a flipped last token diverges only inside its own block: the
+        # match never extends past the common block prefix
         other = toks[:-1] + [(toks[-1] + 1) % 256]
-        h2 = pc.lookup(other)
-        assert h2 is None or h2.tokens == tuple(other)
+        assert pc.match_blocks(other).n_blocks == (len(toks) - 1) // 16
     else:
-        assert pc.lookup(toks) is None
+        assert pc.match_blocks(toks).n_blocks == 0
+        assert pc.match_fraction(toks) == 0.0
 
 
 # ---------------------------------------------------------------------------

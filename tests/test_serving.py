@@ -40,12 +40,16 @@ def test_prefix_cache_hit(engine):
     dp = engine.dps[0]
     toks = engine.tokenizer.encode("a" * 40)
     r = Request(prompt="a" * 40, prompt_tokens=toks)
-    dp.run_prefill(r)
-    before = dp.prefix_cache.lookup(toks)
-    assert before is not None
-    hits0 = before.hits
-    dp.run_prefill(Request(prompt="a" * 40, prompt_tokens=list(toks)))
-    assert dp.prefix_cache.lookup(toks).hits >= hits0 + 1
+    _, cold = dp.run_prefill(r)
+    assert r.prefix_hit_tokens == 0
+    assert dp.prefix_cache.match_fraction(list(toks)) == 1.0
+    r2 = Request(prompt="a" * 40, prompt_tokens=list(toks))
+    _, warm = dp.run_prefill(r2)
+    # radix hit: everything but the capped final block seeds from cache,
+    # and the seeded forward is bit-identical to the cold one
+    assert r2.prefix_hit_tokens == (len(toks) - 1) // 16 * 16 > 0
+    assert dp.prefix_cache.hit_rate > 0
+    np.testing.assert_array_equal(cold, warm)
 
 
 # ---------------------------------------------------------------------------

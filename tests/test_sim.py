@@ -129,6 +129,8 @@ def test_cost_model_from_calibration(tmp_path):
          "derived": "combine_us=400.0"},
         {"name": "decode/iter_overhead", "us_per_call": 500.0,
          "derived": ""},
+        {"name": "prefill/hit_skip", "us_per_call": 0.85,
+         "derived": "dimensionless skip factor"},
     ]
     p = tmp_path / "BENCH_dispatch_combine.json"
     p.write_text(json.dumps({"benchmark": "dispatch_combine",
@@ -137,6 +139,13 @@ def test_cost_model_from_calibration(tmp_path):
                                              decode_mfu=0.6)
     assert cal.decode_mfu == 0.6
     assert cal.iter_overhead == pytest.approx(500e-6)
+    # measured radix seed residue (dimensionless, clipped to [0, 1])
+    assert cal.prefill_hit_skip == pytest.approx(0.85)
+    rows[-1]["us_per_call"] = 7.0
+    p.write_text(json.dumps({"benchmark": "dispatch_combine",
+                             "rows": rows}))
+    assert SuperPodCostModel.from_calibration(
+        cfg, plan, str(p)).prefill_hit_skip == 1.0
     # the measured curve is interpolated exactly at the sampled points
     assert cal._comm_times(8) == pytest.approx((100e-6, 150e-6))
     assert cal._comm_times(96) == pytest.approx((300e-6, 400e-6))
@@ -378,3 +387,135 @@ def test_prefill_colocated_requires_colocated_deployment():
         SuperPodSim(SimConfig(arch=ARCH, n_prefill_tes=2,
                               long_context_tes=2),
                     WorkloadConfig(**WL))
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache in the sim (PR 6): hit-dependent prefill pricing,
+# KV-link FIFO contention, and RNG-stream preservation at share 0
+# ---------------------------------------------------------------------------
+def _fixed_schedule_sim(shared_frac, seed=3):
+    """Sim over a FIXED arrival schedule (constant spacing, equal prompt
+    lengths) where ``shared_frac`` of the requests repeat a common
+    3072-token prefix — isolating the cache effect from the workload
+    mix, which a prefix_share sweep through WorkloadGen would change."""
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+    base = rng.integers(2, 60, 3072).tolist()
+    sched = [(0.0, Request(prompt_tokens=list(base), max_new_tokens=32,
+                           ignore_eos=True, temperature=0.0))]
+    t = 0.0
+    for i in range(30):
+        t += 0.03
+        if rng.random() < shared_frac:
+            toks = list(base) + rng.integers(2, 60, 64 + i).tolist()
+        else:
+            toks = rng.integers(2, 60, 3072 + 64 + i).tolist()
+        sched.append((t, Request(prompt_tokens=toks, max_new_tokens=32,
+                                 ignore_eos=True, temperature=0.0)))
+    sim = SuperPodSim(SimConfig(arch=ARCH, n_prefill_tes=1, **SMALL),
+                      WorkloadConfig(arrival_rate=40.0, duration_s=1.0,
+                                     seed=seed))
+    sim.workload.requests = lambda: iter(sched)
+    return sim.run().summary
+
+
+def test_hit_rate_sweep_monotone_ttft():
+    """More shared-prefix traffic at fixed load ⇒ monotonically lower
+    mean TTFT (fully-cached chunks are skipped), and the skip counters
+    move with it."""
+    out = [_fixed_schedule_sim(f) for f in (0.0, 0.5, 1.0)]
+    ttfts = [s["ttft_mean_s"] for s in out]
+    assert ttfts[0] > ttfts[1] > ttfts[2], ttfts
+    hits = [s["n_prefix_hits"] for s in out]
+    assert hits[0] == 0 and hits[0] < hits[1] < hits[2]
+    skipped = [s["n_prefill_chunks_skipped"] for s in out]
+    assert skipped[0] == 0 and skipped[1] > 0
+    # skipped chunks are chunk EVENTS that never ran
+    assert out[2]["n_prefill_chunks"] < out[0]["n_prefill_chunks"]
+    for s in out:
+        assert s["n_finished"] == s["n_requests"] == 31
+
+
+def test_hit_skip_pricing_scales_residual_seed_cost():
+    """prefill_hit_skip < 1 charges a residue for seeding cached KV:
+    same schedule, lower skip factor ⇒ higher TTFT, bounded by cold."""
+    def run(skip):
+        from repro.serving.request import Request
+        rng = np.random.default_rng(0)
+        base = rng.integers(2, 60, 3072).tolist()
+        sched = [(0.0, Request(prompt_tokens=list(base),
+                               max_new_tokens=16, ignore_eos=True,
+                               temperature=0.0))]
+        for i in range(8):
+            sched.append((0.03 * (i + 1),
+                          Request(prompt_tokens=list(base)
+                                  + [7 + i] * 64, max_new_tokens=16,
+                                  ignore_eos=True, temperature=0.0)))
+        sim = SuperPodSim(SimConfig(arch=ARCH, n_prefill_tes=1, **SMALL),
+                          WorkloadConfig(arrival_rate=40.0,
+                                         duration_s=0.5, seed=0))
+        sim.cost.prefill_hit_skip = skip
+        sim.workload.requests = lambda: iter(sched)
+        return sim.run().summary["ttft_mean_s"]
+
+    free, half, none = run(1.0), run(0.5), run(0.0)
+    assert free < half < none, (free, half, none)
+
+
+def test_kv_link_fifo_serializes_on_one_link():
+    """Two overlapping transfers on ONE egress link queue behind each
+    other; with two links (round-robin streams) they do not. Off by
+    default: the delay is the raw wire time and nothing is booked."""
+    def make(fifo, links):
+        return SuperPodSim(
+            SimConfig(arch=ARCH, kv_link_fifo=fifo,
+                      n_kv_links_per_te=links, **SMALL),
+            WorkloadConfig(**WL))
+
+    sim = make(True, 1)
+    assert sim._kv_link_delay(0, 0, 0.010) == pytest.approx(0.010)
+    # second transfer at the same instant, same TE: its link is busy
+    assert sim._kv_link_delay(0, 1, 0.010) == pytest.approx(0.020)
+    assert sim.metrics.n_kv_xfers_queued == 1
+    assert sim.metrics.kv_link_wait_s == pytest.approx(0.010)
+    # a different TE's link is independent
+    assert sim._kv_link_delay(1, 0, 0.010) == pytest.approx(0.010)
+
+    two = make(True, 2)
+    assert two._kv_link_delay(0, 0, 0.010) == pytest.approx(0.010)
+    assert two._kv_link_delay(0, 1, 0.010) == pytest.approx(0.010)
+    assert two.metrics.n_kv_xfers_queued == 0
+    # streams 2 round-robins back onto link 0: now it queues
+    assert two._kv_link_delay(0, 2, 0.010) == pytest.approx(0.020)
+
+    off = make(False, 1)
+    assert off._kv_link_delay(0, 0, 0.010) == 0.010
+    assert off._kv_link_delay(0, 1, 0.010) == 0.010
+    assert off.metrics.n_kv_xfers_queued == 0
+
+
+def test_prefix_share_zero_is_byte_identical_to_defaults():
+    """prefix_share=0 / kv_link_fifo=False must leave the RNG stream and
+    the event trace untouched — existing seeds reproduce byte-for-byte
+    with the new knobs at their defaults."""
+    a = run_sim()
+    b = run_sim(sim_kw={"kv_link_fifo": False, "n_kv_links_per_te": 4,
+                        "te_prefix_cache_blocks": 8192},
+                wl_kw={"prefix_share": 0.0, "session_extend_len": 999,
+                       "session_max_turns": 2})
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json(include_requests=True) \
+        == b.to_json(include_requests=True)
+    s = a.summary
+    assert s["n_prefix_hits"] == 0 and s["n_prefix_hit_tokens"] == 0
+    assert s["n_kv_xfers_queued"] == 0 and s["kv_link_wait_s"] == 0.0
+
+
+def test_prefix_share_sessions_produce_hits_e2e():
+    """The multi-turn session workload through the full sim: continuing
+    turns hit the TE prefix directory and skip chunk events."""
+    rep = run_sim(wl_kw={"prefix_share": 0.6, "duration_s": 1.0})
+    s = rep.summary
+    assert s["n_prefix_hits"] > 0
+    assert s["n_prefix_hit_tokens"] >= s["n_prefix_hits"] * 16
+    assert s["n_finished"] == s["n_requests"]
