@@ -88,7 +88,7 @@ class DisaggregatedPD:
                  max_len: int = 256, ctx: Optional[MeshCtx] = None,
                  prefill_fabrics: Optional[Sequence[str]] = None,
                  seed: int = 0, token_budget: int = 8192,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None, mtp_k: int = 0):
         self.cfg = cfg
         self.max_len = max_len
         ctx = ctx or make_smoke_ctx()
@@ -113,12 +113,17 @@ class DisaggregatedPD:
                 fabric=fabrics[i])
             for i in range(n_prefill_te)
         ]
+        # MTP runs only on the decode side: prefill TEs never decode, so
+        # their backends stay draft-free; decode TEs own the draft-head
+        # state and emit variable tokens-per-iteration through the same
+        # streaming watermark (n_emitted-based, so multi-token steps
+        # stream correctly without changes here)
         self.decode_tes = [
             DecodeTE(
                 te_id=i,
                 dps=[DPGroup(1000 + 100 * i + j,
                              JAXBackend(self.model, self.params,
-                                        max_len=max_len),
+                                        max_len=max_len, mtp_k=mtp_k),
                              max_batch=max_batch, max_len=max_len)
                      for j in range(dp_per_te)],
                 balancer=DecodeLoadBalancer())

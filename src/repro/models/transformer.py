@@ -255,6 +255,29 @@ class Model:
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                             self.cache_spec(batch, max_len, mem_len))
 
+    def mtp_cache_spec(self, batch: int, max_len: int) -> PyTree:
+        """Batched decode-state spec for the MTP draft head (§4.6):
+        ``"kv"`` — the head's block decode cache (same shapes
+        :meth:`mtp_step` writes through the ``CacheRef`` machinery, all
+        leaves batch-major like the main cache's single blocks), and
+        ``"hidden"`` — the ``[B, 1, d]`` main-model final hidden carried
+        across decode iterations as the head's conditioning input."""
+        cfg = self.cfg
+        kind = (self.pattern[-1][0], MLP)
+        if kind[0] == CROSS_ATTN:
+            kind = (ATTN, MLP)
+        # window_override defaults to 0 to match mtp_step's block_apply
+        return {
+            "kv": block_cache_spec(cfg, kind, batch, max_len,
+                                   cfg.num_frontend_tokens, self.dtype),
+            "hidden": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                           self.dtype),
+        }
+
+    def init_mtp_cache(self, batch: int, max_len: int) -> PyTree:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.mtp_cache_spec(batch, max_len))
+
     # ------------------------------------------------------------------
     # core stack application
     # ------------------------------------------------------------------
@@ -485,6 +508,17 @@ class Model:
         ``placement``: optional device-resident
         :class:`~repro.serving.eplb.PlacementTable` (leading dim =
         n_layers) — the EPLB data plane each MoE layer routes through."""
+        logits, _, new_caches = self.decode_step_hidden(
+            params, cache, tokens, positions, memory=memory,
+            placement=placement)
+        return logits, new_caches
+
+    def decode_step_hidden(self, params, cache, tokens, positions,
+                           memory=None, placement=None):
+        """:meth:`decode_step` that also returns the final hidden state
+        ``[B, 1, d]`` — the MTP draft head's conditioning input. Runs the
+        IDENTICAL op sequence as ``decode_step`` (which delegates here),
+        so logits stay bit-identical between the two entry points."""
         x = self._embed(params, tokens)
         x, new_caches, _, _ = self._apply_stack(params, x, mode="decode",
                                                 caches=cache,
@@ -493,7 +527,7 @@ class Model:
                                                 placement=placement)
         logits = jnp.einsum("bd,dv->bv", x[:, -1].astype(jnp.float32),
                             self._unembed(params).astype(jnp.float32))
-        return logits, new_caches
+        return logits, x[:, -1:], new_caches
 
     # ------------------------------------------------------------------
     # MTP draft head (paper §4.6): h' = Block(proj([norm(h); norm(e_next)]))

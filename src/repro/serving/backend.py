@@ -43,6 +43,51 @@ Contract details every implementation must honor:
   guarded by tests; the legacy ``decode`` (full-logits) entry remains
   for diagnostics and for callers that genuinely need distributions.
 
+The ``decode_sample_mtp`` contract — speculative decoding (§4.6)
+----------------------------------------------------------------
+
+``decode_sample_mtp(cache, mtp_cache, tokens, positions, temperatures,
+step)`` is the multi-token sibling of ``decode_sample``: ONE dispatch
+runs the MTP draft head ``k = mtp_k`` times (chained through its own
+decode cache), the main model's verify forward over ``[token, draft_1,
+…, draft_k]`` (``k + 1`` decode-shaped steps — identical op shapes to
+``decode_sample``), and on-device acceptance sampling
+(:func:`repro.serving.sampling.speculative_verify`). It returns
+``(token_block [B, k+1] int32, n_accepted [B] int32, new_cache,
+new_mtp_cache)``; slot ``i`` emits ``token_block[i, :n_accepted[i]+1]``
+and entries past that are junk. Contract details on top of
+``decode_sample``'s:
+
+* Host traffic stays O(B): ``4·B·(k+1)`` bytes of token ids plus ``4·B``
+  bytes of accepted counts — never logits (guard-tested like the 1-token
+  path).
+* Acceptance semantics: greedy slots (``temperature <= 0``) accept a
+  draft iff it equals the main model's argmax, and every emitted token
+  IS that argmax — the emitted stream is bit-identical to
+  non-speculative greedy decode (lossless, guard-tested on the
+  deepseek-v3 smoke config). Stochastic slots use the standard
+  rejection rule (accept ``d ~ q`` w.p. ``min(1, p(d)/q(d))``, resample
+  rejections from ``norm(max(p-q, 0))``), so each emitted token is
+  distributed exactly as the main model's ``p``.
+* Donation/rollback: ``donate=True`` (default) donates BOTH ``cache``
+  and ``mtp_cache`` to the executable; the §6.2 rollback path passes
+  ``donate=False`` and must snapshot *both* handles — re-executing an
+  iteration with the same ``step`` replays the identical draft,
+  acceptance and resample draws (the PRNG stream is still a pure
+  function of ``(backend seed, step)``).
+* Main-cache discipline: the verify chain writes KV at ``positions + j``
+  for ``j <= k`` (clamped to the buffer). Rejected positions hold junk
+  that decode attention never reads (it masks ``kv_pos <= q_pos``) and
+  that the next iteration overwrites before it can ever be attended.
+  The same argument covers the draft head's cache; admission resets a
+  slot's MTP state via ``reset_mtp_slot`` (the ``write_slot`` analogue).
+* ``mtp_cache`` is backend-opaque batched draft-head state created by
+  ``init_mtp_cache`` — on the JAX path ``{"kv": block decode cache,
+  "hidden": [B, 1, d]}``, the hidden being the main-model final hidden
+  carried between iterations as the head's conditioning input.
+* Backends advertise the feature with ``mtp_k > 0``; the 1-token
+  ``decode_sample`` contract is unchanged and remains the default path.
+
 The ``prefill_chunk`` contract — chunked prefill
 ------------------------------------------------
 
@@ -229,6 +274,36 @@ class ExecutionBackend(abc.ABC):
         docstring for the full contract.
         """
 
+    #: number of MTP draft tokens per decode iteration; 0 ⇒ speculative
+    #: decoding disabled (``decode_sample_mtp`` unavailable).
+    mtp_k: int = 0
+
+    def init_mtp_cache(self, max_batch: int, max_len: int) -> PyTree:
+        """Allocate the batched MTP draft-head state (``mtp_k > 0``)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support MTP decoding")
+
+    def reset_mtp_slot(self, mtp_cache: PyTree, slot: int) -> PyTree:
+        """Zero slot ``slot`` of the draft-head state at admission — the
+        ``write_slot`` analogue for ``mtp_cache``. Returns the new
+        handle (the old one may be donated)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support MTP decoding")
+
+    def decode_sample_mtp(self, cache: PyTree, mtp_cache: PyTree,
+                          tokens: np.ndarray, positions: np.ndarray,
+                          temperatures: np.ndarray, step: int, *,
+                          donate: bool = True
+                          ) -> Tuple[Any, Any, PyTree, PyTree]:
+        """One propose-then-verify MTP iteration in a single dispatch.
+
+        Returns ``(token_block [B, mtp_k+1] int32, n_accepted [B] int32,
+        new_cache, new_mtp_cache)`` — see the module docstring for the
+        full contract (acceptance semantics, donation/rollback, host
+        transfer budget)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support MTP decoding")
+
     def apply_placement(self, table: Optional[Any]) -> None:
         """Install the EPLB :class:`~repro.serving.eplb.PlacementTable`
         subsequent decode iterations route through (``None`` ⇒ logical
@@ -257,7 +332,7 @@ class JAXBackend(ExecutionBackend):
 
     def __init__(self, model, params: PyTree, *, max_len: int = 256,
                  memory: Optional[Any] = None, seed: int = 0,
-                 top_k: int = 0):
+                 top_k: int = 0, mtp_k: int = 0):
         import jax
 
         from repro.serving.sampling import sample_tokens
@@ -268,6 +343,11 @@ class JAXBackend(ExecutionBackend):
         self.memory = memory
         self.seed = seed
         self.top_k = top_k
+        self.mtp_k = int(mtp_k)
+        if self.mtp_k and "mtp" not in params:
+            raise ValueError(
+                f"mtp_k={mtp_k} requires a model with an MTP head "
+                f"(cfg.mtp_num_layers > 0)")
         self.vocab_size = model.cfg.vocab_size
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill, static_argnames=())
@@ -310,6 +390,99 @@ class JAXBackend(ExecutionBackend):
             _step, static_argnames=("stochastic",))
         self._write_slot = jax.jit(self._write_slot_impl,
                                    donate_argnums=(0,))
+
+        if self.mtp_k:
+            from repro.serving.sampling import speculative_verify
+
+            k = self.mtp_k
+            max_pos = max_len - 1
+
+            def _mtp_step(params, cache, mtp_cache, tokens, positions,
+                          temperatures, base_key, step, placement,
+                          stochastic):
+                """Propose-then-verify in one program — see the
+                ``decode_sample_mtp`` module-docstring contract."""
+                key = jax.random.fold_in(base_key, step)
+                k_draft, k_verify = jax.random.split(key)
+                hid, mtp_kv = mtp_cache["hidden"], mtp_cache["kv"]
+
+                # draft chain: the single head re-applied k times on its
+                # own hidden (the paper's reused-weights deep drafting),
+                # each pass extending the head's decode cache. Positions
+                # clamp at the buffer edge: a slot that close to max_len
+                # finishes before the clamped junk could be consumed.
+                drafts, dlogits, tok = [], [], tokens
+                for j in range(k):
+                    pj = jnp.minimum(positions + j, max_pos)
+                    dl, hid, mtp_kv = model.mtp_step(
+                        params, 0, hid, tok, pj, mtp_kv)
+                    if stochastic:
+                        d = sample_tokens(dl, temperatures,
+                                          jax.random.fold_in(k_draft, j),
+                                          top_k=self.top_k)
+                    else:
+                        d = jnp.argmax(dl, axis=-1).astype(jnp.int32)
+                    drafts.append(d)
+                    dlogits.append(dl)
+                    tok = d[:, None]
+
+                # verify chain: k+1 decode-shaped main forwards — the
+                # exact op sequence of decode_sample, repeated — feeding
+                # the committed token then each draft
+                mlogits, hiddens, vtok = [], [], tokens
+                for j in range(k + 1):
+                    pj = jnp.minimum(positions + j, max_pos)
+                    lg, h, cache = model.decode_step_hidden(
+                        params, cache, vtok, pj, placement=placement)
+                    mlogits.append(lg)
+                    hiddens.append(h)
+                    if j < k:
+                        vtok = drafts[j][:, None]
+                ml = jnp.stack(mlogits, axis=1)
+
+                if stochastic:
+                    block, n_acc = speculative_verify(
+                        ml, jnp.stack(drafts, axis=1),
+                        jnp.stack(dlogits, axis=1), temperatures,
+                        k_verify, top_k=self.top_k)
+                else:
+                    greedy = jnp.argmax(ml, axis=-1).astype(jnp.int32)
+                    acc = jnp.stack(drafts, axis=1) == greedy[:, :k]
+                    n_acc = jnp.cumprod(acc.astype(jnp.int32),
+                                        axis=1).sum(axis=1)
+                    block, n_acc = greedy, n_acc.astype(jnp.int32)
+
+                # unconditional draft-cache fill: rewrite the head's KV
+                # at positions+1..positions+k from the MAIN hiddens, so
+                # accepted positions hold canonical content next
+                # iteration (rejected ones hold junk that the next
+                # draft/fill passes overwrite before it is attended)
+                for j in range(k):
+                    pj = jnp.minimum(positions + 1 + j, max_pos)
+                    _, _, mtp_kv = model.mtp_step(
+                        params, 0, hiddens[j], drafts[j][:, None], pj,
+                        mtp_kv)
+                # carry the hidden at the last ACCEPTED position — the
+                # conditioning input when the next iteration drafts from
+                # the residual/bonus token
+                hs = jnp.concatenate(hiddens, axis=1)
+                new_hid = jnp.take_along_axis(
+                    hs, n_acc[:, None, None], axis=1)
+                return block, n_acc, cache, {"kv": mtp_kv,
+                                             "hidden": new_hid}
+
+            self._decode_sample_mtp = jax.jit(
+                _mtp_step, donate_argnums=(1, 2),
+                static_argnames=("stochastic",))
+            self._decode_sample_mtp_safe = jax.jit(
+                _mtp_step, static_argnames=("stochastic",))
+
+            def _reset_mtp(mtp_cache, slot):
+                return jax.tree.map(lambda x: x.at[slot].set(0),
+                                    mtp_cache)
+
+            self._reset_mtp_slot = jax.jit(_reset_mtp,
+                                           donate_argnums=(0,))
 
     def init_cache(self, max_batch: int, max_len: int) -> PyTree:
         return self.model.init_cache(max_batch, max_len)
@@ -476,3 +649,30 @@ class JAXBackend(ExecutionBackend):
                              self._base_key, jnp.int32(step),
                              self._placement, stochastic=stochastic)
         return toks, new_cache
+
+    def init_mtp_cache(self, max_batch: int, max_len: int) -> PyTree:
+        return self.model.init_mtp_cache(max_batch, max_len)
+
+    def reset_mtp_slot(self, mtp_cache: PyTree, slot: int) -> PyTree:
+        import jax.numpy as jnp
+
+        return self._reset_mtp_slot(mtp_cache, jnp.int32(slot))
+
+    def decode_sample_mtp(self, cache: PyTree, mtp_cache: PyTree,
+                          tokens: np.ndarray, positions: np.ndarray,
+                          temperatures: np.ndarray, step: int, *,
+                          donate: bool = True
+                          ) -> Tuple[Any, Any, PyTree, PyTree]:
+        import jax.numpy as jnp
+
+        if not self.mtp_k:
+            raise NotImplementedError("backend built with mtp_k=0")
+        stochastic = bool(np.any(np.asarray(temperatures) > 0.0))
+        fn = (self._decode_sample_mtp if donate
+              else self._decode_sample_mtp_safe)
+        block, n_acc, new_cache, new_mtp = fn(
+            self.params, cache, mtp_cache, jnp.asarray(tokens),
+            jnp.asarray(positions),
+            jnp.asarray(temperatures, jnp.float32), self._base_key,
+            jnp.int32(step), self._placement, stochastic=stochastic)
+        return block, n_acc, new_cache, new_mtp

@@ -17,6 +17,15 @@ issues the backend's fused decode+sample program (cache donated, async
 dispatch) and ``decode_complete()`` fetches only the ``[B]`` int32
 next-token vector — 4 bytes per slot crossing device→host per
 iteration, never a ``[B, V]`` logits plane (guarded by tests).
+
+When the backend advertises ``mtp_k > 0`` the same loop runs §4.6 MTP
+speculative decoding through ``decode_sample_mtp``: each iteration
+fetches a ``[B, k+1]`` token block plus a ``[B]`` accepted-count vector
+(still O(B) bytes) and a slot may advance 1..k+1 positions per step —
+``_apply_sampled_mtp`` emits the accepted prefix token-by-token through
+the same output queue, so downstream consumers (streaming watermark,
+``Request.n_emitted`` scheduling) see an ordinary variable-rate token
+stream.
 """
 from __future__ import annotations
 
@@ -78,6 +87,12 @@ class DPGroup:
 
         self.slots = [Slot() for _ in range(max_batch)]
         self.cache = backend.init_cache(max_batch, max_len)
+        # §4.6 MTP speculative decoding: the backend advertises its draft
+        # depth; the group owns the batched draft-head state alongside
+        # the main cache (reset per slot at admission)
+        self.mtp_k = int(getattr(backend, "mtp_k", 0) or 0)
+        self.mtp_cache = (backend.init_mtp_cache(max_batch, max_len)
+                          if self.mtp_k else None)
         self.steps = 0
         self.finished: List[Request] = []
 
@@ -271,6 +286,9 @@ class DPGroup:
         self.allocator.extend(req.req_id,
                               req.prompt_len + req.max_new_tokens)
         self.cache = self.backend.write_slot(self.cache, cache1, slot_id)
+        if self.mtp_k:
+            self.mtp_cache = self.backend.reset_mtp_slot(self.mtp_cache,
+                                                         slot_id)
         first = self._sample(last_logits, req.temperature)
         req.n_emitted += 1
         self._out_q.put((req, int(first)))
@@ -339,6 +357,37 @@ class DPGroup:
         self.gc_ctl.step()
         return produced
 
+    def _apply_sampled_mtp(self, blocks: np.ndarray, n_acc: np.ndarray,
+                           active: List[Tuple[int, Request]]) -> int:
+        """Host bookkeeping for one MTP iteration: slot ``i`` emits
+        ``blocks[i, :n_acc[i]+1]`` in order, each token going through the
+        same per-token done checks (EOS / budget / buffer edge) as the
+        1-token path — a stop mid-block truncates the remaining accepted
+        tokens and frees the slot, so the device-side junk beyond it is
+        reset at the next admission."""
+        produced = 0
+        for i, req_at_launch in active:
+            s = self.slots[i]
+            if s.free or s.req is not req_at_launch:
+                continue        # evicted/replaced between launch+complete
+            req = s.req
+            for j in range(int(n_acc[i]) + 1):
+                tok = int(blocks[i, j])
+                s.position += 1
+                s.next_token = tok
+                produced += 1
+                req.n_emitted += 1
+                done = (req.n_emitted >= req.max_new_tokens
+                        or (tok == req.eos_token and not req.ignore_eos)
+                        or s.position >= self.max_len - 1)
+                self._out_q.put((req, tok))
+                if done:
+                    self._finish(i)
+                    break
+        self.steps += 1
+        self.gc_ctl.step()
+        return produced
+
     def decode_launch(self) -> bool:
         """Issue one decode iteration without waiting for its result.
 
@@ -350,6 +399,15 @@ class DPGroup:
         if self.active == 0 or self._pending is not None:
             return False
         tokens, positions, temps, active = self._gather_step_inputs()
+        if self.mtp_k:
+            blocks_dev, n_acc_dev, new_cache, new_mtp = \
+                self.backend.decode_sample_mtp(
+                    self.cache, self.mtp_cache, tokens, positions, temps,
+                    self.steps)
+            self.cache = new_cache
+            self.mtp_cache = new_mtp
+            self._pending = ((blocks_dev, n_acc_dev), active)
+            return True
         toks_dev, new_cache = self.backend.decode_sample(
             self.cache, tokens, positions, temps, self.steps)
         self.cache = new_cache
@@ -357,13 +415,18 @@ class DPGroup:
         return True
 
     def decode_complete(self) -> int:
-        """Fetch the launched iteration's tokens (4·B bytes device→host)
-        and run the host-side slot bookkeeping."""
+        """Fetch the launched iteration's tokens (4·B bytes device→host;
+        with MTP 4·B·(k+1) + 4·B) and run the host-side bookkeeping."""
         if self._pending is None:
             return 0
         toks_dev, active = self._pending
         self._pending = None
-        produced = self._apply_sampled(np.asarray(toks_dev), active)
+        if self.mtp_k:
+            blocks_dev, n_acc_dev = toks_dev
+            produced = self._apply_sampled_mtp(
+                np.asarray(blocks_dev), np.asarray(n_acc_dev), active)
+        else:
+            produced = self._apply_sampled(np.asarray(toks_dev), active)
         if self._has_pending_placement:
             # deferred EPLB swap: the donated-cache step has retired, so
             # the placement can change before the next launch (§4.5
@@ -400,16 +463,34 @@ class DPGroup:
             return self.decode_complete()
         tokens, positions, temps, active = self._gather_step_inputs()
         # save rollback state (previous iteration boundary); donation is
-        # off so the pre-step cache handle stays valid for re-execution
+        # off so the pre-step cache handle stays valid for re-execution.
+        # With MTP the draft-head state rolls back alongside the main
+        # cache — same step ⇒ same PRNG draws ⇒ identical re-execution.
         self._rollback = {"cache": self.cache,
+                          "mtp_cache": self.mtp_cache,
                           "slots": [dataclasses.replace(s)
                                     for s in self.slots]}
-        self.backend.decode_sample(self.cache, tokens, positions, temps,
-                                   self.steps, donate=False)
+        if self.mtp_k:
+            self.backend.decode_sample_mtp(
+                self.cache, self.mtp_cache, tokens, positions, temps,
+                self.steps, donate=False)
+        else:
+            self.backend.decode_sample(self.cache, tokens, positions,
+                                       temps, self.steps, donate=False)
         # §6.2: transient network error detected → all DP groups roll
         # back to the previous iteration and re-execute.
         self.cache = self._rollback["cache"]
+        self.mtp_cache = self._rollback["mtp_cache"]
         self.slots = self._rollback["slots"]
+        if self.mtp_k:
+            blocks, n_acc, new_cache, new_mtp = \
+                self.backend.decode_sample_mtp(
+                    self.cache, self.mtp_cache, tokens, positions, temps,
+                    self.steps, donate=False)
+            self.cache = new_cache
+            self.mtp_cache = new_mtp
+            return self._apply_sampled_mtp(np.asarray(blocks),
+                                           np.asarray(n_acc), active)
         toks, new_cache = self.backend.decode_sample(
             self.cache, tokens, positions, temps, self.steps,
             donate=False)

@@ -30,7 +30,7 @@ class FlowServeEngine:
                  max_len: int = 256, ctx=None, seed: int = 0, memory=None,
                  backend_factory: Optional[BackendFactory] = None,
                  token_budget: int = 8192,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None, mtp_k: int = 0):
         self.cfg = cfg
         self.model = None
         self.params = None
@@ -51,7 +51,8 @@ class FlowServeEngine:
                 # per-group sampling seed: DP groups step in lockstep, so
                 # a shared seed would draw identical Gumbel noise
                 return JAXBackend(model, params, max_len=max_len,
-                                  memory=memory, seed=seed * 1000 + dp_id)
+                                  memory=memory, seed=seed * 1000 + dp_id,
+                                  mtp_k=mtp_k)
         else:
             self.ctx = ctx
         self.tokenizer = ByteTokenizer()

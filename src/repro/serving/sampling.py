@@ -18,7 +18,7 @@ Semantics (per slot ``i``):
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,86 @@ def sample_tokens(logits: jax.Array, temperatures: jax.Array,
     stoch = jnp.argmax(top_k_mask(logits, top_k) / t + g,
                        axis=-1).astype(jnp.int32)
     return jnp.where(temperatures <= 0.0, greedy, stoch)
+
+
+def speculative_verify(main_logits: jax.Array, draft_tokens: jax.Array,
+                       draft_logits: jax.Array, temperatures: jax.Array,
+                       key: jax.Array, *, top_k: int = 0
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Propose-then-verify acceptance for MTP speculative decoding (§4.6).
+
+    ``main_logits`` [B, k+1, V]: the verify chain's logits — row ``j`` is
+    the main model's distribution after consuming the token at launch
+    position + ``j`` (row 0 the committed token, rows 1..k the drafts).
+    ``draft_tokens`` [B, k] / ``draft_logits`` [B, k, V]: the MTP head's
+    proposals and the logits they were sampled from.
+
+    Returns ``(tokens [B, k+1] int32, n_accepted [B] int32)``. Slot ``i``
+    emits ``tokens[i, :n_accepted[i] + 1]``; entries past that are junk.
+
+    Per slot semantics (matching :func:`sample_tokens`'s temperature
+    convention):
+
+    * ``temperatures[i] <= 0`` — greedy: draft ``j`` is accepted iff it
+      equals ``argmax(main_logits[i, j-1])``; every emitted token is the
+      main model's argmax, so the emitted stream is BIT-IDENTICAL to
+      non-speculative greedy decoding (lossless).
+    * ``temperatures[i] > 0`` — the standard rejection rule: draft ``d``
+      sampled from ``q`` is accepted with probability
+      ``min(1, p(d)/q(d))`` against the main model's ``p``; on rejection
+      the token is re-sampled from ``norm(max(p - q, 0))``; if all ``k``
+      drafts are accepted a bonus token is sampled from the last verify
+      row. The emitted distribution is exactly ``p`` per position.
+
+    ``p``/``q`` are softmax over ``top_k_mask(logits, top_k) / t`` — the
+    same transform :func:`sample_tokens` draws the drafts with, which the
+    rejection rule requires.
+    """
+    B, k1, V = main_logits.shape
+    k = k1 - 1
+    main_logits = main_logits.astype(jnp.float32)
+    greedy_out = jnp.argmax(main_logits, axis=-1).astype(jnp.int32)
+    if k == 0:
+        return greedy_out, jnp.zeros((B,), jnp.int32)
+
+    t = jnp.maximum(temperatures.astype(jnp.float32), 1e-6)[:, None, None]
+    p = jax.nn.softmax(top_k_mask(main_logits, top_k) / t, axis=-1)
+    q = jax.nn.softmax(
+        top_k_mask(draft_logits.astype(jnp.float32), top_k) / t, axis=-1)
+
+    k_u, k_r, k_b = jax.random.split(key, 3)
+    # acceptance of draft j: u < min(1, p_j(d_j) / q_j(d_j))
+    p_d = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                              axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(k_u, (B, k), jnp.float32)
+    acc_stoch = u < jnp.minimum(1.0, p_d / jnp.maximum(q_d, 1e-20))
+    acc_greedy = draft_tokens == greedy_out[:, :k]
+    greedy_row = temperatures <= 0.0
+    acc = jnp.where(greedy_row[:, None], acc_greedy, acc_stoch)
+    prefix = jnp.cumprod(acc.astype(jnp.int32), axis=-1)
+    n_acc = prefix.sum(axis=-1).astype(jnp.int32)
+
+    # residual distribution at each possible rejection point:
+    # norm(max(p - q, 0)) — Gumbel-max over its log
+    resid = jnp.maximum(p[:, :k] - q, 0.0)
+    resid_logits = jnp.where(resid > 0, jnp.log(resid), NEG_INF)
+    g_r = jax.random.gumbel(k_r, (B, k, V), jnp.float32)
+    resid_tok = jnp.argmax(resid_logits + g_r, axis=-1).astype(jnp.int32)
+    # standard sample from p_j at every row (used as the bonus token at
+    # j == k when all drafts were accepted)
+    g_b = jax.random.gumbel(k_b, (B, k1, V), jnp.float32)
+    samp_tok = jnp.argmax(jnp.log(jnp.maximum(p, 1e-38)) + g_b,
+                          axis=-1).astype(jnp.int32)
+
+    j = jnp.arange(k1)[None, :]
+    # token at j < n_acc: the accepted draft d_{j+1}; at j == n_acc: the
+    # residual resample (or the bonus sample when j == k); beyond: junk
+    pad_draft = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    resid_or_bonus = jnp.concatenate([resid_tok, samp_tok[:, -1:]], axis=1)
+    stoch_tok = jnp.where(j < n_acc[:, None], pad_draft, resid_or_bonus)
+    tokens = jnp.where(greedy_row[:, None], greedy_out, stoch_tok)
+    return tokens, n_acc
 
 
 def sample_host(logits: np.ndarray, temperature: float,

@@ -173,6 +173,17 @@ class SimConfig:
     # topology.
     long_context_tes: int = 0
     long_context_threshold: int = 8192
+    # §4.6 MTP speculative decoding: draft tokens per decode iteration
+    # (0 = off, byte-identical to the pre-MTP build per seed). When on,
+    # decode iterations run through the decode_sample_mtp contract —
+    # variable tokens-per-step with per-iteration accepted lengths drawn
+    # from the cost model's calibratable acceptance distribution — and
+    # decode_iter_time prices the draft+verify work. Colocated
+    # deployment only (the moe_attn pipeline is not MTP-priced yet).
+    mtp_k: int = 0
+    # overrides the cost model's per-draft acceptance probability
+    # (None keeps the default / calibrated ``mtp/acceptance`` value)
+    mtp_acceptance: Optional[float] = None
     drain_timeout_s: float = 120.0
     seed: int = 0
 
@@ -238,6 +249,12 @@ class SuperPodSim:
             raise ValueError(
                 f"long_context_tes={sim_cfg.long_context_tes} must leave "
                 f"at least one general TE of {sim_cfg.n_prefill_tes}")
+        if sim_cfg.mtp_k < 0:
+            raise ValueError(f"mtp_k={sim_cfg.mtp_k} must be >= 0")
+        if sim_cfg.mtp_k > 0 and sim_cfg.deployment != "colocated":
+            raise ValueError(
+                "mtp_k > 0 is priced through decode_iter_time — only the "
+                "colocated deployment supports MTP in the sim")
         for kind, pool, idx in (
                 ("straggler", self.faults.straggler_pool,
                  self.faults.straggler_dp),
@@ -263,6 +280,9 @@ class SuperPodSim:
         else:
             self.cost = SuperPodCostModel(self.model_cfg, self.plan,
                                           FabricModel())
+        if sim_cfg.mtp_acceptance is not None:
+            self.cost.mtp_acceptance = float(
+                np.clip(sim_cfg.mtp_acceptance, 0.0, 1.0))
         self.loop = EventLoop()
 
         wl = wl_cfg or WorkloadConfig()
@@ -285,7 +305,8 @@ class SuperPodSim:
             [DieModel(i) for i in range(sim_cfg.n_sim_expert_dies)]
             if sim_cfg.deployment == "moe_attn" else [])
         self.dps = [
-            DPGroup(i, CostModelBackend(i, self.cost),
+            DPGroup(i, CostModelBackend(i, self.cost,
+                                        mtp_k=sim_cfg.mtp_k),
                     max_batch=sim_cfg.max_batch, max_len=sim_cfg.max_len,
                     n_kv_blocks=sim_cfg.n_kv_blocks)
             for i in range(sim_cfg.n_sim_dps)
@@ -350,6 +371,10 @@ class SuperPodSim:
             if n_experts else None)
         self._map_cache: Dict[int, tuple] = {}
         self._iter_charge: Dict[int, float] = {}
+        # priced duration of each in-flight decode iteration, popped at
+        # execution (cancelled steps never count) — feeds the effective-
+        # TPOT accounting (decode_busy_s / n_decode_tokens)
+        self._pending_iter_t: Dict[int, float] = {}
         # moe_attn: priced-iteration observables held back until the
         # step actually executes (metrics must not count an iteration a
         # die death cancelled — keeps them aligned with n_decode_iters)
@@ -609,7 +634,8 @@ class SuperPodSim:
             t = self.cost.decode_iter_time(
                 len(positions), mean_context=max(ctx, 1),
                 moe_imbalance=self._moe_imbalance(),
-                slowdown=self.dies[dp_id].slowdown)
+                slowdown=self.dies[dp_id].slowdown,
+                mtp_k=self.cfg.mtp_k)
             if self.loop.now < self._prefill_busy_until[dp_id]:
                 # a prefill chunk is executing on this die: the decode
                 # iteration pays the colocation contention factor
@@ -627,7 +653,9 @@ class SuperPodSim:
         if self.dps[dp_id].active == 0:
             return
         self._step_scheduled[dp_id] = True
-        self.loop.schedule(self._iter_time(dp_id), f"dp_step:{dp_id}",
+        t = self._iter_time(dp_id)
+        self._pending_iter_t[dp_id] = t
+        self.loop.schedule(t, f"dp_step:{dp_id}",
                            lambda: self._dp_step(dp_id))
 
     def _dp_step(self, dp_id: int) -> None:
@@ -636,18 +664,29 @@ class SuperPodSim:
         if not self.dies[dp_id].alive or dp.active == 0:
             self._pending_pool_cost.pop(dp_id, None)   # step cancelled
             self._pending_contended.pop(dp_id, None)
+            self._pending_iter_t.pop(dp_id, None)
             return
         active = dp.active_requests()
+        # tokens-per-step-aware timestamping: an MTP iteration can emit
+        # 1..k+1 tokens per request, all stamped at this iteration's
+        # completion (n_emitted deltas; exactly 1 each when MTP is off,
+        # so the pre-MTP event stream is reproduced byte-identically)
+        emitted_before = [req.n_emitted for req in active]
         dp.decode_step_all()
         now = self.loop.now
         self.metrics.n_decode_iters += 1
+        t_iter = self._pending_iter_t.pop(dp_id, 0.0)
+        self.metrics.decode_busy_s += t_iter
+        self.metrics.n_slot_iters += len(active)
+        self.metrics.decode_slot_busy_s += t_iter * len(active)
         if self._pending_contended.pop(dp_id, None):
             self.metrics.n_contended_decode_iters += 1
         c = self._pending_pool_cost.pop(dp_id, None)
         if c is not None:
             self.metrics.on_moe_attn_iter(c)
-        for req in active:
-            self.metrics.on_token(now, req)
+        for req, n_before in zip(active, emitted_before):
+            for _ in range(req.n_emitted - n_before):
+                self.metrics.on_token(now, req)
             if req.state == RequestState.FINISHED:
                 self.metrics.on_finish(now, req)
                 self.n_finished += 1

@@ -136,6 +136,13 @@ class SuperPodCostModel:
         # assembly, cache-buffer writes — as measured by
         # bench_prefix_cache's ``prefill/hit_skip`` row)
         self.prefill_hit_skip = 1.0
+        # §4.6 MTP speculative decoding: per-draft acceptance probability
+        # (paper reports ~90% for the DeepSeek MTP head; the engine draws
+        # per-iteration accepted lengths from it) and, when measured by
+        # bench_mtp, the seconds one draft-head pass adds to an iteration
+        # (None ⇒ analytic one-block estimate in decode_iter_time)
+        self.mtp_acceptance = 0.9
+        self.mtp_draft_overhead: Optional[float] = None
         # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
         # t_comb_s)] interpolated in decode_iter_time when present
         self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
@@ -178,6 +185,12 @@ class SuperPodCostModel:
           cold prefill compute saved by seeding from the radix cache
           (DIMENSIONLESS in ``us_per_call``, clipped to [0, 1];
           ``bench_prefix_cache``) → replaces ``prefill_hit_skip``.
+        * ``mtp/acceptance`` — measured per-draft acceptance probability
+          of the MTP head (DIMENSIONLESS in ``us_per_call``, clipped to
+          [0, 1]; ``bench_mtp``) → replaces ``mtp_acceptance``.
+        * ``mtp/draft_overhead`` — measured extra time one draft-head
+          pass adds to a decode iteration in µs (``bench_mtp``) →
+          replaces the analytic draft term of :meth:`decode_iter_time`.
 
         Extra keyword args override constants directly
         (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
@@ -214,6 +227,11 @@ class SuperPodCostModel:
             elif name == "prefill/hit_skip":
                 self.prefill_hit_skip = float(
                     np.clip(float(row["us_per_call"]), 0.0, 1.0))
+            elif name == "mtp/acceptance":
+                self.mtp_acceptance = float(
+                    np.clip(float(row["us_per_call"]), 0.0, 1.0))
+            elif name == "mtp/draft_overhead":
+                self.mtp_draft_overhead = float(row["us_per_call"]) * 1e-6
         if comm:
             self._calib_comm = sorted(comm)
         if pref:
@@ -418,7 +436,8 @@ class SuperPodCostModel:
     def decode_iter_time(self, batch_per_die: int, mean_context: int = 0,
                          moe_imbalance=1.0,
                          slowdown: float = 1.0,
-                         microbatches: Optional[int] = None) -> float:
+                         microbatches: Optional[int] = None,
+                         mtp_k: int = 0) -> float:
         """One decode iteration of a DP group (batch ``batch_per_die``
         per attention die), with the pod's other DP domains loading the
         shared expert dies symmetrically.
@@ -436,9 +455,34 @@ class SuperPodCostModel:
         ``b / mb``, dispatch/combine hidden under the other microbatch's
         expert GMM); 1 prices the serial attn→dispatch→MoE→combine
         chain.
+
+        ``mtp_k`` ≥ 1 prices §4.6 propose-then-verify inside the
+        iteration: the fused verify chain re-runs the token-dependent
+        work over ``k + 1`` tokens per slot — modeled as the iteration
+        at effective batch ``b·(k+1)`` (weights stay resident: the
+        memory-bound side amortizes, exactly what makes speculative
+        decoding pay at decode batch sizes) — plus ``k`` draft-head
+        passes (measured ``mtp/draft_overhead`` row when calibrated, an
+        analytic one-block time otherwise). The emitted tokens per
+        iteration (1 + accepted drafts) are the engine's concern; this
+        method prices only the iteration itself.
         """
         if batch_per_die <= 0:
             return self.iter_overhead
+        if mtp_k > 0:
+            base = self.decode_iter_time(
+                batch_per_die * (mtp_k + 1), mean_context=mean_context,
+                moe_imbalance=moe_imbalance, microbatches=microbatches)
+            ctx = mean_context or self.mean_context
+            if self.mtp_draft_overhead is not None:
+                t_draft = mtp_k * self.mtp_draft_overhead
+            else:
+                # one transformer-block-ish pass per draft: attention at
+                # the REAL batch (the draft head decodes one token per
+                # slot) plus a dense FFN-scale projection
+                t_draft = mtp_k * (self._attn_time(batch_per_die, ctx)
+                                   + self._dense_ffn_time(batch_per_die))
+            return (base + t_draft) * slowdown
         plan = self.plan
         ctx = mean_context or self.mean_context
         b = batch_per_die
@@ -628,9 +672,11 @@ class CostModelBackend(ExecutionBackend):
     SIM_VOCAB = 64
     supports_chunked_prefill = True
 
-    def __init__(self, dp_id: int, cost: SuperPodCostModel):
+    def __init__(self, dp_id: int, cost: SuperPodCostModel,
+                 mtp_k: int = 0):
         self.dp_id = dp_id
         self.cost = cost
+        self.mtp_k = int(mtp_k)
         self.vocab_size = self.SIM_VOCAB
         self.n_prefills = 0
         self.n_decode_steps = 0
@@ -741,3 +787,54 @@ class CostModelBackend(ExecutionBackend):
                 axis=-1).astype(np.int32)
             nxt = np.where(temps > 0, stoch, nxt)
         return nxt, cache
+
+    def init_mtp_cache(self, max_batch: int, max_len: int):
+        return {"sim_dp": self.dp_id, "mtp_slots": max_batch}
+
+    def reset_mtp_slot(self, mtp_cache, slot: int):
+        return mtp_cache
+
+    def decode_sample_mtp(self, cache, mtp_cache, tokens: np.ndarray,
+                          positions: np.ndarray,
+                          temperatures: np.ndarray, step: int, *,
+                          donate: bool = True):
+        """``decode_sample_mtp`` contract on the pseudo-model: the token
+        block chains the SAME deterministic hash the 1-token path steps
+        through, so for greedy slots the emitted stream is exactly what
+        ``decode_sample`` would produce over n_acc+1 iterations (the
+        sim's analogue of the JAX path's lossless greedy acceptance);
+        stochastic slots chain per-position Gumbel draws seeded by
+        ``(dp_id, step)``. Accepted lengths are the leading run of
+        Bernoulli(``cost.mtp_acceptance``) successes, drawn from a
+        generator seeded purely by ``(dp_id, step, salt)`` so traces
+        stay byte-reproducible.
+        """
+        if not self.mtp_k:
+            raise NotImplementedError("backend built with mtp_k=0")
+        self.n_decode_steps += 1
+        k = self.mtp_k
+        B = tokens.shape[0]
+        temps = np.asarray(temperatures, np.float32)
+        stoch_rng = (np.random.default_rng((self.dp_id, int(step)))
+                     if np.any(temps > 0) else None)
+        block = np.zeros((B, k + 1), np.int32)
+        tok = np.asarray(tokens, np.int64)[:, 0]
+        pos = np.asarray(positions, np.int64)
+        for j in range(k + 1):
+            nxt = ((tok * 5 + (pos + j) * 3 + 11)
+                   % self.vocab_size).astype(np.int32)
+            if stoch_rng is not None:
+                g = stoch_rng.gumbel(size=(B, self.vocab_size))
+                onehot = np.zeros_like(g)
+                onehot[np.arange(B), nxt] = 1.0
+                stoch = np.argmax(
+                    onehot / np.maximum(temps, 1e-6)[:, None] + g,
+                    axis=-1).astype(np.int32)
+                nxt = np.where(temps > 0, stoch, nxt)
+            block[:, j] = nxt
+            tok = nxt.astype(np.int64)
+        acc_rng = np.random.default_rng((self.dp_id, int(step), 7919))
+        acc = (acc_rng.random((B, k))
+               < self.cost.mtp_acceptance).astype(np.int32)
+        n_acc = np.cumprod(acc, axis=1).sum(axis=1).astype(np.int32)
+        return block, n_acc, cache, mtp_cache

@@ -76,6 +76,16 @@ class MetricsCollector:
         self.reconfig_time_s = 0.0    # fabric time charged to migrations
         self.n_failovers = 0
         self.n_decode_iters = 0
+        # §4.6 MTP observables. A slot-iteration is one active slot
+        # going through one decode iteration; summing tokens over them
+        # gives per-slot tokens/iteration (exactly 1.0 with MTP off,
+        # 1 + E[accepted] with MTP on), and weighting each iteration's
+        # priced duration by its active slots gives the per-request
+        # effective TPOT: decode_slot_busy_s / n_decode_tokens.
+        self.n_decode_tokens = 0
+        self.n_slot_iters = 0
+        self.decode_busy_s = 0.0       # Σ iteration durations
+        self.decode_slot_busy_s = 0.0  # Σ duration · active slots
         # chunked prefill: chunks executed, decode iterations stretched
         # by a co-resident prefill chunk, and §7.2 long-context routing
         self.n_prefill_chunks = 0
@@ -112,6 +122,7 @@ class MetricsCollector:
 
     def on_token(self, t: float, req) -> None:
         self.records[req.req_id].n_tokens += 1
+        self.n_decode_tokens += 1
 
     def on_finish(self, t: float, req) -> None:
         self.records[req.req_id].finish = round(t, 9)
@@ -181,6 +192,16 @@ class MetricsCollector:
             "reconfig_time_s": round(self.reconfig_time_s, 9),
             "n_failovers": self.n_failovers,
             "n_decode_iters": self.n_decode_iters,
+            # §4.6 MTP observables (identities when MTP is off: exactly
+            # 1 token per slot-iteration, effective TPOT == slot-weighted
+            # mean iteration time)
+            "n_decode_tokens": self.n_decode_tokens,
+            "tokens_per_decode_iter": round(
+                self.n_decode_tokens / max(self.n_slot_iters, 1), 6),
+            "decode_busy_s": round(self.decode_busy_s, 9),
+            "tpot_effective_s": round(
+                self.decode_slot_busy_s / max(self.n_decode_tokens, 1),
+                9),
             # chunked prefill + §7.2 long-context routing
             "n_prefill_chunks": self.n_prefill_chunks,
             "n_contended_decode_iters": self.n_contended_decode_iters,

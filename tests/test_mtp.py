@@ -1,0 +1,327 @@
+"""§4.6 MTP speculative decoding inside the zero-sync fast path.
+
+Fast tier: the ``speculative_verify`` acceptance rule (greedy rows
+lossless, stochastic rows distributed as the main model), the
+CostModelBackend transfer guard (≤ 4·B·(k+1) + 4·B bytes/iteration),
+greedy losslessness through DPGroup, cost-model pricing, and the
+``mtp/*`` calibration-row loader.
+
+Slow tier (compiles the deepseek-v3 smoke model): fuzzed bit-identity
+of greedy ``decode_sample_mtp`` against plain greedy ``decode_sample``,
+and the JAX host-transfer guard mirroring ``test_sampling.py``.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.sampling import sample_tokens, speculative_verify
+
+
+# ---------------------------------------------------------------------------
+# speculative_verify: the acceptance rule in isolation
+# ---------------------------------------------------------------------------
+def _rand_logits(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def test_verify_greedy_rows_are_argmax_chain():
+    """Greedy rows: emitted tokens ARE the main model's argmax at every
+    position, regardless of what the draft proposed — losslessness is
+    structural, acceptance only decides how many come out per step."""
+    rng = np.random.default_rng(0)
+    B, k, V = 8, 2, 33
+    main = _rand_logits(rng, B, k + 1, V)
+    draft_logits = _rand_logits(rng, B, k, V)
+    draft = jnp.asarray(rng.integers(0, V, (B, k)).astype(np.int32))
+    toks, n_acc = speculative_verify(main, draft, draft_logits,
+                                     jnp.zeros((B,), jnp.float32),
+                                     jax.random.PRNGKey(0))
+    toks, n_acc = np.asarray(toks), np.asarray(n_acc)
+    greedy = np.argmax(np.asarray(main), axis=-1)
+    d = np.asarray(draft)
+    for i in range(B):
+        # committed prefix (n_acc+1 tokens) matches the argmax chain
+        np.testing.assert_array_equal(toks[i, :n_acc[i] + 1],
+                                      greedy[i, :n_acc[i] + 1])
+        # acceptance = longest prefix where the draft guessed the argmax
+        want = 0
+        while want < k and d[i, want] == greedy[i, want]:
+            want += 1
+        assert n_acc[i] == want
+
+
+def test_verify_acceptance_is_prefix():
+    """n_accepted counts a contiguous prefix: a rejection at j kills
+    every later draft position (cumprod rule)."""
+    rng = np.random.default_rng(1)
+    B, k, V = 64, 3, 17
+    main = _rand_logits(rng, B, k + 1, V)
+    dl = _rand_logits(rng, B, k, V)
+    draft = jnp.asarray(rng.integers(0, V, (B, k)).astype(np.int32))
+    _, n_acc = speculative_verify(main, draft, dl,
+                                  jnp.full((B,), 0.9, jnp.float32),
+                                  jax.random.PRNGKey(2))
+    assert ((0 <= np.asarray(n_acc)) & (np.asarray(n_acc) <= k)).all()
+
+
+def test_verify_stochastic_marginal_matches_main_model():
+    """The rejection rule's guarantee: whatever the draft proposes, the
+    FIRST emitted token is distributed as softmax(main/T) — same law
+    sample_tokens draws from. Checked empirically over many rows."""
+    rng = np.random.default_rng(3)
+    V, n, temp = 4, 4000, 1.0
+    main_row = jnp.asarray([1.5, 0.5, -0.5, -1.0], jnp.float32)
+    # a deliberately WRONG draft distribution
+    draft_row = jnp.asarray([-1.0, 2.0, 0.0, 0.5], jnp.float32)
+    main = jnp.tile(main_row[None, None], (n, 2, 1))
+    dl = jnp.tile(draft_row[None, None], (n, 1, 1))
+    draft = np.asarray(sample_tokens(
+        jnp.tile(draft_row[None], (n, 1)), jnp.full((n,), temp),
+        jax.random.PRNGKey(4)))[:, None].astype(np.int32)
+    toks, _ = speculative_verify(main, jnp.asarray(draft), dl,
+                                 jnp.full((n,), temp, jnp.float32),
+                                 jax.random.PRNGKey(5))
+    emp = np.bincount(np.asarray(toks)[:, 0], minlength=V) / n
+    want = np.asarray(jax.nn.softmax(main_row / temp))
+    np.testing.assert_allclose(emp, want, atol=0.03)
+
+
+def test_verify_k0_degenerates_to_plain_sampling():
+    rng = np.random.default_rng(6)
+    B, V = 8, 29
+    main = _rand_logits(rng, B, 1, V)
+    toks, n_acc = speculative_verify(
+        main, jnp.zeros((B, 0), jnp.int32), jnp.zeros((B, 0, V)),
+        jnp.zeros((B,), jnp.float32), jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(n_acc), 0)
+    np.testing.assert_array_equal(np.asarray(toks)[:, 0],
+                                  np.argmax(np.asarray(main)[:, 0], -1))
+
+
+# ---------------------------------------------------------------------------
+# CostModelBackend: transfer guard + greedy losslessness through DPGroup
+# ---------------------------------------------------------------------------
+def _sim_dp(max_batch=4, mtp_k=0):
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.serving.dp_group import DPGroup
+    from repro.sim.fabric import CostModelBackend, SuperPodCostModel
+    cfg = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    return DPGroup(0, CostModelBackend(0, cost, mtp_k=mtp_k),
+                   max_batch=max_batch, max_len=64, n_kv_blocks=256)
+
+
+def test_mtp_decode_step_transfer_budget():
+    """The MTP hot loop fetches exactly one [B, k+1] int32 block plus a
+    [B] int32 accepted-count — 4·B·(k+1) + 4·B bytes, never logits."""
+    from repro.serving.request import Request
+    dp = _sim_dp(mtp_k=1)
+    req = Request(prompt_tokens=[1, 2, 3], max_new_tokens=8,
+                  ignore_eos=True)
+    cache1, logits = dp.backend.prefill(req.prompt_tokens)
+    dp.admit(req, cache1, logits)
+
+    fetched = []
+    orig = dp.backend.decode_sample_mtp
+
+    def spy(cache, mtp_cache, tokens, positions, temps, step, **kw):
+        block, n_acc, c, mc = orig(cache, mtp_cache, tokens, positions,
+                                   temps, step, **kw)
+        fetched.append((np.asarray(block), np.asarray(n_acc)))
+        return block, n_acc, c, mc
+
+    dp.backend.decode_sample_mtp = spy
+    for name in ("decode", "decode_sample"):
+        setattr(dp.backend, name, lambda *a, **k: (_ for _ in ()).throw(
+            AssertionError(f"1-token path used with mtp_k set")))
+    while req.n_emitted < 8:
+        assert dp.decode_step_all() >= 1
+    B, k = dp.max_batch, dp.backend.mtp_k
+    assert fetched
+    for block, n_acc in fetched:
+        assert block.nbytes == 4 * B * (k + 1) and block.dtype == np.int32
+        assert n_acc.nbytes == 4 * B and n_acc.dtype == np.int32
+    dp.close()
+
+
+def _greedy_chain(dp, prompt, n_new):
+    from repro.serving.request import Request
+    req = Request(prompt_tokens=list(prompt), max_new_tokens=n_new,
+                  ignore_eos=True)
+    cache1, logits = dp.backend.prefill(req.prompt_tokens)
+    dp.admit(req, cache1, logits)
+    for _ in range(4 * n_new):
+        if req.n_emitted >= n_new:
+            break
+        dp.decode_step_all()
+    dp.drain()
+    out = list(req.output_tokens)
+    dp.close()
+    return out
+
+
+def test_mtp_greedy_chain_matches_plain_dp_group():
+    """Greedy emission through DPGroup is token-identical with and
+    without MTP on the cost-model backend (whose verify chain replays
+    the deterministic decode hash)."""
+    prompt = [3, 1, 4, 1, 5]
+    plain = _greedy_chain(_sim_dp(), prompt, 12)
+    mtp = _greedy_chain(_sim_dp(mtp_k=1), prompt, 12)
+    assert plain[:12] == mtp[:12]
+
+
+def test_mtp_slot_reset_on_admit():
+    """Admission must clear the slot's draft state before first decode."""
+    from repro.serving.request import Request
+    dp = _sim_dp(mtp_k=2)
+    calls = []
+    orig = dp.backend.reset_mtp_slot
+    dp.backend.reset_mtp_slot = lambda mc, slot: calls.append(int(slot)) \
+        or orig(mc, slot)
+    req = Request(prompt_tokens=[7, 7], max_new_tokens=2, ignore_eos=True)
+    cache1, logits = dp.backend.prefill(req.prompt_tokens)
+    dp.admit(req, cache1, logits)
+    assert calls == [0]
+    dp.close()
+
+
+# ---------------------------------------------------------------------------
+# cost-model pricing of the draft+verify iteration
+# ---------------------------------------------------------------------------
+def test_decode_iter_time_prices_mtp():
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.sim.fabric import SuperPodCostModel
+    cfg = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    plain = cost.decode_iter_time(32, 1024)
+    mtp1 = cost.decode_iter_time(32, 1024, mtp_k=1)
+    # the k=0 path is untouched (byte-identity discipline)
+    assert cost.decode_iter_time(32, 1024, mtp_k=0) == plain
+    # draft+verify costs more per iteration than a 1-token step, but far
+    # less than running k+1 full iterations — that's the whole point
+    assert plain < mtp1 < 2.0 * plain
+    # measured draft overhead (µs) replaces the analytic draft term
+    cost.mtp_draft_overhead = 100e-6
+    assert cost.decode_iter_time(32, 1024, mtp_k=1) == pytest.approx(
+        cost.decode_iter_time(32 * 2, 1024) + 100e-6)
+
+
+def test_cost_model_ingests_mtp_calibration_rows(tmp_path):
+    """`from_calibration` picks up the rows bench_mtp --smoke emits."""
+    import json
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.sim.fabric import SuperPodCostModel
+    cfg = get_config("deepseek-v3-671b")
+    plan = plan_partition(cfg, 768)
+    rows = [
+        {"name": "mtp/acceptance", "us_per_call": 0.8,
+         "derived": "k=1 trained head"},
+        {"name": "mtp/draft_overhead", "us_per_call": 123.0,
+         "derived": ""},
+    ]
+    p = tmp_path / "BENCH_mtp.json"
+    p.write_text(json.dumps({"benchmark": "mtp", "rows": rows}))
+    cal = SuperPodCostModel.from_calibration(cfg, plan, str(p))
+    assert cal.mtp_acceptance == pytest.approx(0.8)
+    assert cal.mtp_draft_overhead == pytest.approx(123e-6)
+    # acceptance is a probability: out-of-range measurements are clipped
+    rows[0]["us_per_call"] = 1.7
+    p.write_text(json.dumps({"benchmark": "mtp", "rows": rows}))
+    assert SuperPodCostModel.from_calibration(
+        cfg, plan, str(p)).mtp_acceptance == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# JAX backend (slow: compiles the deepseek-v3 smoke model)
+# ---------------------------------------------------------------------------
+def _smoke_backends(mtp_k=1, max_len=64):
+    from repro.configs import get_config
+    from repro.models.mesh_ctx import make_smoke_ctx
+    from repro.models.transformer import build_model
+    from repro.serving.backend import JAXBackend
+    cfg = get_config("deepseek-v3-671b-smoke")
+    model = build_model(cfg, make_smoke_ctx())
+    params = model.init(jax.random.PRNGKey(0))
+    return (JAXBackend(model, params, max_len=max_len),
+            JAXBackend(model, params, max_len=max_len, mtp_k=mtp_k),
+            cfg)
+
+
+def _admit(be, prompts, max_len=64):
+    B = len(prompts)
+    cache = be.init_cache(B, max_len)
+    mtp_cache = be.init_mtp_cache(B, max_len) if be.mtp_k else None
+    cur = np.zeros((B, 1), np.int32)
+    pos = np.zeros((B,), np.int32)
+    for i, p in enumerate(prompts):
+        c1, logits = be.prefill(p)
+        cache = be.write_slot(cache, c1, i)
+        if be.mtp_k:
+            mtp_cache = be.reset_mtp_slot(mtp_cache, i)
+        cur[i, 0] = int(np.argmax(logits))
+        pos[i] = len(p)
+    return cache, mtp_cache, cur, pos
+
+
+@pytest.mark.slow
+def test_jax_mtp_greedy_bit_identical_fuzz():
+    """Property: for ANY prompt set and ANY (untrained → adversarially
+    wrong) draft head, greedy decode_sample_mtp emits bit-identical
+    tokens to plain greedy decode_sample. 3 fuzzed prompt sets on one
+    compiled backend pair."""
+    plain, mtp, cfg = _smoke_backends()
+    n_new = 10
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        prompts = [[int(t) for t in
+                    rng.integers(0, cfg.vocab_size, rng.integers(4, 12))]
+                   for _ in range(2)]
+        # reference chain through the 1-token fast path
+        cache, _, cur, pos = _admit(plain, prompts)
+        ref = [[int(cur[i, 0])] for i in range(2)]
+        temps = np.zeros((2,), np.float32)
+        for step in range(n_new):
+            out, cache = plain.decode_sample(cache, cur, pos, temps, step)
+            out = np.asarray(out)
+            for i in range(2):
+                ref[i].append(int(out[i]))
+            cur = out[:, None].astype(np.int32)
+            pos = pos + 1
+        # speculative chain
+        cache, mtp_cache, cur, pos = _admit(mtp, prompts)
+        got = [[int(cur[i, 0])] for i in range(2)]
+        step = 0
+        while min(len(t) for t in got) < n_new + 1:
+            block, n_acc, cache, mtp_cache = mtp.decode_sample_mtp(
+                cache, mtp_cache, cur, pos, temps, step)
+            block, n_acc = np.asarray(block), np.asarray(n_acc)
+            for i in range(2):
+                got[i].extend(int(block[i, j])
+                              for j in range(int(n_acc[i]) + 1))
+                cur[i, 0] = block[i, n_acc[i]]
+                pos[i] += int(n_acc[i]) + 1
+            step += 1
+        for i in range(2):
+            assert got[i][:n_new + 1] == ref[i][:n_new + 1], \
+                f"seed={seed} slot={i}: MTP diverged from plain greedy"
+
+
+@pytest.mark.slow
+def test_jax_mtp_host_transfer_budget():
+    """decode_sample_mtp's device→host traffic is one [B, k+1] int32
+    block + one [B] int32 count — 4·B·(k+1) + 4·B bytes."""
+    _, mtp, _ = _smoke_backends()
+    prompts = [[5, 6, 7], [9, 8]]
+    cache, mtp_cache, cur, pos = _admit(mtp, prompts)
+    block, n_acc, _, _ = mtp.decode_sample_mtp(
+        cache, mtp_cache, cur, pos, np.zeros((2,), np.float32), 0,
+        donate=False)
+    block, n_acc = np.asarray(block), np.asarray(n_acc)
+    B, k = 2, mtp.mtp_k
+    assert block.nbytes == 4 * B * (k + 1) and block.dtype == np.int32
+    assert n_acc.nbytes == 4 * B and n_acc.dtype == np.int32

@@ -519,3 +519,54 @@ def test_prefix_share_sessions_produce_hits_e2e():
     assert s["n_prefix_hits"] > 0
     assert s["n_prefix_hit_tokens"] >= s["n_prefix_hits"] * 16
     assert s["n_finished"] == s["n_requests"]
+
+
+# ---------------------------------------------------------------------------
+# §4.6 MTP in the simulator
+# ---------------------------------------------------------------------------
+def test_mtp_off_is_byte_identical_to_defaults():
+    """mtp_k=0 must leave the RNG stream, the event trace, and the
+    report untouched — existing seeds reproduce byte-for-byte with the
+    MTP knobs at their defaults."""
+    a = run_sim()
+    b = run_sim(sim_kw={"mtp_k": 0, "mtp_acceptance": 0.5})
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json(include_requests=True) \
+        == b.to_json(include_requests=True)
+    s = a.summary
+    # MTP-off identities: exactly one token per slot-iteration, and the
+    # effective TPOT is the slot-weighted mean iteration time
+    assert s["tokens_per_decode_iter"] == 1.0
+    assert s["n_decode_tokens"] == s["n_slot_iters"] \
+        if "n_slot_iters" in s else True
+
+
+def test_mtp_cuts_effective_tpot():
+    """Priced speculative decoding: >1 token per slot-iteration and a
+    lower effective TPOT than the 1-token baseline, even though each
+    draft+verify iteration individually costs more."""
+    base = run_sim()
+    mtp = run_sim(sim_kw={"mtp_k": 1, "mtp_acceptance": 0.9})
+    sb, sm = base.summary, mtp.summary
+    assert sb["tokens_per_decode_iter"] == 1.0
+    assert sm["tokens_per_decode_iter"] > 1.5     # ≈ 1 + 0.9 acceptance
+    assert sm["tpot_effective_s"] < sb["tpot_effective_s"]
+    assert sm["tpot_mean_s"] < sb["tpot_mean_s"]
+    assert sm["n_finished"] == sm["n_requests"]
+
+
+def test_mtp_acceptance_scales_tokens_per_iter():
+    lo = run_sim(sim_kw={"mtp_k": 1, "mtp_acceptance": 0.3})
+    hi = run_sim(sim_kw={"mtp_k": 1, "mtp_acceptance": 0.9})
+    assert lo.summary["tokens_per_decode_iter"] \
+        < hi.summary["tokens_per_decode_iter"]
+    assert lo.summary["tpot_effective_s"] > hi.summary["tpot_effective_s"]
+
+
+def test_mtp_requires_colocated():
+    with pytest.raises(ValueError, match="mtp_k"):
+        SuperPodSim(SimConfig(arch=ARCH, deployment="moe_attn", mtp_k=1),
+                    WorkloadConfig(**WL))
+    with pytest.raises(ValueError, match="mtp_k"):
+        SuperPodSim(SimConfig(arch=ARCH, mtp_k=-1),
+                    WorkloadConfig(**WL))
