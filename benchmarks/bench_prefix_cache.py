@@ -78,6 +78,15 @@ def bench_seed_vs_compute(smoke: bool) -> None:
         _, logits = be.prefill_chunk(None, toks, 0, total)
         return logits
 
+    def remote_warm_path():
+        # pod-pooled cross-DP hit: pull the owner's stored blocks over
+        # the UB read path, then seed + suffix exactly like a local hit
+        pulled = be.read_remote_kv(payloads)
+        cache = be.seed_prefill_cache(pulled, n_prefix, total)
+        _, logits = be.prefill_chunk(cache, toks[n_prefix:], n_prefix,
+                                     total)
+        return logits
+
     seed_us = time_fn(seed, iters=iters, warmup=2)
     prefix_us = time_fn(prefix_compute, iters=iters, warmup=2)
     warm_us = time_fn(warm_path, iters=iters, warmup=2)
@@ -97,6 +106,35 @@ def bench_seed_vs_compute(smoke: bool) -> None:
     emit("prefill/hit_skip", hit_skip,
          f"seed {seed_us:.0f}us vs compute {prefix_us:.0f}us "
          "(dimensionless skip factor in us_per_call column)")
+
+    # cross-DP remote seed (pod-pooled prefix KV): UB read of the
+    # owner's blocks + seed, vs recomputing the prefix. The CI gate:
+    # a cross-DP warm prefill must still beat a cold one — otherwise
+    # pooling can never pay and the directory is pure overhead.
+    read_us = time_fn(lambda: be.read_remote_kv(payloads),
+                      iters=iters, warmup=2)
+    remote_warm_us = time_fn(remote_warm_path, iters=iters, warmup=2)
+    emit("prefix_cache/remote_read", read_us,
+         f"read_remote_kv of {n_prefix // bs} stored block payloads")
+    emit("prefix_cache/remote_warm_prefill", remote_warm_us,
+         f"UB read + seed + {n_suffix}-token suffix chunk")
+    remote_seed = float(np.clip(
+        1.0 - (read_us + seed_us) / max(prefix_us, 1e-9), 0.0, 1.0))
+    emit("prefix/remote_seed", remote_seed,
+         f"read+seed {read_us + seed_us:.0f}us vs compute "
+         f"{prefix_us:.0f}us (dimensionless skip factor in us_per_call "
+         "column; loaded by SuperPodCostModel.from_calibration)")
+    if remote_warm_us >= cold_us:
+        raise RuntimeError(
+            f"cross-DP warm prefill must beat cold: remote warm "
+            f"{remote_warm_us:.0f}us vs cold {cold_us:.0f}us")
+    # remote-hit-seeded prefill must be bit-identical to cold prefill
+    # (prefill_chunk returns the last position's logits)
+    cold_logits = np.asarray(cold_path())
+    remote_logits = np.asarray(remote_warm_path())
+    if not np.array_equal(cold_logits, remote_logits):
+        raise RuntimeError("remote-seeded prefill logits diverge from "
+                           "cold prefill (must be bit-identical)")
 
     # radix control-plane latency on a populated tree
     from repro.serving.kv_cache import RadixTree
@@ -148,16 +186,62 @@ def sweep_prefix_share(smoke: bool) -> None:
          "(ratio in us_per_call column)")
 
 
+def sweep_pooled(smoke: bool) -> None:
+    """Session-migration workload, per-DP-only vs pod-pooled caching.
+
+    Continuing turns re-land away from their warm TE with probability
+    ``session_migration``; without the pod directory their prefix is
+    recomputed from scratch. The gate asserts pooling cuts mean TTFT
+    vs per-DP-only caching on the same (deterministic) trace.
+    """
+    from repro.sim import SimConfig, SuperPodSim, WorkloadConfig
+
+    wl = dict(arrival_rate=120.0 if smoke else 150.0,
+              duration_s=1.0 if smoke else 1.5,
+              prefix_share=0.7,
+              session_migration=0.8 if not smoke else 0.7,
+              session_extend_len=512, mean_output=32, seed=7)
+    base = dict(arch="deepseek-v3-671b", n_sim_dps=4,
+                n_prefill_tes=2, eplb_interval_s=2.0)
+    ttfts = {}
+    for tag, pooled in (("unpooled", False), ("pooled", True)):
+        sim = SuperPodSim(SimConfig(**base, kv_pool=pooled),
+                          WorkloadConfig(**wl))
+        s = sim.run().summary
+        ttfts[tag] = s["ttft_mean_s"]
+        emit(f"prefix_cache/pooled_sweep/ttft_{tag}",
+             s["ttft_mean_s"] * 1e6,
+             f"p99={s['ttft_p99_s']:.4f}s "
+             f"pod_hits={s['n_pod_remote_hits']} "
+             f"pod_hit_toks={s['n_pod_remote_hit_tokens']} "
+             f"remote_read_s={s['remote_seed_read_s']:.6f} "
+             f"n={s['n_finished']}")
+    if ttfts["pooled"] >= ttfts["unpooled"]:
+        raise RuntimeError(
+            f"pod-pooled prefix KV must cut TTFT under session "
+            f"migration: pooled {ttfts['pooled']:.4f}s vs unpooled "
+            f"{ttfts['unpooled']:.4f}s")
+    emit("prefix_cache/pooled_sweep/ttft_speedup",
+         ttfts["unpooled"] / max(ttfts["pooled"], 1e-9),
+         "mean-TTFT ratio per-DP-only vs pod-pooled "
+         "(ratio in us_per_call column)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small model / few iters (CI)")
+    ap.add_argument("--pooled", action="store_true",
+                    help="also sweep pod-pooled vs per-DP-only caching "
+                         "under session migration")
     ap.add_argument("--json", default=None,
                     help="output path (default BENCH_prefix_cache.json)")
     args, _ = ap.parse_known_args()
     reset()
     bench_seed_vs_compute(args.smoke)
     sweep_prefix_share(args.smoke)
+    if args.pooled:
+        sweep_pooled(args.smoke)
     write_json("prefix_cache", args.json)
 
 

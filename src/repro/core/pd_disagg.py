@@ -40,12 +40,19 @@ from repro.models.transformer import build_model
 from repro.serving.backend import JAXBackend
 from repro.serving.distflow import DistFlowInstance, TransferState
 from repro.serving.dp_group import DPGroup
+from repro.serving.kv_cache import PodKVDirectory
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (DecodeLoadBalancer, PrefillScheduler,
                                      pick_prefill_te)
 from repro.serving.tokenizer import ByteTokenizer
 
 PyTree = Any
+
+# Routing-time cost share of a pod-pooled UB read relative to the
+# prefill compute it replaces (mirrors 1 - SuperPodCostModel.
+# prefix_remote_seed; the `prefix/remote_seed` calibration row measured
+# by bench_prefix_cache refines the sim-side value).
+REMOTE_SEED_COST = 0.15
 
 
 @dataclasses.dataclass
@@ -62,10 +69,12 @@ class PrefillTE:
             "te_id": self.te_id,
             "load": sum(len(self.scheduler.queue) for _ in (0,)),
             # real radix-cache hit rate (lifetime fraction of queried
-            # blocks served from cache) — feeds the hit-fraction-aware
-            # TE routing of pick_prefill_te
+            # blocks served from cache, INCLUDING pod-directory remote
+            # hits — a TE warm through the pooled cache must not score
+            # as cold) — feeds the hit-fraction-aware TE routing of
+            # pick_prefill_te
             "cache_hit": float(np.mean([
-                d.prefix_cache.hit_rate for d in self.dps])
+                d.pooled_hit_rate for d in self.dps])
                 if self.dps else 0.0),
             "mean_len": 512,
             "long": self.long_capable,
@@ -88,7 +97,8 @@ class DisaggregatedPD:
                  max_len: int = 256, ctx: Optional[MeshCtx] = None,
                  prefill_fabrics: Optional[Sequence[str]] = None,
                  seed: int = 0, token_budget: int = 8192,
-                 chunk_tokens: Optional[int] = None, mtp_k: int = 0):
+                 chunk_tokens: Optional[int] = None, mtp_k: int = 0,
+                 kv_pool: bool = False):
         self.cfg = cfg
         self.max_len = max_len
         ctx = ctx or make_smoke_ctx()
@@ -97,6 +107,10 @@ class DisaggregatedPD:
                        else self.model.init(jax.random.PRNGKey(seed)))
         self.tokenizer = ByteTokenizer()
 
+        # pod-pooled prefix KV (kv_pool): one directory spans every
+        # prefill DP across ALL prefill TEs, so a session re-landing on
+        # another TE seeds over UB instead of re-prefilling
+        self.pod_dir = PodKVDirectory() if kv_pool else None
         fabrics = list(prefill_fabrics or ["ub"] * n_prefill_te)
         self.prefill_tes = [
             PrefillTE(
@@ -104,7 +118,8 @@ class DisaggregatedPD:
                 dps=[DPGroup(100 * i + j,
                              JAXBackend(self.model, self.params,
                                         max_len=max_len),
-                             max_batch=max_batch, max_len=max_len)
+                             max_batch=max_batch, max_len=max_len,
+                             pod_directory=self.pod_dir)
                      for j in range(dp_per_te)],
                 scheduler=PrefillScheduler(dp_per_te,
                                            token_budget=token_budget,
@@ -152,8 +167,23 @@ class DisaggregatedPD:
         limit = max(self.max_len - req.max_new_tokens - 1, 16)
         if req.prompt_len > limit:
             req.prompt_tokens = req.prompt_tokens[-limit:]
-        # step 1: JE → prefill TE
-        te_id = pick_prefill_te([t.stats() for t in self.prefill_tes], req)
+        # step 1: JE → prefill TE (cache-aware when the pod directory is
+        # on: weigh this request's local hit vs best cross-TE remote hit,
+        # the latter discounted by the UB read's cost share)
+        pod_match = None
+        if self.pod_dir is not None:
+            def pod_match(te_id: int, r: Request,
+                          tes=self.prefill_tes):
+                te = tes[te_id]
+                local = max(d.prefix_cache.match_fraction(r.prompt_tokens)
+                            for d in te.dps)
+                remote = self.pod_dir.match_fraction(
+                    r.prompt_tokens,
+                    exclude={d.dp_id for d in te.dps})
+                return local, remote
+        te_id = pick_prefill_te([t.stats() for t in self.prefill_tes], req,
+                                pod_match_fn=pod_match,
+                                remote_seed_cost=REMOTE_SEED_COST)
         req.prefill_te = te_id
         req.state = RequestState.PREFILLING
         self.prefill_tes[te_id].scheduler.submit(req)

@@ -155,6 +155,20 @@ Contract details:
   seq-addressed cache layout (``xccl/pd_transfer.py`` slicing). When
   False, the radix tree still tracks hit statistics for scheduler
   routing, but no KV is stored and no compute is skipped.
+* **Cross-DP reads (pod-pooled prefix KV).** The payloads fed to
+  ``seed_prefill_cache`` need not come from the seeding DP's own radix
+  tree: with a :class:`~repro.serving.kv_cache.PodKVDirectory` wired
+  in, a DP that misses locally can pin another DP's cached prefix
+  (``PodKVDirectory.acquire`` → ``RemotePin``) and pull the stored
+  blocks through ``read_remote_kv`` — the UB global-shared-memory read
+  of ``xccl/pd_transfer.ub_read``, a one-sided copy that involves no
+  compute on the owner. The read returns fresh arrays bit-identical to
+  the owner's stored payloads, so a remote-hit-seeded prefill obeys the
+  same bit-identity clause as a local hit: equal to the cold chunked
+  prefill on final logits AND valid-region KV. The owner's blocks stay
+  pinned (refcount-locked, eviction-proof) from ``acquire`` until the
+  borrower releases the pin — on prefill completion or on any cancel
+  path (``DPGroup.drop_partial_prefill``), exactly once.
 
 The ``apply_placement`` contract — the EPLB data plane
 ------------------------------------------------------
@@ -248,6 +262,18 @@ class ExecutionBackend(abc.ABC):
         ``prefill_chunk`` input at ``offset == prefix_len``."""
         raise NotImplementedError(
             f"{type(self).__name__} does not support prefix-KV seeding")
+
+    def read_remote_kv(self, payloads: List[PyTree]) -> List[PyTree]:
+        """Pull another DP's stored block payloads over UB global shared
+        memory (the cross-DP read step of the pod-pooled prefix cache —
+        see the prefix-KV contract in the module docstring). The result
+        feeds ``seed_prefill_cache`` exactly like locally stored blocks
+        and must be bit-identical to the owner's payloads. The default
+        routes through ``xccl/pd_transfer.ub_read`` (one-sided copy;
+        non-array payloads pass through), which every prefix-KV backend
+        can use as-is."""
+        from repro.xccl.pd_transfer import ub_read
+        return [ub_read(p) for p in payloads]
 
     @abc.abstractmethod
     def write_slot(self, cache: PyTree, cache1: PyTree,

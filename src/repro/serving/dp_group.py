@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.serving.backend import ExecutionBackend
 from repro.serving.gc_control import ProactiveGC, pin_to_core
-from repro.serving.kv_cache import BlockAllocator, RadixTree
+from repro.serving.kv_cache import (BlockAllocator, PodKVDirectory,
+                                    RadixTree, RemotePin)
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import DPStatus
 from repro.serving.tokenizer import EOS, PAD, ByteTokenizer
@@ -62,7 +63,8 @@ class DPGroup:
                  max_batch: int = 4, max_len: int = 256,
                  n_kv_blocks: int = 512, block_size: int = 16,
                  n_cache_blocks: Optional[int] = None,
-                 gc_every: int = 200, pin_core: Optional[int] = None):
+                 gc_every: int = 200, pin_core: Optional[int] = None,
+                 pod_directory: Optional[PodKVDirectory] = None):
         self.dp_id = dp_id
         self.backend = backend
         self.max_batch = max_batch
@@ -82,6 +84,14 @@ class DPGroup:
         self._prefix_kv = bool(
             getattr(backend, "supports_prefix_kv", False)
             and backend.supports_chunked_prefill)
+        # pod-pooled prefix KV: publish this DP's cached blocks into the
+        # pod directory and seed from other DPs' blocks on a remote hit
+        # (UB global-shared-memory reads — see PodKVDirectory)
+        self.pod_dir = pod_directory if self._prefix_kv else None
+        if self.pod_dir is not None:
+            self.pod_dir.register(dp_id, self.prefix_cache)
+        self.n_remote_hits = 0
+        self.remote_hit_blocks = 0
         self.gc_ctl = ProactiveGC(gc_every)
         pin_to_core(pin_core)
 
@@ -118,6 +128,10 @@ class DPGroup:
         self._chunk_caches: Dict[int, PyTree] = {}
         # req_id → locked radix path while the request seeds from it
         self._chunk_locks: Dict[int, List[Any]] = {}
+        # req_id → remote pin on another DP's blocks while this request
+        # seeds from them over UB (released exactly once: completion or
+        # any cancel path pops it through _unlock_chunk)
+        self._chunk_pins: Dict[int, RemotePin] = {}
 
     # ------------------------------------------------------------------
     # output shortcutting worker
@@ -163,7 +177,23 @@ class DPGroup:
             req.prompt_tokens = toks
         m = self.prefix_cache.match_blocks(toks) if self._prefix_kv \
             else None
-        if m is not None and m.n_blocks > 0 and m.has_payloads:
+        local = m.n_tokens if (m is not None and m.n_blocks > 0
+                               and m.has_payloads) else 0
+        pin = self._acquire_remote(toks, local)
+        if pin is not None:
+            # pod-pooled remote hit: UB-read the owner's blocks and seed;
+            # the pin keeps the owner's path eviction-proof for the read
+            try:
+                payloads = self.backend.read_remote_kv(pin.payloads)
+                seeded = self.backend.seed_prefill_cache(
+                    payloads, pin.n_tokens, len(toks))
+                cache, logits = self.backend.prefill_chunk(
+                    seeded, toks[pin.n_tokens:], pin.n_tokens, len(toks))
+            finally:
+                self.pod_dir.release(pin)
+            req.prefix_hit_tokens = max(req.prefix_hit_tokens,
+                                        pin.n_tokens)
+        elif local > 0:
             self.prefix_cache.lock(m.nodes)
             try:
                 seeded = self.backend.seed_prefill_cache(
@@ -211,7 +241,27 @@ class DPGroup:
             self._drop_chunk_state(req)
             if self._prefix_kv:
                 m = self.prefix_cache.match_blocks(toks)
-                if m.n_blocks > 0 and m.has_payloads:
+                local = m.n_tokens if (m.n_blocks > 0
+                                       and m.has_payloads) else 0
+                pin = self._acquire_remote(toks, local)
+                if pin is not None:
+                    # pod-pooled remote hit: UB-read the owner's blocks
+                    # and seed from them; the pin stays held (owner path
+                    # eviction-proof) until the prefill completes or is
+                    # dropped — both release through _unlock_chunk
+                    self._chunk_pins[req.req_id] = pin
+                    payloads = self.backend.read_remote_kv(pin.payloads)
+                    self._chunk_caches[req.req_id] = \
+                        self.backend.seed_prefill_cache(
+                            payloads, pin.n_tokens, len(toks))
+                    req.prefix_hit_tokens = pin.n_tokens
+                    self.allocator.extend(req.req_id, pin.n_tokens)
+                    if pin.n_tokens >= work.end:
+                        req.prefill_pos = max(req.prefill_pos,
+                                              pin.n_tokens)
+                        return None
+                    start = pin.n_tokens
+                elif local > 0:
                     self.prefix_cache.lock(m.nodes)
                     self._chunk_locks[req.req_id] = m.nodes
                     self._chunk_caches[req.req_id] = \
@@ -247,10 +297,44 @@ class DPGroup:
         compute."""
         return self._chunk_caches.get(req.req_id)
 
+    def _acquire_remote(self, toks: List[int],
+                        local_tokens: int) -> Optional[RemotePin]:
+        """Pin the best pod-directory prefix STRICTLY longer than the
+        local hit (a remote read is only worth its UB traffic when it
+        skips compute a local seed would not). Returns a held pin — the
+        caller owns its exactly-once release — or None."""
+        if self.pod_dir is None:
+            return None
+        owner, n_blocks = self.pod_dir.match(toks, exclude=self.dp_id)
+        if owner is None or \
+                n_blocks * self.prefix_cache.block_size <= local_tokens:
+            return None
+        pin = self.pod_dir.acquire(owner, toks)
+        if pin is None:
+            return None
+        if pin.n_tokens <= local_tokens or not pin.has_payloads:
+            self.pod_dir.release(pin)
+            return None
+        self.n_remote_hits += 1
+        self.remote_hit_blocks += pin.n_blocks
+        return pin
+
+    @property
+    def pooled_hit_rate(self) -> float:
+        """Cache hit rate INCLUDING pod-directory remote hits — the
+        stat TE routing consumes, so warm-by-proxy DPs aren't
+        undercounted (local-only: `prefix_cache.hit_rate`)."""
+        c = self.prefix_cache
+        return min((c.hit_blocks + self.remote_hit_blocks)
+                   / max(c.query_blocks, 1), 1.0)
+
     def _unlock_chunk(self, req: Request) -> None:
         nodes = self._chunk_locks.pop(req.req_id, None)
         if nodes:
             self.prefix_cache.unlock(nodes)
+        pin = self._chunk_pins.pop(req.req_id, None)
+        if pin is not None:
+            self.pod_dir.release(pin)
 
     def _drop_chunk_state(self, req: Request) -> None:
         self._chunk_caches.pop(req.req_id, None)

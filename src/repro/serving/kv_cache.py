@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 PyTree = Any
 
@@ -198,6 +198,9 @@ class RadixTree:
         self.n_queries = 0
         self.query_blocks = 0
         self.hit_blocks = 0
+        # pod-level directory coherence (set by PodKVDirectory.register)
+        self.directory: Optional["PodKVDirectory"] = None
+        self.owner_id: Optional[int] = None
 
     # -- introspection ------------------------------------------------
 
@@ -367,6 +370,9 @@ class RadixTree:
         self._nodes[nid] = new
         self._tick += 1
         new.tick = self._tick
+        if self.directory is not None:
+            self.directory._publish(self.owner_id, new.hashes,
+                                    new.block_ids)
         return have
 
     def _ensure_blocks(self, want: int) -> int:
@@ -397,6 +403,8 @@ class RadixTree:
         assert node.ref == 0 and not node.children
         node.parent.children.pop(node.hashes[0], None)
         del self._nodes[node.node_id]
+        if self.directory is not None:
+            self.directory._retract(self.owner_id, node.hashes)
         if node.block_ids:
             return self.allocator.free(node.node_id)
         return 0
@@ -405,6 +413,169 @@ class RadixTree:
         for n in list(self._nodes.values()):
             n.ref = 0
         self.evict(1 << 60)  # leaves first; loop re-leafs parents
+
+
+@dataclasses.dataclass
+class RemotePin:
+    """Lock token for a cross-DP prefix reference.
+
+    Holds the owner's matched root path locked (through the owner tree's
+    refcounts) while a remote DP reads the stored KV over UB global
+    shared memory and seeds its partial-prefill cache from it.  Released
+    exactly once via `PodKVDirectory.release` — a second release raises
+    `DoubleFree`, mirroring the allocator's double-free guard."""
+    owner: int
+    nodes: List[RadixNode]
+    payloads: List[PyTree]
+    n_blocks: int
+    n_tokens: int
+    released: bool = False
+
+    @property
+    def has_payloads(self) -> bool:
+        return bool(self.payloads) and \
+            all(p is not None for p in self.payloads)
+
+
+class PodKVDirectory:
+    """Pod-level KV block directory over UB global shared memory.
+
+    CloudMatrix-Infer pools prefix KV pod-wide: any NPU can read any
+    cached prefix at microsecond latency over the UB plane, so a
+    multi-turn session that re-lands on a different DP seeds from the
+    previous DP's blocks instead of re-prefilling.  This directory is
+    the control-plane half of that: it maps *cumulative block hashes*
+    (`hash_blocks` keys — hash equality implies token-prefix equality)
+    to the set of owning DPs and their backing block ids, kept coherent
+    with per-DP insert/evict through publish/retract hooks wired by
+    `register`.
+
+    A remote reference pins the owner's blocks through the owner tree's
+    existing refcounted lock/unlock (`acquire` → `RemotePin` →
+    `release`): leaf-only eviction can therefore never remove a
+    remotely-pinned path, exactly as it cannot remove a locally locked
+    one.  The directory is keyed by hash rather than node id because
+    `RadixTree._split` re-homes blocks across node ids but never changes
+    a block's cumulative hash.
+    """
+
+    def __init__(self, block_size: int = 16):
+        self.block_size = block_size
+        self._trees: Dict[int, RadixTree] = {}
+        # cumulative block hash -> {owner id: backing block id}
+        self._entries: Dict[str, Dict[int, int]] = {}
+        self.n_remote_acquires = 0
+        self.n_releases = 0
+
+    def __len__(self) -> int:
+        """Number of distinct block hashes published pod-wide."""
+        return len(self._entries)
+
+    def register(self, owner: int, tree: RadixTree) -> None:
+        """Wire a per-DP tree into the directory: existing nodes are
+        published, and future insert/evict publish/retract through the
+        tree's coherence hooks."""
+        if owner in self._trees:
+            raise ValueError(f"owner {owner} already registered")
+        if tree.directory is not None:
+            raise ValueError("tree already registered with a directory")
+        tree.directory = self
+        tree.owner_id = owner
+        self._trees[owner] = tree
+        for node in tree._nodes.values():
+            self._publish(owner, node.hashes, node.block_ids)
+
+    # -- coherence hooks (called by RadixTree insert / _remove) -------
+
+    def _publish(self, owner: int, hashes: List[str],
+                 block_ids: List[int]) -> None:
+        ids = block_ids if len(block_ids) == len(hashes) else \
+            [-1] * len(hashes)
+        for h, b in zip(hashes, ids):
+            self._entries.setdefault(h, {})[owner] = b
+
+    def _retract(self, owner: int, hashes: List[str]) -> None:
+        for h in hashes:
+            owners = self._entries.get(h)
+            if owners is not None and owner in owners:
+                del owners[owner]
+                if not owners:
+                    del self._entries[h]
+
+    # -- lookup / remote pinning --------------------------------------
+
+    def match(self, tokens: List[int],
+              exclude: Optional[Any] = None) -> Tuple[Optional[int], int]:
+        """Longest published block-prefix of `tokens` held by a single
+        owner (the read must be a contiguous range from one DP's
+        blocks).  Returns `(owner, n_blocks)` — `(None, 0)` on a miss.
+        `exclude` drops owners from consideration: a single owner id or
+        a collection of them (a whole TE's DPs during routing).
+        Read-only and deterministic (ties break to the lowest owner id);
+        capped below `len(tokens)` like `RadixTree._match_cap`, so at
+        least one suffix token is always left to prefill."""
+        cap = max(len(tokens) - 1, 0) // self.block_size
+        hs = hash_blocks(tokens, self.block_size)[:cap]
+        return self._longest(hs, exclude)
+
+    def _longest(self, hs: List[str],
+                 exclude: Optional[Any]) -> Tuple[Optional[int], int]:
+        excl = (set() if exclude is None
+                else {exclude} if isinstance(exclude, int)
+                else set(exclude))
+        if not hs:
+            return None, 0
+        first = self._entries.get(hs[0])
+        if not first:
+            return None, 0
+        best_owner, best = None, 0
+        for owner in sorted(first):
+            if owner in excl:
+                continue
+            n = 0
+            while n < len(hs) and owner in self._entries.get(hs[n], ()):
+                n += 1
+            if n > best:
+                best_owner, best = owner, n
+        return best_owner, best
+
+    def match_fraction(self, tokens: List[int],
+                       exclude: Optional[Any] = None) -> float:
+        """Pod-wide cached block-prefix fraction (scheduler scoring).
+        Like ``RadixTree.match_fraction``, the read-only fraction is
+        UNCAPPED — raw coverage, not the acquirable block count."""
+        hs = hash_blocks(tokens, self.block_size)
+        if not hs:
+            return 0.0
+        _, n = self._longest(hs, exclude)
+        return n / len(hs)
+
+    def acquire(self, owner: int,
+                tokens: List[int]) -> Optional[RemotePin]:
+        """Pin the owner's longest cached prefix of `tokens` for a
+        cross-DP read: matches on the owner's tree (splitting edges so
+        the locked path covers the match exactly) and takes a refcount
+        on every node of the path.  Returns None when the owner no
+        longer caches any prefix (raced with eviction)."""
+        tree = self._trees.get(owner)
+        if tree is None:
+            return None
+        m = tree.match_blocks(tokens)
+        if m.n_blocks == 0:
+            return None
+        tree.lock(m.nodes)
+        self.n_remote_acquires += 1
+        return RemotePin(owner, m.nodes, m.payloads, m.n_blocks,
+                         m.n_tokens)
+
+    def release(self, pin: RemotePin) -> None:
+        """Drop a remote pin (exactly once; double-release raises)."""
+        if pin.released:
+            raise DoubleFree(
+                f"remote pin on owner {pin.owner} already released")
+        pin.released = True
+        self._trees[pin.owner].unlock(pin.nodes)
+        self.n_releases += 1
 
 
 # Backwards-compatible name: the RTC role is now radix-backed.

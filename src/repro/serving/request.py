@@ -62,6 +62,10 @@ class Request:
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
     prefill_te: Optional[int] = None
+    # session-migration marker (sim workload): this turn re-lands away
+    # from the TE holding its session prefix, so only a pod-pooled
+    # prefix cache can serve it without recompute
+    migrate: bool = False
     decode_te: Optional[int] = None
     dp_group: Optional[int] = None
     slot: Optional[int] = None

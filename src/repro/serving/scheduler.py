@@ -231,12 +231,29 @@ class DecodeLoadBalancer:
 # JE-level prefill TE selection (§5.1 step 1)
 # ---------------------------------------------------------------------------
 def pick_prefill_te(tes: Sequence[Dict], req: Request,
-                    long_threshold: int = 8192) -> int:
+                    long_threshold: int = 8192,
+                    pod_match_fn: Optional[
+                        Callable[[int, Request], Tuple[float, float]]]
+                    = None,
+                    remote_seed_cost: float = 0.0) -> int:
     """cache status + system load + request length. Long requests go to
     TEs marked long-capable (dedicated long-sequence resources, §7.2);
     TEs marked ``long_only`` form a DEDICATED long-context pool — short
     requests never land there, so long-prompt prefill chunks cannot
-    interfere with the pod's short-request serving (§7.2)."""
+    interfere with the pod's short-request serving (§7.2).
+
+    With a pod-pooled prefix cache, routing becomes cache-aware per
+    request: ``pod_match_fn(te_id, req)`` returns this request's
+    ``(local_hit_fraction, remote_hit_fraction)`` were it routed to that
+    TE — the fraction of the prompt the TE's own radix trees hold vs the
+    best prefix OTHER TEs publish in the pod directory. A local hit
+    skips compute outright; a remote hit skips the same compute minus
+    the UB read, discounted by ``remote_seed_cost`` (the fraction of the
+    skipped compute the read costs back, ``1 - prefix_remote_seed`` in
+    cost-model terms). Weighing both against plain recompute means a
+    session re-landing anywhere near its history still scores the warm
+    TE highest, but a locally-cold TE with pod coverage beats a fully
+    cold one instead of tying with it."""
     scored: List[Tuple[float, int]] = []
     is_long = req.prompt_len > long_threshold
     for te in tes:
@@ -248,6 +265,10 @@ def pick_prefill_te(tes: Sequence[Dict], req: Request,
                  - te.get("load", 0.0)
                  - 0.2 * abs(te.get("mean_len", 512) - req.prompt_len)
                  / max(req.prompt_len, 1))
+        if pod_match_fn is not None:
+            local, remote = pod_match_fn(te["te_id"], req)
+            discount = max(1.0 - remote_seed_cost, 0.0)
+            score += 2.0 * max(local, remote * discount)
         scored.append((score, te["te_id"]))
     if not scored:
         scored = [(-te.get("load", 0.0), te["te_id"]) for te in tes]

@@ -87,8 +87,19 @@ class TEShell:
             return s.healthy and self.dps[dp_idx].can_admit(req)
 
         def hit_rate(req: Request) -> float:
-            return max(d.prefix_cache.match_fraction(req.prompt_tokens)
-                       for d in self.dps)
+            # Pod-pooled prefix KV: a prefix cached on ANOTHER TE's DP is
+            # still a hit for admission ordering — the owner's blocks are
+            # UB-readable, so the request skips the same prefill work.
+            # The pod directory's view is a superset of the local one, so
+            # a plain max folds remote coverage in without double count.
+            local = max(d.prefix_cache.match_fraction(req.prompt_tokens)
+                        for d in self.dps)
+            pods = {d.pod_dir for d in self.dps
+                    if getattr(d, "pod_dir", None) is not None}
+            remote = max(
+                (p.match_fraction(req.prompt_tokens) for p in pods),
+                default=0.0)
+            return max(local, remote)
 
         return self.prefill_sched.schedule_step(
             hit_rate_fn=hit_rate, can_admit_fn=can_admit)

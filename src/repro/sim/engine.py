@@ -62,7 +62,7 @@ from repro.configs import get_config
 from repro.core.transformerless import plan_partition
 from repro.serving.dp_group import DPGroup
 from repro.serving.eplb import ExpertReconfigurator, ReconfigState
-from repro.serving.kv_cache import RadixTree
+from repro.serving.kv_cache import PodKVDirectory, RadixTree, RemotePin
 from repro.serving.reliability import HeartbeatPeer
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (ChunkWork, PrefillScheduler,
@@ -162,6 +162,18 @@ class SimConfig:
     # (and byte-identical traces for existing seeds).
     kv_link_fifo: bool = False
     n_kv_links_per_te: int = 1
+    # pod-pooled prefix KV over UB global shared memory: one
+    # PodKVDirectory spans every prefill TE's radix directory, so a
+    # prompt that misses locally but matches another TE's cached prefix
+    # seeds from it instead of recomputing — charged as a UB read
+    # through the KV link FIFOs plus the un-saved compute residue
+    # (cost model ``prefix_remote_seed``, calibratable via the
+    # ``prefix/remote_seed`` row). Default False preserves existing
+    # seeds byte-identically.
+    kv_pool: bool = False
+    # overrides the cost model's remote-seed save fraction (None keeps
+    # the default / calibrated ``prefix/remote_seed`` value)
+    kv_pool_remote_seed: Optional[float] = None
     # PD-colocated interference: map (non-dedicated) prefill streams
     # onto decode DP dies — a decode iteration overlapping a prefill
     # chunk on its die stretches by the cost model's contention factor.
@@ -283,6 +295,9 @@ class SuperPodSim:
         if sim_cfg.mtp_acceptance is not None:
             self.cost.mtp_acceptance = float(
                 np.clip(sim_cfg.mtp_acceptance, 0.0, 1.0))
+        if sim_cfg.kv_pool_remote_seed is not None:
+            self.cost.prefix_remote_seed = float(
+                np.clip(sim_cfg.kv_pool_remote_seed, 0.0, 1.0))
         self.loop = EventLoop()
 
         wl = wl_cfg or WorkloadConfig()
@@ -336,6 +351,17 @@ class SuperPodSim:
             chunk_tokens=sim_cfg.prefill_chunk_tokens,
             prefix_cache_blocks=sim_cfg.te_prefix_cache_blocks)
             for i in range(sim_cfg.n_prefill_tes)]
+        # pod-pooled prefix KV: one directory over every TE's radix
+        # directory, kept coherent via the trees' publish/retract hooks
+        self.pod_dir: Optional[PodKVDirectory] = None
+        if sim_cfg.kv_pool:
+            self.pod_dir = PodKVDirectory()
+            for te in self.tes:
+                self.pod_dir.register(te.te_id, te.prefix_dir)
+        # req_id → held RemotePin of a pod remote hit: taken at arrival
+        # (owner path eviction-proof from that moment), released when
+        # the seeding UB read is priced on the first executed chunk
+        self._remote_pins: Dict[int, RemotePin] = {}
         # PD-colocation map: non-dedicated prefill streams share decode
         # dies round-robin; dedicated long-context TEs run on their own
         # hardware (§7.2) and never contend with decode
@@ -399,8 +425,20 @@ class SuperPodSim:
     def _arrive(self, t: float, req: Request) -> None:
         self.metrics.on_arrival(self.loop.now, req)
         stats = [te.stats(self.loop.now) for te in self.tes]
-        te_id = pick_prefill_te(
-            stats, req, long_threshold=self.cfg.long_context_threshold)
+        if self.pod_dir is None:
+            te_id = pick_prefill_te(
+                stats, req, long_threshold=self.cfg.long_context_threshold)
+        else:
+            # cache-aware routing: weigh this request's local hit vs
+            # best cross-TE remote hit (discounted by the UB read's
+            # cost share) on every eligible TE
+            te_id = pick_prefill_te(
+                stats, req,
+                long_threshold=self.cfg.long_context_threshold,
+                pod_match_fn=self._pod_match,
+                remote_seed_cost=1.0 - self.cost.prefix_remote_seed)
+        if getattr(req, "migrate", False):
+            te_id = self._migrate_te(te_id, req)
         te = self.tes[te_id]
         te.mean_len = 0.9 * te.mean_len + 0.1 * req.prompt_len
         req.prefill_te = te_id
@@ -412,18 +450,59 @@ class SuperPodSim:
         # prefix — the scheduler then emits only suffix chunks, so the
         # skip-fraction directly scales the chunk event count
         m = te.prefix_dir.match_blocks(req.prompt_tokens)
-        if m.n_tokens > 0:
-            req.prefill_pos = m.n_tokens
-            req.prefix_hit_tokens = m.n_tokens
+        hit_tokens = m.n_tokens
+        if self.pod_dir is not None:
+            # pod directory: a longer prefix on ANOTHER TE beats the
+            # local match — pin the owner's path (eviction-proof until
+            # the UB read is priced in _stream_kick) and skip its chunks
+            owner, n_blocks = self.pod_dir.match(req.prompt_tokens,
+                                                 exclude=te_id)
+            if owner is not None and \
+                    n_blocks * te.prefix_dir.block_size > m.n_tokens:
+                pin = self.pod_dir.acquire(owner, req.prompt_tokens)
+                if pin is not None and pin.n_tokens > m.n_tokens:
+                    hit_tokens = pin.n_tokens
+                    self._remote_pins[req.req_id] = pin
+                    self.metrics.n_pod_remote_hits += 1
+                    self.metrics.n_pod_remote_hit_tokens += pin.n_tokens
+                elif pin is not None:
+                    self.pod_dir.release(pin)
+        if hit_tokens > 0:
+            req.prefill_pos = hit_tokens
+            req.prefix_hit_tokens = hit_tokens
             chunk = te.scheduler.chunk_tokens
             cold = -(-req.prompt_len // chunk)
-            warm = -(-(req.prompt_len - m.n_tokens) // chunk)
+            warm = -(-(req.prompt_len - hit_tokens) // chunk)
             self.metrics.n_prefill_chunks_skipped += cold - warm
-            self.metrics.n_prefix_hit_tokens += m.n_tokens
+            self.metrics.n_prefix_hit_tokens += hit_tokens
             self.metrics.n_prefix_hits += 1
+        # remote hits fold into the routing EWMA: a TE serving sessions
+        # through the pod directory is warm, not cold
         te.hit_ewma = (0.9 * te.hit_ewma
-                       + 0.1 * (m.n_tokens / max(req.prompt_len, 1)))
+                       + 0.1 * (hit_tokens / max(req.prompt_len, 1)))
         te.scheduler.submit(req)
+
+    def _pod_match(self, te_id: int, req: Request) -> Tuple[float, float]:
+        """(local, remote) hit fractions of `req` were it routed to
+        `te_id` — the per-request signal of cache-aware routing."""
+        local = self.tes[te_id].prefix_dir.match_fraction(
+            req.prompt_tokens)
+        remote = self.pod_dir.match_fraction(req.prompt_tokens,
+                                             exclude=te_id)
+        return local, remote
+
+    def _migrate_te(self, te_id: int, req: Request) -> int:
+        """Session-migration: the workload marked this turn as
+        re-landing away from its warm TE (session stickiness breaks on
+        scale-out, TE drain, front-end rebalancing — the event the
+        pod-pooled cache exists to absorb). Rotate to the next TE
+        eligible for this request's length class."""
+        is_long = req.prompt_len > self.cfg.long_context_threshold
+        ok = [t.te_id for t in self.tes
+              if (t.long_capable if is_long else not t.long_only)]
+        if te_id not in ok or len(ok) < 2:
+            return te_id
+        return ok[(ok.index(te_id) + 1) % len(ok)]
 
     def _done(self) -> bool:
         return (self._arrivals_scheduled
@@ -454,15 +533,36 @@ class SuperPodSim:
             n_dies=self.cfg.prefill_dies_per_stream)
         hit = work.req.prefix_hit_tokens
         if hit > 0 and work.start == hit:
-            # first executed chunk after a radix skip: seeding the cached
-            # prefix saves prefill_hit_skip of its cold compute; the
-            # residue (payload assembly, cache-buffer writes) is charged
-            # here (prefill_hit_skip=1.0 ⇒ seeding is free)
-            waste = 1.0 - self.cost.prefill_hit_skip
-            if waste > 0.0:
-                t += waste * self.cost.prefill_chunk_time(
-                    hit, context=0,
-                    n_dies=self.cfg.prefill_dies_per_stream)
+            pin = self._remote_pins.pop(work.req.req_id, None)
+            if pin is not None:
+                # pod-pooled remote hit: the seed reads the owner TE's
+                # blocks over UB global shared memory — charge the
+                # un-saved compute residue (prefix_remote_seed <
+                # prefill_hit_skip) plus the read's wire time through
+                # the KV link FIFOs (the owner's egress links), then
+                # drop the pin: the owner path was eviction-proof from
+                # arrival through the read
+                waste = 1.0 - self.cost.prefix_remote_seed
+                if waste > 0.0:
+                    t += waste * self.cost.prefill_chunk_time(
+                        hit, context=0,
+                        n_dies=self.cfg.prefill_dies_per_stream)
+                kv_t = self.cost.kv_transfer_time(hit)
+                read = self._kv_link_delay(pin.owner, stream, kv_t)
+                t += read
+                self.metrics.n_remote_seed_reads += 1
+                self.metrics.remote_seed_read_s += read
+                self.pod_dir.release(pin)
+            else:
+                # first executed chunk after a LOCAL radix skip: seeding
+                # the cached prefix saves prefill_hit_skip of its cold
+                # compute; the residue (payload assembly, cache-buffer
+                # writes) is charged here (1.0 ⇒ seeding is free)
+                waste = 1.0 - self.cost.prefill_hit_skip
+                if waste > 0.0:
+                    t += waste * self.cost.prefill_chunk_time(
+                        hit, context=0,
+                        n_dies=self.cfg.prefill_dies_per_stream)
         die = self._stream_die.get((te.te_id, stream))
         if die is not None:
             # decode iterations overlapping [now, now+t] on this die
@@ -499,10 +599,22 @@ class SuperPodSim:
         over ``n_kv_links_per_te`` links round-robin, and a transfer
         whose link is still draining an earlier ChunkStream waits for
         it. Returns wait + wire time (just the wire time when
-        ``kv_link_fifo`` is off — the legacy uncontended model)."""
+        ``kv_link_fifo`` is off — the legacy uncontended model).
+
+        In the ``moe_attn`` deployment KV does not leave the TE on a
+        private egress bundle — it lands in the shared attention pool
+        over the pool's ingress links, so EVERY TE's streams multiplex
+        over the same ``n_kv_links_per_te`` links (previously the knob
+        silently priced moe_attn exactly like colocated per-TE
+        egress)."""
         if not self.cfg.kv_link_fifo:
             return kv_t
-        link = (te_id, stream % max(self.cfg.n_kv_links_per_te, 1))
+        n_links = max(self.cfg.n_kv_links_per_te, 1)
+        if self.cfg.deployment == "moe_attn":
+            link = (-1, (te_id * self.cfg.prefill_streams_per_te
+                         + stream) % n_links)
+        else:
+            link = (te_id, stream % n_links)
         now = self.loop.now
         start = max(now, self._kv_link_free.get(link, 0.0))
         if start > now:

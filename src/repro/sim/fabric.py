@@ -136,6 +136,13 @@ class SuperPodCostModel:
         # assembly, cache-buffer writes — as measured by
         # bench_prefix_cache's ``prefill/hit_skip`` row)
         self.prefill_hit_skip = 1.0
+        # pod-pooled prefix cache: fraction of the replaced prefill
+        # compute a REMOTE hit saves (< prefill_hit_skip — the borrower
+        # still assembles/seeds, and the owner-side block gather is not
+        # free; the UB wire time itself is priced separately through
+        # kv_transfer_time on the owner's egress links). Measured by
+        # bench_prefix_cache's ``prefix/remote_seed`` row.
+        self.prefix_remote_seed = 0.85
         # §4.6 MTP speculative decoding: per-draft acceptance probability
         # (paper reports ~90% for the DeepSeek MTP head; the engine draws
         # per-iteration accepted lengths from it) and, when measured by
@@ -185,6 +192,11 @@ class SuperPodCostModel:
           cold prefill compute saved by seeding from the radix cache
           (DIMENSIONLESS in ``us_per_call``, clipped to [0, 1];
           ``bench_prefix_cache``) → replaces ``prefill_hit_skip``.
+        * ``prefix/remote_seed`` — measured fraction of the replaced
+          prefill compute a POD-POOLED remote hit saves (UB read +
+          assembly + seeding vs recompute; DIMENSIONLESS in
+          ``us_per_call``, clipped to [0, 1]; ``bench_prefix_cache``) →
+          replaces ``prefix_remote_seed``.
         * ``mtp/acceptance`` — measured per-draft acceptance probability
           of the MTP head (DIMENSIONLESS in ``us_per_call``, clipped to
           [0, 1]; ``bench_mtp``) → replaces ``mtp_acceptance``.
@@ -226,6 +238,9 @@ class SuperPodCostModel:
                     float(row["us_per_call"]), 1.0)
             elif name == "prefill/hit_skip":
                 self.prefill_hit_skip = float(
+                    np.clip(float(row["us_per_call"]), 0.0, 1.0))
+            elif name == "prefix/remote_seed":
+                self.prefix_remote_seed = float(
                     np.clip(float(row["us_per_call"]), 0.0, 1.0))
             elif name == "mtp/acceptance":
                 self.mtp_acceptance = float(

@@ -100,6 +100,13 @@ class MetricsCollector:
         self.n_prefill_chunks_skipped = 0
         self.n_kv_xfers_queued = 0
         self.kv_link_wait_s = 0.0
+        # pod-pooled prefix KV: requests seeded from ANOTHER TE's cached
+        # prefix via the pod directory, tokens they skipped, and the UB
+        # read time charged for pulling the owner's blocks
+        self.n_pod_remote_hits = 0
+        self.n_pod_remote_hit_tokens = 0
+        self.n_remote_seed_reads = 0
+        self.remote_seed_read_s = 0.0
         # moe_attn deployment: per-pool accounting over the MoE-layer
         # pipeline windows (seconds are virtual, per simulated DP; byte
         # counts are scaled to the whole pod by die_scale)
@@ -213,6 +220,11 @@ class MetricsCollector:
             "n_prefill_chunks_skipped": self.n_prefill_chunks_skipped,
             "n_kv_xfers_queued": self.n_kv_xfers_queued,
             "kv_link_wait_s": round(self.kv_link_wait_s, 9),
+            # pod-pooled prefix KV (zeros when kv_pool is off)
+            "n_pod_remote_hits": self.n_pod_remote_hits,
+            "n_pod_remote_hit_tokens": self.n_pod_remote_hit_tokens,
+            "n_remote_seed_reads": self.n_remote_seed_reads,
+            "remote_seed_read_s": round(self.remote_seed_read_s, 9),
             # per-pool view (moe_attn deployment; zeros when colocated):
             # utilizations are busy fractions of the MoE-layer pipeline
             # windows, bubble is the expert pool's idle share — the

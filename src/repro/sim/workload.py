@@ -56,6 +56,14 @@ class WorkloadConfig:
     session_extend_len: int = 192     # mean tokens appended per turn
     session_max_turns: int = 8
     max_sessions: int = 512
+    # session migration (the pod-pooled prefix-KV traffic): with this
+    # probability a CONTINUING session turn is tagged ``migrate`` — the
+    # router re-lands it away from its warm TE (front-end rebalancing /
+    # TE drain / scale-out breaking stickiness), so its prefix lives on
+    # a DIFFERENT TE's cache and only the pod directory can serve it.
+    # 0 draws nothing extra, so existing seeds reproduce byte-
+    # identically.
+    session_migration: float = 0.0
     expert_skew: float = 0.0          # Zipf exponent; 0 → uniform experts
     seed: int = 0
 
@@ -148,8 +156,12 @@ class WorkloadGen:
             self._sessions.pop(i)          # session retires
         else:
             self._sessions[i] = (toks, turns + 1)
-        return Request(prompt_tokens=toks, max_new_tokens=out,
-                       ignore_eos=True, temperature=0.0)
+        req = Request(prompt_tokens=toks, max_new_tokens=out,
+                      ignore_eos=True, temperature=0.0)
+        if (c.session_migration > 0
+                and self.rng.random() < c.session_migration):
+            req.migrate = True
+        return req
 
     # ------------------------------------------------------------------
     def expert_counts(self, n_tokens: int, top_k: int) -> np.ndarray:

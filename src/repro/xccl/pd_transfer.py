@@ -115,6 +115,33 @@ def assemble_chunks(chunks: Sequence[PyTree]) -> PyTree:
     return jax.tree_util.tree_map_with_path(cat, chunks[0], *chunks[1:])
 
 
+def ub_read(kv: PyTree) -> PyTree:
+    """One-sided UB global-shared-memory read of a remote DP's stored KV.
+
+    CloudMatrix-Infer's pod-pooled prefix cache lets any NPU read any
+    cached block over the UB plane without involving the owner's compute
+    stream; the owner only has to keep the blocks pinned (the
+    `PodKVDirectory.acquire` remote pin) for the duration of the read.
+    On a JAX deployment the analogue is materializing fresh arrays from
+    the owner's stored payloads — bit-identical to the source, so a
+    remote-hit-seeded prefill stays exactly equal to a local-hit or cold
+    one.  Non-array leaves (the cost-model backend's dict payloads) pass
+    through unchanged."""
+    import jax.numpy as jnp
+
+    def one(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return jnp.asarray(leaf)
+        return leaf
+    return jax.tree.map(one, kv)
+
+
+def ub_read_time(total_bytes: int, fabric: str = "ub") -> float:
+    """Modeled wire time of a pooled-KV read (same link model the
+    chunk-streamed PD transfer prices with)."""
+    return best_transfer_time(int(total_bytes), fabric)
+
+
 def chunk_stream_time(chunk_bytes: Sequence[int],
                       chunk_compute_s: Sequence[float],
                       fabric: str = "ub") -> Tuple[float, float]:

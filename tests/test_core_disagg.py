@@ -100,6 +100,102 @@ def test_decode_microbatch_pingpong_matches_unsplit(make_model):
     assert err < 0.02, f"mb=2 decode mismatch {err}"
 
 
+def test_measured_stage_times_calibrate_expert_op_overhead(make_model,
+                                                           tmp_path):
+    """Execution-side calibration seam: time the REAL split stage
+    programs of DisaggregatedMoEAttention (attention half, pack/A2E,
+    expert half, E2A/combine) into a measured :class:`StageTimes`,
+    schedule the DomainPipeline on it, and drive the measured per-visit
+    expert dispatch floor through ``disagg/expert_op_overhead`` so the
+    cost model's hand-set 40 µs constant has a measured cross-check."""
+    import json
+    import time as _time
+    from repro.core.moe_attn_disagg import (StageTimes, chunk_cap,
+                                            pack_dispatch,
+                                            unpack_combine)
+    from repro.sim.fabric import EXPERT_OP_OVERHEAD, SuperPodCostModel
+
+    cfg, m, params = make_model("deepseek-moe-16b")
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, 8), 0,
+                              cfg.vocab_size)
+    logits_p, cache = m.prefill(params, toks)
+
+    def pad(c, s):
+        return jnp.pad(c, [(0, st - ct)
+                           for ct, st in zip(c.shape, s.shape)])
+    cache = jax.tree.map(pad, cache,
+                         jax.tree.map(lambda s: s, m.cache_spec(B, 16)))
+    pos = jnp.full((B,), 8, jnp.int32)
+    tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    dis = DisaggregatedMoEAttention(m, params)
+
+    # replay ONE MoE layer exactly as decode_step drives it
+    kinds = cfg.layer_kinds()
+    layer_i = next(i for i, (_mix, k) in enumerate(kinds) if k == "moe")
+    params_layer, loc = dis._block_params(layer_i)
+    if loc[0] == "prefix":
+        stack = {k: v[None] for k, v in cache["prefix"][loc[1]].items()}
+        layer_idx = jnp.int32(0)
+    else:
+        stack = cache["blocks"][f"pos{loc[2]}"]
+        layer_idx = jnp.int32(loc[1])
+    x = m._embed(params, tok)
+    d = int(x.shape[-1])
+    e = cfg.moe
+
+    def t_med(fn, iters=5):
+        jax.block_until_ready(fn())          # compile/warm
+        samples = []
+        for _ in range(iters):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn())
+            samples.append(_time.perf_counter() - t0)
+        return float(np.median(samples))
+
+    t_attn = t_med(lambda: dis._attn(params_layer, x, stack, layer_idx,
+                                     pos, layer_i=layer_i))
+    _, hn, idx, w, _shared, _nref = dis._attn(params_layer, x, stack,
+                                              layer_idx,
+                                              layer_i=layer_i,
+                                              positions=pos)
+    cap = chunk_cap(B, e.num_experts, e.top_k, dis.capacity_factor)
+    t_a2e = t_med(lambda: pack_dispatch(hn, idx, w, e.num_experts, cap,
+                                        False, placement=None))
+    buckets, state = pack_dispatch(hn, idx, w, e.num_experts, cap,
+                                   False, placement=None)
+    t_moe = t_med(lambda: dis._experts(params_layer, buckets, None,
+                                       layer_i=layer_i))
+    out_b = dis._experts(params_layer, buckets, None, layer_i=layer_i)
+    t_e2a = t_med(lambda: unpack_combine(out_b, state, B, d, cap))
+    times = StageTimes(t_attn, t_a2e, t_moe, t_e2a)
+    assert min(t_attn, t_a2e, t_moe, t_e2a) > 0.0
+
+    # measured stage times drive the pipeline the simulator prices with
+    plan = plan_partition(get_config("deepseek-v3-671b"), 768)
+    rep = DomainPipeline(plan, times, 4).schedule()
+    assert rep.iteration_time >= 4 * (t_a2e + t_moe + t_e2a) * 0.99
+    assert 0.0 < rep.expert_busy <= 1.0
+    assert 0.0 < rep.attention_busy <= 1.0
+
+    # at B=2 the expert stage is dispatch-floor-dominated: its measured
+    # wall time IS the per-visit overhead analog of the hand-set 40 µs.
+    # Cross-check the constant sits within the (generous: jit dispatch
+    # on CPU vs NPU doorbells) band of the measurement, then feed the
+    # measurement through the calibration path the benchmarks use.
+    assert 1e-3 <= EXPERT_OP_OVERHEAD / t_moe <= 1e3, \
+        f"hand-set overhead {EXPERT_OP_OVERHEAD} vs measured {t_moe}"
+    rows = [{"name": "disagg/expert_op_overhead",
+             "us_per_call": t_moe * 1e6,
+             "derived": f"measured expert-half dispatch at B={B}"}]
+    p = tmp_path / "BENCH_stage_times.json"
+    p.write_text(json.dumps({"benchmark": "stage_times", "rows": rows}))
+    cal = SuperPodCostModel.from_calibration(
+        get_config("deepseek-v3-671b"), plan, str(p))
+    assert cal.expert_op_overhead == pytest.approx(t_moe, rel=1e-6)
+    assert cal.moe_attn_stage_times(96).t_moe >= cal.expert_op_overhead
+
+
 def test_partition_planner_matches_paper():
     cfg = get_config("deepseek-v3-671b")
     plan = plan_partition(cfg, 768)

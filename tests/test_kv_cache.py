@@ -429,6 +429,77 @@ class TestJAXBitIdentity:
             np.asarray, slice_kv_chunk(cache_s, 0, len(consumer)))
         jax.tree_util.tree_map(np.testing.assert_array_equal, kv_c, kv_s)
 
+    def test_remote_seeded_prefill_bit_identical(self, make_model):
+        """Pod-pooled cross-DP hit: pulling the owner's stored blocks
+        through ``read_remote_kv`` (the UB-read step) and seeding from
+        the PULLED payloads must stay bit-identical to cold prefill —
+        logits and the valid region of the final KV cache."""
+        import jax
+        from repro.serving.backend import JAXBackend
+        from repro.xccl.pd_transfer import slice_kv_chunk
+        _, m, params = make_model("internlm2-1.8b")
+        be = JAXBackend(m, params, max_len=256)
+        rng = np.random.default_rng(1)
+        prefix = rng.integers(2, 60, 48).tolist()          # 3 blocks
+        provider = prefix + rng.integers(2, 60, 10).tolist()
+        consumer = prefix + rng.integers(2, 60, 70).tolist()
+        cache_p, _ = be.prefill_chunk(None, provider, 0, len(provider))
+        payloads = [be.slice_prefill_kv(cache_p, provider, b * 16,
+                                        (b + 1) * 16) for b in range(3)]
+        pulled = be.read_remote_kv(payloads)
+        cache_c, log_c = be.prefill_chunk(None, consumer, 0,
+                                          len(consumer))
+        seeded = be.seed_prefill_cache(pulled, 48, len(consumer))
+        cache_s, log_s = be.prefill_chunk(seeded, consumer[48:], 48,
+                                          len(consumer))
+        np.testing.assert_array_equal(np.asarray(log_c),
+                                      np.asarray(log_s))
+        kv_c = jax.tree_util.tree_map(
+            np.asarray, slice_kv_chunk(cache_c, 0, len(consumer)))
+        kv_s = jax.tree_util.tree_map(
+            np.asarray, slice_kv_chunk(cache_s, 0, len(consumer)))
+        jax.tree_util.tree_map(np.testing.assert_array_equal, kv_c, kv_s)
+
+    def test_dp_group_cross_dp_hit_emits_identical_tokens(self,
+                                                          make_model):
+        """End-to-end through two DPGroups sharing a PodKVDirectory on
+        the real JAX backend: a prompt decoded greedily on a cold DP
+        and on a DP whose ONLY warm state is another DP's published
+        prefix must emit identical token sequences."""
+        from repro.serving.backend import JAXBackend
+        from repro.serving.dp_group import DPGroup
+        from repro.serving.kv_cache import PodKVDirectory
+        from repro.serving.request import Request
+        _, m, params = make_model("internlm2-1.8b")
+        toks = list(np.arange(2, 80) % 60)
+
+        def decode(dp):
+            r = Request(prompt_tokens=list(toks), max_new_tokens=8,
+                        ignore_eos=True)
+            cache1, logits = dp.run_prefill(r)
+            dp.admit(r, cache1, logits)
+            n0 = len(dp.finished)
+            while len(dp.finished) == n0:
+                dp.decode_step_all()
+            dp.drain()
+            return r, list(r.output_tokens)
+
+        pod = PodKVDirectory()
+        dp0 = DPGroup(0, JAXBackend(m, params, max_len=256), max_batch=2,
+                      max_len=256, pod_directory=pod)
+        dp1 = DPGroup(1, JAXBackend(m, params, max_len=256), max_batch=2,
+                      max_len=256, pod_directory=pod)
+        try:
+            _, cold_toks = decode(dp0)      # publishes the prefix
+            r2, warm_toks = decode(dp1)     # cross-DP pod hit
+            assert dp1.n_remote_hits == 1
+            assert r2.prefix_hit_tokens > 0
+            assert warm_toks == cold_toks
+            assert pod.n_releases == pod.n_remote_acquires
+        finally:
+            dp0.close()
+            dp1.close()
+
     def test_dp_group_hit_emits_identical_tokens(self, make_model):
         """End-to-end through DPGroup: the same prompt decoded greedily
         on a cold DP and on a warm DP (radix hit) must emit identical

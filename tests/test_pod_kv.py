@@ -1,0 +1,443 @@
+"""Pod-pooled prefix KV over UB global shared memory: property pack.
+
+Invariants of the PR-8 tentpole (a :class:`PodKVDirectory` above the
+per-DP radix trees, remote hits seeded over the UB read path):
+
+ * publish/retract coherence: every directory entry points at a hash
+   that is live on its owner tree, and disappears when the owner node
+   is evicted or the tree cleared,
+ * a remote pin locks the owner's path through the existing refcounts —
+   eviction of a remotely-pinned path is IMPOSSIBLE, no matter what the
+   owner tree does in between,
+ * releasing a pin is exactly-once (``DoubleFree`` on the second),
+   including the DPGroup cancel path for remote-seeded chunked
+   prefills,
+ * a remote-hit-seeded prefill is indistinguishable from a cold one on
+   the cost-model backend (the JAX bit-identity gate lives in the slow
+   tier of tests/test_kv_cache.py and in bench_prefix_cache's CI gate),
+ * ``pick_prefill_te`` cache-aware scoring: warm-local beats
+   warm-remote beats cold; ``remote_seed_cost`` discounts remote hits,
+ * sim: ``kv_pool=True`` produces remote hits under session migration
+   and still finishes everything; with the knobs off the trace is
+   byte-identical to defaults; the ``moe_attn`` deployment prices KV
+   egress over the SHARED attention-pool ingress links.
+
+Each randomized property runs two ways: under ``hypothesis`` when the
+package is installed (CI), and as a seeded local fuzz loop otherwise —
+the checks are shared functions, so both paths exercise identical code.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import (DoubleFree, PodKVDirectory, RadixTree)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # local container: fuzz fallback below
+    HAVE_HYPOTHESIS = False
+
+BS = 16
+
+
+def _pod(n_trees=2, capacity=64):
+    pod = PodKVDirectory(block_size=BS)
+    trees = [RadixTree(capacity_blocks=capacity, block_size=BS)
+             for _ in range(n_trees)]
+    for i, t in enumerate(trees):
+        pod.register(i, t)
+    return pod, trees
+
+
+# ---------------------------------------------------------------------------
+# publish / retract coherence
+# ---------------------------------------------------------------------------
+def _live_hashes(tree):
+    return {h for n in tree._nodes.values() for h in n.hashes}
+
+
+def _check_directory_coherent(pod, trees):
+    """Every directory entry's hash is live on every owner it names."""
+    for h, owners in pod._entries.items():
+        for owner in owners:
+            assert h in _live_hashes(trees[owner]), \
+                f"stale directory entry {h} for owner {owner}"
+
+
+def test_directory_publish_retract_coherence():
+    pod, (t0, t1) = _pod()
+    toks = list(np.arange(2, 100) % 60)          # 6 full blocks
+    t0.insert(toks)
+    assert len(pod) == 6
+    _check_directory_coherent(pod, (t0, t1))
+    # the OTHER owner sees the prefix through the pod directory
+    owner, n = pod.match(toks + [7] * 16, exclude=1)
+    assert owner == 0 and n == 6
+    assert pod.match_fraction(toks[:96], exclude=1) == pytest.approx(1.0)
+    # self-exclusion: owner 0 must not match its own blocks
+    assert pod.match(toks, exclude=0) == (None, 0)
+    # both owners hold the same prefix -> deterministic lowest-id pick
+    t1.insert(list(toks))
+    assert pod.match(toks + [7] * 16)[0] == 0
+    # eviction retracts; the surviving owner keeps its entries
+    t0.clear()
+    _check_directory_coherent(pod, (t0, t1))
+    assert pod.match(toks + [7] * 16, exclude=0) == (1, 6)
+    t1.clear()
+    assert len(pod) == 0
+
+
+def test_directory_match_caps_below_query():
+    """Like the radix tree itself, a pod match must leave at least one
+    suffix token to prefill (the chunk that produces first logits)."""
+    pod, (t0, _t1) = _pod()
+    toks = [5] * 96
+    t0.insert(toks)
+    owner, n = pod.match(list(toks), exclude=1)  # exact-length query
+    assert owner == 0 and n == 5                 # capped: 96//16 - 1
+    pin = pod.acquire(0, list(toks))
+    assert pin.n_tokens == 80
+    pod.release(pin)
+
+
+def test_register_rejects_duplicate_owner():
+    pod, _ = _pod()
+    with pytest.raises(ValueError):
+        pod.register(0, RadixTree(capacity_blocks=8, block_size=BS))
+
+
+# ---------------------------------------------------------------------------
+# remote pins: eviction of a pinned path is impossible (satellite 3)
+# ---------------------------------------------------------------------------
+def _check_pin_eviction(seed):
+    """Random insert/acquire/release/evict machine over three trees in
+    one pod directory. After every op: pinned paths survive on their
+    owner, the directory never names a dead hash, allocators conserve
+    blocks, refcounts stay non-negative."""
+    rng = np.random.default_rng(seed)
+    pod, trees = _pod(n_trees=3, capacity=48)
+    prompts = []
+    pins = []
+    for _ in range(rng.integers(25, 70)):
+        op = rng.integers(0, 4)
+        ti = int(rng.integers(len(trees)))
+        if op == 0 or not prompts:            # insert (maybe shared)
+            if prompts and rng.random() < 0.5:
+                base = prompts[rng.integers(len(prompts))]
+                toks = base[:rng.integers(0, len(base))] \
+                    + rng.integers(2, 60, rng.integers(1, 90)).tolist()
+            else:
+                toks = rng.integers(2, 60, rng.integers(1, 140)).tolist()
+            trees[ti].insert(toks)
+            prompts.append(toks)
+        elif op == 1:                          # remote acquire
+            q = prompts[rng.integers(len(prompts))] \
+                + rng.integers(2, 60, 8).tolist()
+            owner, n = pod.match(list(q), exclude=ti)
+            if owner is not None and n > 0:
+                pin = pod.acquire(owner, list(q))
+                if pin is not None:
+                    assert pin.owner == owner != ti
+                    assert pin.n_blocks > 0
+                    pins.append(pin)
+        elif op == 2 and pins:                 # release
+            pod.release(pins.pop(rng.integers(len(pins))))
+        else:                                  # evict under pressure
+            trees[ti].evict(int(rng.integers(1, 16)))
+        # invariants
+        for pin in pins:                       # pinned paths survive
+            for n in pin.nodes:
+                assert n.node_id in trees[pin.owner]._nodes, \
+                    "evicted a remotely-pinned path"
+        _check_directory_coherent(pod, trees)
+        for t in trees:
+            a = t.allocator
+            assert a.free_blocks + a.used_blocks == a.n_blocks
+            assert all(n.ref >= 0 for n in t._nodes.values())
+    # teardown: release everything exactly once, then the pool drains
+    for pin in pins:
+        pod.release(pin)
+        with pytest.raises(DoubleFree):
+            pod.release(pin)
+    assert pod.n_releases == pod.n_remote_acquires
+    for t in trees:
+        t.clear()
+        assert t.allocator.free_blocks == t.allocator.n_blocks
+    assert len(pod) == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_pin_blocks_eviction_hypothesis(seed):
+        _check_pin_eviction(seed)
+
+
+def test_pin_blocks_eviction_fuzz():
+    for seed in range(25):
+        _check_pin_eviction(seed)
+
+
+def test_release_exactly_once():
+    pod, (t0, _t1) = _pod()
+    toks = [3] * 80
+    t0.insert(toks)
+    pin = pod.acquire(0, toks + [9] * 16)
+    assert pin is not None and pin.n_blocks == 5
+    assert all(n.ref > 0 for n in pin.nodes)
+    pod.release(pin)
+    assert all(n.ref == 0 for n in pin.nodes)
+    with pytest.raises(DoubleFree):
+        pod.release(pin)
+    assert pod.n_remote_acquires == 1 and pod.n_releases == 1
+
+
+# ---------------------------------------------------------------------------
+# DP-group integration (cost-model backend, fast tier)
+# ---------------------------------------------------------------------------
+def _dp(dp_id=0, **kw):
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.serving.dp_group import DPGroup
+    from repro.sim.fabric import CostModelBackend, SuperPodCostModel
+    cfg = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    return DPGroup(dp_id, CostModelBackend(dp_id, cost), max_batch=2,
+                   max_len=4096, n_kv_blocks=512, **kw)
+
+
+def test_dp_group_remote_hit_matches_cold():
+    """dp1 has a COLD local cache but dp0 published the prefix: the
+    remote-seeded prefill must equal a cold DP's, the owner's locks
+    must drain, and the pooled hit-rate stat must see the remote hit."""
+    from repro.serving.request import Request
+    pod = PodKVDirectory(block_size=BS)
+    dp0 = _dp(0, pod_directory=pod)
+    dp1 = _dp(1, pod_directory=pod)
+    cold = _dp(9)
+    try:
+        toks = list(np.arange(2, 102) % 60)
+        dp0.run_prefill(Request(prompt_tokens=list(toks)))
+        q = toks + [7] * 9
+        r = Request(prompt_tokens=list(q))
+        _, logits = dp1.run_prefill(r)
+        assert dp1.n_remote_hits == 1 and dp1.remote_hit_blocks == 6
+        assert r.prefix_hit_tokens == 96
+        _, ref = cold.run_prefill(Request(prompt_tokens=list(q)))
+        np.testing.assert_array_equal(np.asarray(logits), ref)
+        # owner locks drained; pin lifecycle closed exactly once
+        assert all(n.ref == 0 for n in dp0.prefix_cache._nodes.values())
+        assert pod.n_releases == pod.n_remote_acquires == 1
+        # satellite 1: the remote hit counts toward the routed stat
+        assert dp1.pooled_hit_rate > 0.0
+        assert dp1.prefix_cache.hit_rate == 0.0  # local-only stat: cold
+    finally:
+        dp0.close()
+        dp1.close()
+        cold.close()
+
+
+def test_dp_group_prefers_local_hit_over_remote():
+    """When the local tree already holds the longer prefix, no pod
+    acquire happens (remote must BEAT local coverage to be worth it)."""
+    from repro.serving.request import Request
+    pod = PodKVDirectory(block_size=BS)
+    dp0 = _dp(0, pod_directory=pod)
+    dp1 = _dp(1, pod_directory=pod)
+    try:
+        toks = list(np.arange(2, 102) % 60)
+        dp0.run_prefill(Request(prompt_tokens=toks[:50]))   # 3 blocks
+        dp1.run_prefill(Request(prompt_tokens=list(toks)))  # 6 blocks
+        hits0 = dp1.n_remote_hits   # the warm-up itself may remote-hit
+        r = Request(prompt_tokens=toks + [7] * 9)
+        dp1.run_prefill(r)
+        assert r.prefix_hit_tokens == 96
+        assert dp1.n_remote_hits == hits0, \
+            "local hit covers more: must not pull remote blocks"
+        assert pod.n_releases == pod.n_remote_acquires
+    finally:
+        dp0.close()
+        dp1.close()
+
+
+def test_dp_group_cancel_remote_seeded_chunk_releases_once():
+    """Cancelling a chunked prefill whose first chunk was remote-seeded
+    releases the owner's blocks exactly once (satellite 3 cancel path:
+    the pin rides ``_chunk_pins`` and pops with the chunk state)."""
+    from repro.serving.request import Request
+    from repro.serving.scheduler import ChunkWork
+    pod = PodKVDirectory(block_size=BS)
+    dp0 = _dp(0, pod_directory=pod)
+    dp1 = _dp(1, pod_directory=pod)
+    try:
+        base = list(np.arange(2, 98) % 60)       # 6 blocks on dp0
+        dp0.run_prefill_chunk(ChunkWork(
+            Request(prompt_tokens=list(base)), 0, len(base)))
+        req = Request(prompt_tokens=base + [7] * 64)
+        out = dp1.run_prefill_chunk(ChunkWork(req, 0, 64))
+        assert out is None                       # chunk fully cached
+        assert req.prefill_pos == 96             # jumped past the seed
+        assert dp1.n_remote_hits == 1
+        assert req.req_id in dp1._chunk_pins
+        assert any(n.ref > 0 for n in dp0.prefix_cache._nodes.values())
+        dp1.drop_partial_prefill(req)            # cancellation
+        assert req.req_id not in dp1._chunk_pins
+        assert all(n.ref == 0 for n in dp0.prefix_cache._nodes.values())
+        assert pod.n_releases == pod.n_remote_acquires == 1
+        dp1.drop_partial_prefill(req)            # idempotent: no raise
+        assert pod.n_releases == 1
+    finally:
+        dp0.close()
+        dp1.close()
+
+
+def test_dp_group_remote_seeded_chunked_prefill_completes():
+    """The non-cancelled path: finish the suffix chunk after a remote
+    seed and check the pin released and logits match a cold DP."""
+    from repro.serving.request import Request
+    from repro.serving.scheduler import ChunkWork
+    pod = PodKVDirectory(block_size=BS)
+    dp0 = _dp(0, pod_directory=pod)
+    dp1 = _dp(1, pod_directory=pod)
+    cold = _dp(9)
+    try:
+        base = list(np.arange(2, 98) % 60)
+        dp0.run_prefill_chunk(ChunkWork(
+            Request(prompt_tokens=list(base)), 0, len(base)))
+        req = Request(prompt_tokens=base + [7] * 32)
+        assert dp1.run_prefill_chunk(ChunkWork(req, 0, 64)) is None
+        done = dp1.run_prefill_chunk(ChunkWork(req, 96, 32))
+        assert done is not None
+        _, logits = done
+        _, ref = cold.run_prefill(
+            Request(prompt_tokens=list(req.prompt_tokens)))
+        np.testing.assert_array_equal(np.asarray(logits), ref)
+        assert pod.n_releases == pod.n_remote_acquires == 1
+        assert all(n.ref == 0 for n in dp0.prefix_cache._nodes.values())
+    finally:
+        dp0.close()
+        dp1.close()
+        cold.close()
+
+
+# ---------------------------------------------------------------------------
+# cache-aware routing
+# ---------------------------------------------------------------------------
+def test_pick_prefill_te_cache_aware_scoring():
+    from repro.serving.request import Request
+    from repro.serving.scheduler import pick_prefill_te
+    req = Request(prompt_tokens=[5] * 512)
+    tes = [{"te_id": 0, "load": 0.1, "mean_len": 512},
+           {"te_id": 1, "load": 0.1, "mean_len": 512}]
+    frac = {0: (0.0, 0.0), 1: (0.0, 0.9)}
+    # remote coverage on te1 beats a fully cold te0
+    assert pick_prefill_te(tes, req, pod_match_fn=lambda t, r: frac[t],
+                           remote_seed_cost=0.15) == 1
+    # a local hit outranks the same coverage held remotely
+    frac = {0: (0.9, 0.0), 1: (0.0, 0.9)}
+    assert pick_prefill_te(tes, req, pod_match_fn=lambda t, r: frac[t],
+                           remote_seed_cost=0.15) == 0
+    # remote_seed_cost=1 makes remote coverage worthless: load decides
+    frac = {0: (0.0, 0.0), 1: (0.0, 1.0)}
+    tes[1]["load"] = 0.5
+    assert pick_prefill_te(tes, req, pod_match_fn=lambda t, r: frac[t],
+                           remote_seed_cost=1.0) == 0
+    # without a pod_match_fn the legacy signature is untouched
+    assert pick_prefill_te(tes, req) == 0
+
+
+def test_te_shell_hit_rate_sees_pod_coverage():
+    """The chunk scheduler's admission ordering must treat pod-remote
+    coverage as a hit: a TE whose own DPs are cold still reports the
+    directory's fraction for a migrated session."""
+    from repro.serving.request import Request
+    from repro.serving.te_shell import TEShell
+    pod = PodKVDirectory(block_size=BS)
+    dp0 = _dp(0, pod_directory=pod)   # "other TE": owns the prefix
+    dp1 = _dp(1, pod_directory=pod)   # this shell's only DP: cold
+    try:
+        toks = list(np.arange(2, 102) % 60)
+        dp0.run_prefill(Request(prompt_tokens=list(toks)))
+        shell = TEShell([dp1])
+        warm = Request(prompt_tokens=toks + [7] * 9)
+        cold = Request(prompt_tokens=list(np.arange(60, 170) % 251))
+        shell.submit_prefill(cold)
+        shell.submit_prefill(warm)
+        batches = shell.schedule_prefill_chunks()
+        first = [w.req.req_id for batch in batches for w in batch]
+        # pod coverage ranks the migrated session ahead of the cold one
+        assert first.index(warm.req_id) < first.index(cold.req_id)
+    finally:
+        dp0.close()
+        dp1.close()
+
+
+# ---------------------------------------------------------------------------
+# simulator: pooled pricing, byte-identity, moe_attn shared links
+# ---------------------------------------------------------------------------
+def _sim(**kw):
+    from repro.sim import SimConfig, SuperPodSim, WorkloadConfig
+    wl_keys = {"arrival_rate", "duration_s", "seed", "prefix_share",
+               "session_migration", "session_extend_len", "mean_output"}
+    wl = {k: kw.pop(k) for k in list(kw) if k in wl_keys}
+    return SuperPodSim(
+        SimConfig(arch="deepseek-v3-671b", n_sim_dps=4,
+                  eplb_interval_s=2.0, n_prefill_tes=2, **kw),
+        WorkloadConfig(**wl))
+
+
+def test_sim_kv_pool_remote_hits_under_migration():
+    wl = dict(arrival_rate=40, duration_s=0.6, seed=5, prefix_share=0.5,
+              session_migration=0.5)
+    s = _sim(kv_pool=True, **wl).run().summary
+    assert s["n_finished"] == s["n_requests"]
+    assert s["n_pod_remote_hits"] > 0
+    assert s["n_pod_remote_hit_tokens"] > 0
+    assert s["n_remote_seed_reads"] == s["n_pod_remote_hits"]
+    assert s["remote_seed_read_s"] > 0.0
+    off = _sim(**wl).run().summary
+    assert off["n_pod_remote_hits"] == 0
+    assert off["remote_seed_read_s"] == 0.0
+
+
+def test_sim_kv_pool_off_is_byte_identical_to_defaults():
+    wl = dict(arrival_rate=40, duration_s=0.5, seed=3, prefix_share=0.4)
+    a = _sim(**wl).run()
+    b = _sim(kv_pool=False, kv_pool_remote_seed=None,
+             session_migration=0.0, **wl).run()
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json() == b.to_json()
+
+
+def test_sim_kv_pool_remote_seed_knob_overrides_cost_model():
+    sim = _sim(kv_pool=True, kv_pool_remote_seed=0.42, arrival_rate=20,
+               duration_s=0.2, seed=1)
+    assert sim.cost.prefix_remote_seed == pytest.approx(0.42)
+    sim2 = _sim(kv_pool=True, arrival_rate=20, duration_s=0.2, seed=1)
+    assert sim2.cost.prefix_remote_seed == pytest.approx(0.85)
+
+
+def test_moe_attn_kv_links_are_pod_shared():
+    """Satellite 2: in the moe_attn deployment KV lands in the shared
+    attention pool, so DIFFERENT TEs' transfers queue on the same
+    ingress links (previously each TE got a phantom private bundle)."""
+    kw = dict(arrival_rate=20, duration_s=0.2, seed=1,
+              kv_link_fifo=True, n_kv_links_per_te=1)
+    sim = _sim(deployment="moe_attn", **dict(kw))
+    assert sim._kv_link_delay(0, 0, 1e-3) == pytest.approx(1e-3)
+    # other TE, same pool: must wait for the first transfer to drain
+    assert sim._kv_link_delay(1, 0, 1e-3) == pytest.approx(2e-3)
+    assert sim.metrics.n_kv_xfers_queued == 1
+    colo = _sim(**dict(kw))
+    assert colo._kv_link_delay(0, 0, 1e-3) == pytest.approx(1e-3)
+    # colocated: private per-TE egress, no cross-TE contention
+    assert colo._kv_link_delay(1, 0, 1e-3) == pytest.approx(1e-3)
+    assert colo.metrics.n_kv_xfers_queued == 0
+
+
+def test_moe_attn_pooled_run_finishes():
+    s = _sim(deployment="moe_attn", kv_link_fifo=True, kv_pool=True,
+             arrival_rate=120, duration_s=0.5, seed=3, prefix_share=0.6,
+             session_migration=0.6).run().summary
+    assert s["n_finished"] == s["n_requests"]
+    assert s["n_pod_remote_hits"] > 0

@@ -131,6 +131,8 @@ def test_cost_model_from_calibration(tmp_path):
          "derived": ""},
         {"name": "prefill/hit_skip", "us_per_call": 0.85,
          "derived": "dimensionless skip factor"},
+        {"name": "prefix/remote_seed", "us_per_call": 0.7,
+         "derived": "dimensionless skip factor"},
     ]
     p = tmp_path / "BENCH_dispatch_combine.json"
     p.write_text(json.dumps({"benchmark": "dispatch_combine",
@@ -141,11 +143,15 @@ def test_cost_model_from_calibration(tmp_path):
     assert cal.iter_overhead == pytest.approx(500e-6)
     # measured radix seed residue (dimensionless, clipped to [0, 1])
     assert cal.prefill_hit_skip == pytest.approx(0.85)
+    # measured pod-pooled remote-seed residue (same clipping rules)
+    assert cal.prefix_remote_seed == pytest.approx(0.7)
+    rows[-2]["us_per_call"] = 7.0
     rows[-1]["us_per_call"] = 7.0
     p.write_text(json.dumps({"benchmark": "dispatch_combine",
                              "rows": rows}))
-    assert SuperPodCostModel.from_calibration(
-        cfg, plan, str(p)).prefill_hit_skip == 1.0
+    clipped = SuperPodCostModel.from_calibration(cfg, plan, str(p))
+    assert clipped.prefill_hit_skip == 1.0
+    assert clipped.prefix_remote_seed == 1.0
     # the measured curve is interpolated exactly at the sampled points
     assert cal._comm_times(8) == pytest.approx((100e-6, 150e-6))
     assert cal._comm_times(96) == pytest.approx((300e-6, 400e-6))
