@@ -1,0 +1,163 @@
+"""Two-SuperPod scale-out sweep — pod-aware topology over RoCE.
+
+Drives the deterministic simulator across a heterogeneous two-pod
+deployment (910C decode pod + 910B-class prefill pod, the §6 scale-out
+shape) and emits:
+
+  * the fabric-pricing gate: a cross-pod KV transfer (RoCE) must be
+    priced STRICTLY slower than the same transfer intra-pod (UB) — by
+    at least ~5x at bulk size. The un-fixed ``n_links`` pricing bug
+    (every fabric silently billed at UB's 8-link aggregate) fails this
+    gate, which is why CI runs it.
+  * a cross-pod KV-share sweep: prefill-TE placements from all-local
+    (every TE in the decode pod) to all-remote (every TE across the
+    RoCE seam), with TTFT/TPOT and cross-pod wire time per point. TTFT
+    must degrade monotonically in spirit: the all-remote point must be
+    strictly slower than the all-local one.
+  * a pod-failover smoke: the prefill pod dies mid-run; every request
+    must still finish, rerouted onto the surviving pod.
+  * a single-pod degeneracy check: ``n_pods=1`` must report zero
+    cross-pod activity (the byte-identity gate itself lives in
+    ``tests/test_sim.py``).
+
+``--smoke`` shrinks the workload for CI; ``--json PATH`` dumps the
+emitted rows (same seed => byte-identical file).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_two_pod [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, write_json
+from repro.configs import get_config
+from repro.core.transformerless import plan_partition
+from repro.sim import (FaultPlan, SimConfig, SuperPodCostModel,
+                       SuperPodSim, WorkloadConfig)
+from repro.sim.fabric import FabricModel
+from repro.xccl.topology import PodTopology
+
+ARCH = "deepseek-v3-671b"
+TOTAL_DIES = 768
+# KV payload for the pricing gate: a 4k-token context's worth of KV
+# across all layers lands in the tens-of-MB bulk regime where the
+# n_links aggregation dominates (setup latencies are noise there).
+GATE_TOKENS = 4096
+MIN_CROSS_POD_RATIO = 5.0
+
+
+def _mk(sim_kw: dict, wl_kw: dict, faults=None) -> SuperPodSim:
+    return SuperPodSim(SimConfig(arch=ARCH, total_dies=TOTAL_DIES,
+                                 **sim_kw),
+                       WorkloadConfig(**wl_kw), faults)
+
+
+def _pricing_gate() -> None:
+    """Cross-pod KV (RoCE) must be priced >= ~5x intra-pod (UB)."""
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, TOTAL_DIES)
+    fab = FabricModel(topology=PodTopology.two_pod())
+    cost = SuperPodCostModel(cfg, plan, fabric=fab)
+    t_intra = cost.kv_transfer_time(GATE_TOKENS, src_pod=0, dst_pod=0)
+    t_cross = cost.kv_transfer_time(GATE_TOKENS, src_pod=1, dst_pod=0)
+    ratio = t_cross / t_intra
+    emit("two_pod/kv_price/intra_ub", t_intra * 1e6,
+         f"{GATE_TOKENS} tokens")
+    emit("two_pod/kv_price/cross_roce", t_cross * 1e6,
+         f"ratio={ratio:.2f}x vs intra")
+    emit("two_pod/kv_price/verdict", 0.0,
+         "PASS" if ratio >= MIN_CROSS_POD_RATIO
+         else f"FAIL: cross-pod only {ratio:.2f}x intra-pod")
+    if ratio < MIN_CROSS_POD_RATIO:
+        raise RuntimeError(
+            f"cross-pod KV priced {ratio:.2f}x intra-pod "
+            f"(want >= {MIN_CROSS_POD_RATIO}x) — the RoCE fabric is "
+            f"being billed at UB-aggregate rates (n_links bug)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI")
+    ap.add_argument("--json", default=None,
+                    help="write emitted rows JSON here")
+    ap.add_argument("--seed", type=int, default=7)
+    args, _ = ap.parse_known_args(argv)
+
+    # -- 0. fabric-pricing gate (fails on the un-fixed n_links bug) ----
+    _pricing_gate()
+
+    if args.smoke:
+        sim_kw = dict(n_sim_dps=4, eplb_interval_s=0.5)
+        wl_kw = dict(arrival_rate=50.0, duration_s=0.6, seed=args.seed)
+    else:
+        sim_kw = dict(n_sim_dps=8, eplb_interval_s=0.5)
+        wl_kw = dict(arrival_rate=100.0, duration_s=1.5, seed=args.seed)
+    two_pod = dict(n_pods=2, n_prefill_tes=2, kv_link_fifo=True)
+
+    # -- 1. single-pod degeneracy: no cross-pod activity ----------------
+    base = _mk(sim_kw, wl_kw).run().summary
+    emit("two_pod/single_pod/ttft_mean", base["ttft_mean_s"] * 1e6,
+         f"{base['n_finished']}/{base['n_requests']} done "
+         f"xpod_xfers={base['n_cross_pod_kv_xfers']}")
+    if base["n_cross_pod_kv_xfers"] or base["n_pod_failovers"]:
+        raise RuntimeError("n_pods=1 run reported cross-pod activity")
+
+    # -- 2. cross-pod KV-share sweep: all-local -> all-remote ----------
+    # Decode always lives in pod 0 (910C); prefill TEs move across the
+    # RoCE seam into the 910B pod one at a time. The remote share is
+    # the fraction of TEs whose final KV flush crosses pods.
+    ttft_by_share = {}
+    for share, placement in ((0.0, (0, 0)), (0.5, (0, 1)),
+                             (1.0, (1, 1))):
+        s = _mk({**sim_kw, **two_pod, "pod_of_te": placement},
+                wl_kw).run().summary
+        ttft_by_share[share] = s["ttft_mean_s"]
+        emit(f"two_pod/sweep/remote{int(share * 100):03d}",
+             s["ttft_mean_s"] * 1e6,
+             f"tpot={s['tpot_mean_s'] * 1e6:.0f}us "
+             f"xpod_xfers={s['n_cross_pod_kv_xfers']} "
+             f"xpod_wire={s['cross_pod_kv_s'] * 1e3:.2f}ms "
+             f"{s['n_finished']}/{s['n_requests']} done")
+        if s["n_finished"] != s["n_requests"]:
+            raise RuntimeError(
+                f"two-pod run (share={share}) dropped requests")
+        if share == 1.0 and s["n_cross_pod_kv_xfers"] == 0:
+            raise RuntimeError(
+                "all-remote placement produced no cross-pod KV "
+                "transfers")
+    slowdown = ttft_by_share[1.0] / max(ttft_by_share[0.0], 1e-12)
+    emit("two_pod/sweep/verdict", 0.0,
+         f"PASS all-remote/all-local ttft={slowdown:.2f}x"
+         if ttft_by_share[1.0] > ttft_by_share[0.0]
+         else f"FAIL: remote prefill not slower ({slowdown:.2f}x)")
+    if ttft_by_share[1.0] <= ttft_by_share[0.0]:
+        raise RuntimeError(
+            "all-remote prefill TTFT not slower than all-local — "
+            "cross-pod KV is not being priced over RoCE")
+
+    # -- 3. pod-failover smoke: prefill pod dies mid-run ---------------
+    faults = FaultPlan(dead_pod_id=1,
+                       dead_pod_at=wl_kw["duration_s"] * 0.3)
+    s = _mk({**sim_kw, **two_pod, "pod_of_te": (0, 1)}, wl_kw,
+            faults).run().summary
+    emit("two_pod/failover/ttft_mean", s["ttft_mean_s"] * 1e6,
+         f"{s['n_finished']}/{s['n_requests']} done "
+         f"failovers={s['n_pod_failovers']} "
+         f"reroutes={s['n_pod_reroutes']}")
+    ok = (s["n_finished"] == s["n_requests"]
+          and s["n_pod_failovers"] == 1 and s["n_pod_reroutes"] > 0)
+    emit("two_pod/failover/verdict", 0.0,
+         "PASS" if ok else "FAIL: pod failover did not recover")
+    if not ok:
+        raise RuntimeError(
+            f"pod failover: {s['n_finished']}/{s['n_requests']} "
+            f"finished, {s['n_pod_failovers']} failovers, "
+            f"{s['n_pod_reroutes']} reroutes")
+
+    if args.json:
+        write_json("two_pod", args.json)
+
+
+if __name__ == "__main__":
+    main()

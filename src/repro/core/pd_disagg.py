@@ -45,6 +45,7 @@ from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (DecodeLoadBalancer, PrefillScheduler,
                                      pick_prefill_te)
 from repro.serving.tokenizer import ByteTokenizer
+from repro.xccl.topology import PodTopology
 
 PyTree = Any
 
@@ -91,6 +92,16 @@ class DecodeTE:
 class DisaggregatedPD:
     """M prefill TEs × N decode TEs with full-mesh DistFlow connectivity."""
 
+    @staticmethod
+    def _pod_list(pods: Optional[Sequence[int]], n: int,
+                  name: str) -> List[int]:
+        if pods is None:
+            return [0] * n
+        out = [int(p) for p in pods]
+        if len(out) != n:
+            raise ValueError(f"{name} has {len(out)} entries for {n} TEs")
+        return out
+
     def __init__(self, cfg: ModelConfig, params: Optional[PyTree] = None,
                  *, n_prefill_te: int = 2, n_decode_te: int = 1,
                  dp_per_te: int = 2, max_batch: int = 2,
@@ -98,9 +109,31 @@ class DisaggregatedPD:
                  prefill_fabrics: Optional[Sequence[str]] = None,
                  seed: int = 0, token_budget: int = 8192,
                  chunk_tokens: Optional[int] = None, mtp_k: int = 0,
-                 kv_pool: bool = False):
+                 kv_pool: bool = False,
+                 topology: Optional["PodTopology"] = None,
+                 pod_of_prefill_te: Optional[Sequence[int]] = None,
+                 pod_of_decode_te: Optional[Sequence[int]] = None):
+        """``topology`` replaces the flat ``prefill_fabrics`` list: with
+        a :class:`~repro.xccl.topology.PodTopology` plus per-TE pod
+        placements, each (prefill TE, decode TE) DistFlow pair gets the
+        fabric of ITS pod pair — intra-pod UB, cross-pod RoCE — instead
+        of one fabric per prefill TE regardless of destination (the
+        §7.2 heterogeneous two-pod shape needs per-pair selection: a
+        910B prefill TE reaches its own pod's decode over UB but the
+        910C pod over RoCE). Pod placements default to pod 0; passing
+        both ``topology`` and ``prefill_fabrics`` is an error."""
         self.cfg = cfg
         self.max_len = max_len
+        if topology is not None and prefill_fabrics is not None:
+            raise ValueError(
+                "pass either topology (per-pair fabric from pod "
+                "placement) or prefill_fabrics (flat per-TE list), "
+                "not both")
+        self.topology = topology
+        self._prefill_pod = self._pod_list(
+            pod_of_prefill_te, n_prefill_te, "pod_of_prefill_te")
+        self._decode_pod = self._pod_list(
+            pod_of_decode_te, n_decode_te, "pod_of_decode_te")
         ctx = ctx or make_smoke_ctx()
         self.model = build_model(cfg, ctx)
         self.params = (params if params is not None
@@ -111,7 +144,14 @@ class DisaggregatedPD:
         # prefill DP across ALL prefill TEs, so a session re-landing on
         # another TE seeds over UB instead of re-prefilling
         self.pod_dir = PodKVDirectory() if kv_pool else None
-        fabrics = list(prefill_fabrics or ["ub"] * n_prefill_te)
+        if topology is not None:
+            # the TE-level fabric (routing heuristics, stats) is the
+            # link toward the FIRST decode TE's pod; each DistFlow pair
+            # below still gets its own per-pair link
+            d0 = self._decode_pod[0] if self._decode_pod else 0
+            fabrics = [topology.link(p, d0) for p in self._prefill_pod]
+        else:
+            fabrics = list(prefill_fabrics or ["ub"] * n_prefill_te)
         self.prefill_tes = [
             PrefillTE(
                 te_id=i,
@@ -144,12 +184,20 @@ class DisaggregatedPD:
                 balancer=DecodeLoadBalancer())
             for i in range(n_decode_te)
         ]
-        # isolated DistFlow instance per (prefill TE, decode TE) pair
+        # isolated DistFlow instance per (prefill TE, decode TE) pair;
+        # with a topology, the pair's fabric comes from its pod pair
+        # (step 7: UB within a SuperPod, RoCE across pods)
         self.distflow: Dict[str, DistFlowInstance] = {}
         for p in self.prefill_tes:
             for d in self.decode_tes:
                 key = f"p{p.te_id}-d{d.te_id}"
-                self.distflow[key] = DistFlowInstance(key, fabric=p.fabric)
+                if self.topology is not None:
+                    fab = self.topology.link(
+                        self._prefill_pod[p.te_id],
+                        self._decode_pod[d.te_id])
+                else:
+                    fab = p.fabric
+                self.distflow[key] = DistFlowInstance(key, fabric=fab)
 
         self._pending_admit: List[Dict] = []
         # per-request KV-stream watermark: tokens shipped to decode so

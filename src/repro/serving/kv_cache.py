@@ -462,6 +462,9 @@ class PodKVDirectory:
     def __init__(self, block_size: int = 16):
         self.block_size = block_size
         self._trees: Dict[int, RadixTree] = {}
+        # unregistered owners' trees, kept only so outstanding remote
+        # pins can still be released exactly once
+        self._dead_trees: Dict[int, RadixTree] = {}
         # cumulative block hash -> {owner id: backing block id}
         self._entries: Dict[str, Dict[int, int]] = {}
         self.n_remote_acquires = 0
@@ -484,6 +487,25 @@ class PodKVDirectory:
         self._trees[owner] = tree
         for node in tree._nodes.values():
             self._publish(owner, node.hashes, node.block_ids)
+
+    def unregister(self, owner: int) -> None:
+        """Tear an owner out of the directory (pod-level failure
+        domain): every hash it published is retracted — future matches
+        can no longer land on the dead owner's blocks — and the tree is
+        unhooked from the coherence hooks. Outstanding :class:`RemotePin`
+        objects against the owner stay release-safe (the tree is kept
+        reachable for :meth:`release`), but callers should release them
+        promptly: the pinned data is gone."""
+        tree = self._trees.pop(owner, None)
+        if tree is None:
+            return
+        tree.directory = None
+        self._dead_trees[owner] = tree
+        for h in list(self._entries):
+            owners = self._entries[h]
+            owners.pop(owner, None)
+            if not owners:
+                del self._entries[h]
 
     # -- coherence hooks (called by RadixTree insert / _remove) -------
 
@@ -574,7 +596,9 @@ class PodKVDirectory:
             raise DoubleFree(
                 f"remote pin on owner {pin.owner} already released")
         pin.released = True
-        self._trees[pin.owner].unlock(pin.nodes)
+        tree = self._trees.get(pin.owner) \
+            or self._dead_trees[pin.owner]
+        tree.unlock(pin.nodes)
         self.n_releases += 1
 
 

@@ -31,8 +31,20 @@ class TEShell:
                  dp_peers: Optional[Sequence[HeartbeatPeer]] = None,
                  balancer: Optional[DecodeLoadBalancer] = None,
                  eplb_max_slices: int = 64,
-                 prefill_scheduler: Optional[PrefillScheduler] = None):
+                 prefill_scheduler: Optional[PrefillScheduler] = None,
+                 pod_of_dp: Optional[Sequence[int]] = None):
         self.dps = list(dp_groups)
+        # pod-level failure domains (two-SuperPod scale-out): which
+        # SuperPod each DP group lives in. A whole-pod failure
+        # (fail_pod) drains every DP in the pod at once — the balancer
+        # stops routing there and schedule_prefill_chunks requeues its
+        # partially-prefilled requests onto the surviving pod's DPs.
+        self.pod_of_dp = (list(pod_of_dp) if pod_of_dp is not None
+                          else [0] * len(self.dps))
+        if len(self.pod_of_dp) != len(self.dps):
+            raise ValueError(
+                f"pod_of_dp has {len(self.pod_of_dp)} entries for "
+                f"{len(self.dps)} DP groups")
         self.balancer = balancer or DecodeLoadBalancer()
         # chunk-granular prefill schedule (§4.3): the shell owns the
         # shared queue; schedule_prefill_chunks assigns token-budget
@@ -181,6 +193,36 @@ class TEShell:
                 if d.dp_id == dp_id:
                     d._healthy = False
         return failed
+
+    def fail_pod(self, pod_id: int) -> List[str]:
+        """Declare a whole pod's failure domain down (§6 / P/D-Serve
+        pod granularity): every DP group in ``pod_id`` is marked
+        unhealthy and its heartbeat peer dead, so the decode balancer
+        and the chunk scheduler drain it immediately instead of waiting
+        out per-DP heartbeat timeouts. Returns the failed DP names
+        (``dp<id>``), mirroring :meth:`health_tick`."""
+        failed = []
+        for d, pod in zip(self.dps, self.pod_of_dp):
+            if pod == pod_id and getattr(d, "_healthy", True):
+                d._healthy = False
+                failed.append(f"dp{d.dp_id}")
+        names = set(failed)
+        for p in self.heartbeat.l2.peers:
+            if p.name in names:
+                p.alive = False
+        return failed
+
+    def dead_pods(self) -> List[int]:
+        """Pods whose EVERY DP group is unhealthy — the failure domains
+        cross-pod rerouting keys on (a pod with one live DP still
+        serves; a fully-dead pod's traffic must leave the pod)."""
+        alive_pods = set()
+        all_pods = set()
+        for d, pod in zip(self.dps, self.pod_of_dp):
+            all_pods.add(pod)
+            if getattr(d, "_healthy", True):
+                alive_pods.add(pod)
+        return sorted(all_pods - alive_pods)
 
     def statuses(self) -> List[DPStatus]:
         out = []

@@ -71,6 +71,7 @@ from repro.serving.te_shell import TEShell
 from repro.sim.events import EventLoop
 from repro.sim.fabric import (CostModelBackend, DieModel, FabricModel,
                               SuperPodCostModel)
+from repro.xccl.topology import CHIP_CLASSES, PodSpec, PodTopology
 from repro.sim.metrics import MetricsCollector, SimReport
 from repro.sim.workload import WorkloadConfig, WorkloadGen
 
@@ -95,6 +96,13 @@ class FaultPlan:
     dead_at: float = 1.5
     dead_pool: str = "attention"
     expert_skew: float = 0.0          # Zipf exponent of expert popularity
+    # pod-level failure domain (two-SuperPod deployments): at
+    # ``dead_pod_at`` every prefill TE in ``dead_pod_id`` dies at once —
+    # its queued and in-flight prefill work is drained and rerouted to
+    # the surviving pod(s) with chunk cursors reset (the partial KV is
+    # lost, §6.2 recompute). The decode pod cannot be the target.
+    dead_pod_id: Optional[int] = None
+    dead_pod_at: float = 1.5
 
 
 @dataclasses.dataclass
@@ -196,6 +204,28 @@ class SimConfig:
     # overrides the cost model's per-draft acceptance probability
     # (None keeps the default / calibrated ``mtp/acceptance`` value)
     mtp_acceptance: Optional[float] = None
+    # -- two-SuperPod scale-out (§7.2 / P/D-Serve shape) ----------------
+    # number of SuperPods. 1 (default) is the single-pod deployment,
+    # byte-identical to the pre-pod build per seed. With n_pods > 1 the
+    # sim builds a PodTopology: intra-pod traffic stays on UB, any
+    # cross-pod path (prefill TE in one pod streaming KV to the decode
+    # pod in another, or a pod-pooled remote seed read across pods)
+    # prices over the scale-out fabric through the same kv-link FIFOs.
+    n_pods: int = 1
+    # pod of each prefill TE (len n_prefill_tes; entries < n_pods).
+    # None ⇒ round-robin across pods, so a two-pod run has both local
+    # and remote prefill capacity by default.
+    pod_of_te: Optional[Tuple[int, ...]] = None
+    # pod hosting the decode DP groups (the 910C pod in the
+    # heterogeneous shape); KV from prefill TEs in other pods crosses
+    # the scale-out fabric
+    decode_pod: int = 0
+    # per-pod chip class ("910C"/"910B"): prefill chunks on a 910B-class
+    # pod run at that class's compute_scale (§7.2 prior-gen prefill
+    # pods). None ⇒ decode pod 910C, every other pod 910B.
+    pod_classes: Optional[Tuple[str, ...]] = None
+    # scale-out link between pods
+    cross_pod_fabric: str = "roce"
     drain_timeout_s: float = 120.0
     seed: int = 0
 
@@ -209,14 +239,21 @@ class _PrefillTE:
     def __init__(self, te_id: int, n_streams: int, long_capable: bool,
                  long_only: bool = False, token_budget: int = 8192,
                  chunk_tokens: Optional[int] = None,
-                 prefix_cache_blocks: int = 8192):
+                 prefix_cache_blocks: int = 8192, pod: int = 0):
         self.te_id = te_id
+        self.pod = pod
+        # cleared by a pod-level failure: a dead TE stops scheduling,
+        # drops in-flight chunk completions, and is skipped by routing
+        self.alive = True
         self.scheduler = PrefillScheduler(n_dps=n_streams,
                                           token_budget=token_budget,
                                           chunk_tokens=chunk_tokens)
         self.queues: List[Deque[ChunkWork]] = \
             [deque() for _ in range(n_streams)]
         self.busy = [False] * n_streams
+        # the chunk each busy stream is executing right now — what a
+        # pod failure must recover in addition to the scheduler's state
+        self.inflight: List[Optional[ChunkWork]] = [None] * n_streams
         self.long_capable = long_capable
         self.long_only = long_only
         self.mean_len = 512.0
@@ -267,6 +304,62 @@ class SuperPodSim:
             raise ValueError(
                 "mtp_k > 0 is priced through decode_iter_time — only the "
                 "colocated deployment supports MTP in the sim")
+        # -- pod layout (two-SuperPod scale-out) -------------------------
+        if sim_cfg.n_pods < 1:
+            raise ValueError(f"n_pods={sim_cfg.n_pods} must be >= 1")
+        if not 0 <= sim_cfg.decode_pod < sim_cfg.n_pods:
+            raise ValueError(
+                f"decode_pod={sim_cfg.decode_pod} out of range "
+                f"(n_pods={sim_cfg.n_pods})")
+        if sim_cfg.pod_of_te is None:
+            self._te_pod = [i % sim_cfg.n_pods
+                            for i in range(sim_cfg.n_prefill_tes)]
+        else:
+            self._te_pod = [int(p) for p in sim_cfg.pod_of_te]
+            if len(self._te_pod) != sim_cfg.n_prefill_tes:
+                raise ValueError(
+                    f"pod_of_te has {len(self._te_pod)} entries for "
+                    f"{sim_cfg.n_prefill_tes} prefill TEs")
+            if any(not 0 <= p < sim_cfg.n_pods for p in self._te_pod):
+                raise ValueError(
+                    f"pod_of_te={self._te_pod} has entries outside "
+                    f"[0, {sim_cfg.n_pods})")
+        if sim_cfg.pod_classes is None:
+            pod_classes = ["910C" if p == sim_cfg.decode_pod else "910B"
+                           for p in range(sim_cfg.n_pods)]
+        else:
+            pod_classes = [str(c) for c in sim_cfg.pod_classes]
+            if len(pod_classes) != sim_cfg.n_pods:
+                raise ValueError(
+                    f"pod_classes has {len(pod_classes)} entries for "
+                    f"{sim_cfg.n_pods} pods")
+            for c in pod_classes:
+                if c not in CHIP_CLASSES:
+                    raise ValueError(f"unknown chip class {c!r}")
+        self.topology = (PodTopology(
+            pods=tuple(PodSpec(chip_class=c) for c in pod_classes),
+            cross_fabric=sim_cfg.cross_pod_fabric)
+            if sim_cfg.n_pods > 1 else None)
+        # 910B-class pods run prefill chunks slower by 1/compute_scale
+        self._pod_slowdown = [
+            1.0 / self.topology.compute_scale(p) if self.topology else 1.0
+            for p in range(sim_cfg.n_pods)]
+        if self.faults.dead_pod_id is not None:
+            dead = self.faults.dead_pod_id
+            if sim_cfg.n_pods < 2:
+                raise ValueError("dead_pod_id needs n_pods >= 2")
+            if not 0 <= dead < sim_cfg.n_pods:
+                raise ValueError(
+                    f"dead_pod_id={dead} out of range "
+                    f"(n_pods={sim_cfg.n_pods})")
+            if dead == sim_cfg.decode_pod:
+                raise ValueError(
+                    "dead_pod_id cannot target the decode pod — the "
+                    "decode DP pool has no surviving pod to fail over to")
+            if all(p == dead for p in self._te_pod):
+                raise ValueError(
+                    "dead_pod_id would kill every prefill TE; at least "
+                    "one TE must live in a surviving pod")
         for kind, pool, idx in (
                 ("straggler", self.faults.straggler_pool,
                  self.faults.straggler_dp),
@@ -285,13 +378,14 @@ class SuperPodSim:
                 raise ValueError(
                     f"{kind} fault targets {pool} die {idx}, but the sim "
                     f"folds that pool to {n_pool} dies")
+        fabric = FabricModel(topology=self.topology)
         if sim_cfg.calibration_paths:
             self.cost = SuperPodCostModel.from_calibration(
                 self.model_cfg, self.plan,
-                list(sim_cfg.calibration_paths), FabricModel())
+                list(sim_cfg.calibration_paths), fabric)
         else:
             self.cost = SuperPodCostModel(self.model_cfg, self.plan,
-                                          FabricModel())
+                                          fabric)
         if sim_cfg.mtp_acceptance is not None:
             self.cost.mtp_acceptance = float(
                 np.clip(sim_cfg.mtp_acceptance, 0.0, 1.0))
@@ -349,8 +443,12 @@ class SuperPodSim:
             long_only=i < n_long,
             token_budget=sim_cfg.prefill_token_budget,
             chunk_tokens=sim_cfg.prefill_chunk_tokens,
-            prefix_cache_blocks=sim_cfg.te_prefix_cache_blocks)
+            prefix_cache_blocks=sim_cfg.te_prefix_cache_blocks,
+            pod=self._te_pod[i])
             for i in range(sim_cfg.n_prefill_tes)]
+        # remote pins the pod failure invalidated before the seed read
+        # ran: the borrower recomputes the skipped prefix instead
+        self._lost_pins: set = set()
         # pod-pooled prefix KV: one directory over every TE's radix
         # directory, kept coherent via the trees' publish/retract hooks
         self.pod_dir: Optional[PodKVDirectory] = None
@@ -424,7 +522,13 @@ class SuperPodSim:
 
     def _arrive(self, t: float, req: Request) -> None:
         self.metrics.on_arrival(self.loop.now, req)
-        stats = [te.stats(self.loop.now) for te in self.tes]
+        self._route(req)
+
+    def _route(self, req: Request) -> None:
+        """Route ``req`` to a prefill TE and submit it for chunking.
+        Shared by arrivals and pod-failover reroutes (a rerouted request
+        re-matches the prefix caches of the surviving pod)."""
+        stats = [te.stats(self.loop.now) for te in self.tes if te.alive]
         if self.pod_dir is None:
             te_id = pick_prefill_te(
                 stats, req, long_threshold=self.cfg.long_context_threshold)
@@ -498,8 +602,8 @@ class SuperPodSim:
         pod-pooled cache exists to absorb). Rotate to the next TE
         eligible for this request's length class."""
         is_long = req.prompt_len > self.cfg.long_context_threshold
-        ok = [t.te_id for t in self.tes
-              if (t.long_capable if is_long else not t.long_only)]
+        ok = [t.te_id for t in self.tes if t.alive
+              and (t.long_capable if is_long else not t.long_only)]
         if te_id not in ok or len(ok) < 2:
             return te_id
         return ok[(ok.index(te_id) + 1) % len(ok)]
@@ -511,6 +615,8 @@ class SuperPodSim:
     # -- prefill: chunk-granular events on the main loop ------------------
     def _prefill_tick(self) -> None:
         for te in self.tes:
+            if not te.alive:
+                continue
             batches = te.scheduler.schedule_step()
             for stream, works in enumerate(batches):
                 if works:
@@ -527,13 +633,25 @@ class SuperPodSim:
             return
         work = te.queues[stream].popleft()
         te.busy[stream] = True
+        te.inflight[stream] = work
         work.req.state = RequestState.PREFILLING
+        # 910B-class prefill pods run the chunk at their compute scale
+        pod_sl = self._pod_slowdown[te.pod]
         t = self.cost.prefill_chunk_time(
             work.n_tokens, context=work.start,
-            n_dies=self.cfg.prefill_dies_per_stream)
+            n_dies=self.cfg.prefill_dies_per_stream, slowdown=pod_sl)
         hit = work.req.prefix_hit_tokens
         if hit > 0 and work.start == hit:
             pin = self._remote_pins.pop(work.req.req_id, None)
+            if pin is None and work.req.req_id in self._lost_pins:
+                # the owner pod died between arrival and this seed
+                # chunk: the pinned blocks are gone, so the skipped
+                # prefix is recomputed in full on this TE
+                self._lost_pins.discard(work.req.req_id)
+                t += self.cost.prefill_chunk_time(
+                    hit, context=0,
+                    n_dies=self.cfg.prefill_dies_per_stream,
+                    slowdown=pod_sl)
             if pin is not None:
                 # pod-pooled remote hit: the seed reads the owner TE's
                 # blocks over UB global shared memory — charge the
@@ -546,12 +664,18 @@ class SuperPodSim:
                 if waste > 0.0:
                     t += waste * self.cost.prefill_chunk_time(
                         hit, context=0,
-                        n_dies=self.cfg.prefill_dies_per_stream)
-                kv_t = self.cost.kv_transfer_time(hit)
+                        n_dies=self.cfg.prefill_dies_per_stream,
+                        slowdown=pod_sl)
+                src_pod = self._te_pod[pin.owner]
+                kv_t = self.cost.kv_transfer_time(
+                    hit, src_pod=src_pod, dst_pod=te.pod)
                 read = self._kv_link_delay(pin.owner, stream, kv_t)
                 t += read
                 self.metrics.n_remote_seed_reads += 1
                 self.metrics.remote_seed_read_s += read
+                if src_pod != te.pod:
+                    self.metrics.n_cross_pod_kv_xfers += 1
+                    self.metrics.cross_pod_kv_s += kv_t
                 self.pod_dir.release(pin)
             else:
                 # first executed chunk after a LOCAL radix skip: seeding
@@ -562,7 +686,8 @@ class SuperPodSim:
                 if waste > 0.0:
                     t += waste * self.cost.prefill_chunk_time(
                         hit, context=0,
-                        n_dies=self.cfg.prefill_dies_per_stream)
+                        n_dies=self.cfg.prefill_dies_per_stream,
+                        slowdown=pod_sl)
         die = self._stream_die.get((te.te_id, stream))
         if die is not None:
             # decode iterations overlapping [now, now+t] on this die
@@ -581,13 +706,25 @@ class SuperPodSim:
         compute), so only the FINAL chunk's wire time sits on the TTFT
         path — the pre-chunking model charged the whole cache's transfer
         after the whole prompt."""
+        if not te.alive:
+            # the TE's pod died while this chunk executed: the work was
+            # already recovered and rerouted by _kill_pod — drop it
+            return
         te.busy[stream] = False
+        te.inflight[stream] = None
         self.metrics.n_prefill_chunks += 1
         req = work.req
         if work.end >= req.prompt_len:
             te.prefix_dir.insert(req.prompt_tokens)
             req.state = RequestState.TRANSFERRING
-            kv_t = self.cost.kv_transfer_time(work.n_tokens)
+            # the final chunk's KV streams to the decode pod: cross-pod
+            # TEs price the wire over the scale-out fabric (RoCE)
+            kv_t = self.cost.kv_transfer_time(
+                work.n_tokens, src_pod=te.pod,
+                dst_pod=self.cfg.decode_pod)
+            if te.pod != self.cfg.decode_pod:
+                self.metrics.n_cross_pod_kv_xfers += 1
+                self.metrics.cross_pod_kv_s += kv_t
             delay = self._kv_link_delay(te.te_id, stream, kv_t)
             self.loop.schedule(delay, f"kv_done:{req.req_id}",
                                lambda req=req: self._enqueue_admit(req))
@@ -929,6 +1066,76 @@ class SuperPodSim:
                 pool[f.dead_dp].alive = False
             self.loop.schedule_at(
                 f.dead_at, f"fault:dead:{f.dead_pool}:{f.dead_dp}", kill)
+        if f.dead_pod_id is not None:
+            self.loop.schedule_at(
+                f.dead_pod_at, f"fault:dead_pod:{f.dead_pod_id}",
+                lambda: self._kill_pod(f.dead_pod_id))
+
+    def _kill_pod(self, pod_id: int) -> None:
+        """Pod-level failure domain (§6 / P/D-Serve): every prefill TE
+        in ``pod_id`` dies at once. All of its prefill work — queued,
+        partially prefilled, emitted chunks, and the chunks executing
+        right now — is recovered and rerouted to the surviving pod(s)
+        with chunk cursors reset: the partial KV on the dead pod is
+        lost, so prefill restarts (§6.2 recompute). Remote pins against
+        dead owners are dropped; their borrowers recompute the skipped
+        prefix. Requests already past prefill (KV landed on the decode
+        pod) are untouched."""
+        self.metrics.n_pod_failovers += 1
+        dead_tes = [te for te in self.tes
+                    if te.pod == pod_id and te.alive]
+        # pins whose OWNER died: release before the trees leave the
+        # directory, and flag the borrower for full prefix recompute
+        for rid, pin in list(self._remote_pins.items()):
+            if self.tes[pin.owner] in dead_tes:
+                del self._remote_pins[rid]
+                self.pod_dir.release(pin)
+                self._lost_pins.add(rid)
+        lost: List[Request] = []
+        seen = set()
+
+        def recover(req: Request) -> None:
+            if req.req_id not in seen:
+                seen.add(req.req_id)
+                lost.append(req)
+
+        for te in dead_tes:
+            te.alive = False
+            # partially-prefilled requests pinned to the TE's streams
+            for s in range(len(te.queues)):
+                for req in te.scheduler.requeue_dp(s):
+                    recover(req)
+            # queued requests the scheduler never started
+            for req in te.scheduler.queue:
+                recover(req)
+            te.scheduler.queue.clear()
+            # emitted-but-unexecuted chunks and the executing ones (the
+            # scheduler no longer tracks fully-emitted requests)
+            for q in te.queues:
+                for w in q:
+                    recover(w.req)
+                q.clear()
+            for s, w in enumerate(te.inflight):
+                if w is not None:
+                    recover(w.req)
+                te.inflight[s] = None
+            te.busy = [False] * len(te.busy)
+            # retract the dead TE's published prefixes so pod-directory
+            # matches stop landing on unreachable blocks
+            if self.pod_dir is not None:
+                self.pod_dir.unregister(te.te_id)
+        for req in lost:
+            # the request's own pin (taken at arrival, owner may be
+            # anywhere): drop it — routing restarts from scratch
+            pin = self._remote_pins.pop(req.req_id, None)
+            if pin is not None:
+                self.pod_dir.release(pin)
+            self._lost_pins.discard(req.req_id)
+            req.state = RequestState.QUEUED
+            req.prefill_pos = 0
+            req.prefix_hit_tokens = 0
+            self.metrics.n_pod_reroutes += 1
+            self._route(req)
 
     # ------------------------------------------------------------------
     def run(self) -> SimReport:

@@ -29,7 +29,7 @@ from repro.configs.base import MOE, ModelConfig
 from repro.core.transformerless import PartitionPlan
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 from repro.serving.backend import ExecutionBackend
-from repro.xccl.topology import (SuperPod, a2e_latency_model,
+from repro.xccl.topology import (PodTopology, SuperPod, a2e_latency_model,
                                  best_transfer_time,
                                  dispatch_latency_model)
 
@@ -91,16 +91,32 @@ class MoEAttnIterCost:
 @dataclasses.dataclass
 class FabricModel:
     """Transfer-latency view of the pod fabric (delegates to XCCL's
-    engine models; ``fabric`` picks UB / RoCE / VPC constants)."""
+    engine models; ``fabric`` picks UB / RoCE / VPC constants).
+
+    With a :class:`~repro.xccl.topology.PodTopology` attached, pricing
+    becomes per-path: intra-pod transfers ride ``fabric`` (the scale-up
+    plane), cross-pod paths the topology's scale-out link (RoCE). With
+    ``topology=None`` every path is intra-pod — the single-SuperPod view,
+    numerically identical to the pre-pod model."""
     fabric: str = "ub"
     pod: SuperPod = dataclasses.field(default_factory=SuperPod)
+    topology: Optional[PodTopology] = None
 
-    def transfer_time(self, nbytes: int) -> float:
-        return best_transfer_time(int(nbytes), self.fabric)
+    def link_fabric(self, src_pod: int = 0, dst_pod: int = 0) -> str:
+        if self.topology is None or src_pod == dst_pod:
+            return self.fabric
+        return self.topology.link(src_pod, dst_pod)
+
+    def transfer_time(self, nbytes: int, src_pod: int = 0,
+                      dst_pod: int = 0) -> float:
+        return best_transfer_time(int(nbytes),
+                                  self.link_fabric(src_pod, dst_pod))
 
     def kv_transfer_time(self, n_tokens: int,
-                         kv_bytes_per_token: float) -> float:
-        return self.transfer_time(int(n_tokens * kv_bytes_per_token))
+                         kv_bytes_per_token: float,
+                         src_pod: int = 0, dst_pod: int = 0) -> float:
+        return self.transfer_time(int(n_tokens * kv_bytes_per_token),
+                                  src_pod, dst_pod)
 
 
 class SuperPodCostModel:
@@ -376,12 +392,14 @@ class SuperPodCostModel:
         t += ctx_flops / (n_dies * PEAK_FLOPS * self.prefill_mfu)
         return (t + self.prefill_chunk_overhead) * slowdown
 
-    def kv_transfer_time(self, n_tokens: int) -> float:
+    def kv_transfer_time(self, n_tokens: int, src_pod: int = 0,
+                         dst_pod: int = 0) -> float:
         """PD KV move of one request's prefilled context (per layer ×
-        layers, batched into one DistFlow task)."""
+        layers, batched into one DistFlow task). Cross-pod paths price
+        over the topology's scale-out link (RoCE) instead of UB."""
         total = n_tokens * self.kv_bytes_per_token * (
             self.n_moe_layers + self.n_dense_layers)
-        return self.fabric.transfer_time(int(total))
+        return self.fabric.transfer_time(int(total), src_pod, dst_pod)
 
     # ------------------------------------------------------------------
     def _attn_time(self, b: float, ctx: float,

@@ -107,6 +107,14 @@ class MetricsCollector:
         self.n_pod_remote_hit_tokens = 0
         self.n_remote_seed_reads = 0
         self.remote_seed_read_s = 0.0
+        # two-SuperPod scale-out: KV transfers that crossed pods (priced
+        # over the scale-out fabric — RoCE — instead of UB) and their
+        # total wire time; pod-level failures and the requests they
+        # rerouted to the surviving pod (zeros when n_pods == 1)
+        self.n_cross_pod_kv_xfers = 0
+        self.cross_pod_kv_s = 0.0
+        self.n_pod_failovers = 0
+        self.n_pod_reroutes = 0
         # moe_attn deployment: per-pool accounting over the MoE-layer
         # pipeline windows (seconds are virtual, per simulated DP; byte
         # counts are scaled to the whole pod by die_scale)
@@ -225,6 +233,11 @@ class MetricsCollector:
             "n_pod_remote_hit_tokens": self.n_pod_remote_hit_tokens,
             "n_remote_seed_reads": self.n_remote_seed_reads,
             "remote_seed_read_s": round(self.remote_seed_read_s, 9),
+            # two-SuperPod scale-out (zeros when n_pods == 1)
+            "n_cross_pod_kv_xfers": self.n_cross_pod_kv_xfers,
+            "cross_pod_kv_s": round(self.cross_pod_kv_s, 9),
+            "n_pod_failovers": self.n_pod_failovers,
+            "n_pod_reroutes": self.n_pod_reroutes,
             # per-pool view (moe_attn deployment; zeros when colocated):
             # utilizations are busy fractions of the MoE-layer pipeline
             # windows, bubble is the expert pool's idle share — the

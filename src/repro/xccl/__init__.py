@@ -1,4 +1,5 @@
-from repro.xccl.topology import (FABRICS, SuperPod, best_transfer_time,
+from repro.xccl.topology import (CHIP_CLASSES, FABRICS, PodSpec,
+                                 PodTopology, SuperPod, best_transfer_time,
                                  dispatch_latency_model, dma_transfer_time,
                                  mte_transfer_time, a2e_latency_model)
 from repro.xccl.primitives import (MetadataField, NPUMemory, P2PChannel,
@@ -11,7 +12,8 @@ from repro.xccl.pd_transfer import (TransferPlan, execute_transfer,
                                     plan_transfer, pytree_bytes)
 
 __all__ = [
-    "FABRICS", "SuperPod", "best_transfer_time", "dispatch_latency_model",
+    "CHIP_CLASSES", "FABRICS", "PodSpec", "PodTopology", "SuperPod",
+    "best_transfer_time", "dispatch_latency_model",
     "dma_transfer_time", "mte_transfer_time", "a2e_latency_model",
     "MetadataField", "NPUMemory", "P2PChannel", "RingBuffer", "XCCLError",
     "make_pair",

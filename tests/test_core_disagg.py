@@ -241,3 +241,35 @@ def test_dataflow_no_global_barrier():
     assert fired == 9
     assert [p.payload for p in g.sinks["a2"]] == [2, 4, 6]
     assert [p.payload for p in g.sinks["b1"]] == [-1, 9, 19]
+
+
+def test_pd_disagg_topology_selects_per_pair_fabric():
+    """Two-pod topology: each (prefill TE, decode TE) DistFlow pair gets
+    the fabric of ITS pod pair — the pod-1 prefill TE reaches the pod-0
+    decode TE over RoCE, the pod-0 TE stays on UB — and the pipeline
+    still produces tokens end to end across the seam."""
+    from repro.xccl.topology import PodTopology
+    cfg = get_config("internlm2-1.8b-smoke")
+    pd = DisaggregatedPD(cfg, n_prefill_te=2, n_decode_te=1, dp_per_te=1,
+                         max_batch=2, max_len=128,
+                         topology=PodTopology.two_pod(),
+                         pod_of_prefill_te=[0, 1],
+                         pod_of_decode_te=[0])
+    assert pd.distflow["p0-d0"].fabric == "ub"
+    assert pd.distflow["p1-d0"].fabric == "roce"
+    reqs = [Request(prompt=p, max_new_tokens=4, ignore_eos=True)
+            for p in ["hello", "cross pod"]]
+    done = pd.run_until_done(reqs)
+    assert len(done) == 2
+    assert all(len(r.output_tokens) == 4 for r in done)
+    pd.close()
+
+
+def test_pd_disagg_topology_excludes_flat_fabric_list():
+    from repro.xccl.topology import PodTopology
+    cfg = get_config("internlm2-1.8b-smoke")
+    with pytest.raises(ValueError, match="not both"):
+        DisaggregatedPD(cfg, n_prefill_te=1, n_decode_te=1, dp_per_te=1,
+                        max_batch=2, max_len=128,
+                        topology=PodTopology.two_pod(),
+                        prefill_fabrics=["ub"])

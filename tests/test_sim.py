@@ -576,3 +576,101 @@ def test_mtp_requires_colocated():
     with pytest.raises(ValueError, match="mtp_k"):
         SuperPodSim(SimConfig(arch=ARCH, mtp_k=-1),
                     WorkloadConfig(**WL))
+
+
+# ---------------------------------------------------------------------------
+# two-SuperPod scale-out (§7.2 / P/D-Serve shape)
+# ---------------------------------------------------------------------------
+def test_n_pods_one_is_byte_identical_to_defaults():
+    """n_pods=1 must leave the RNG stream, the event trace, and the
+    report untouched — existing seeds reproduce byte-for-byte with the
+    pod knobs at their defaults."""
+    a = run_sim()
+    b = run_sim(sim_kw={"n_pods": 1, "decode_pod": 0,
+                        "cross_pod_fabric": "roce"})
+    assert a.trace_hash == b.trace_hash
+    assert a.to_json(include_requests=True) \
+        == b.to_json(include_requests=True)
+    s = a.summary
+    assert s["n_cross_pod_kv_xfers"] == 0 and s["cross_pod_kv_s"] == 0.0
+    assert s["n_pod_failovers"] == 0 and s["n_pod_reroutes"] == 0
+
+
+def test_two_pod_cross_pod_kv_priced_over_roce():
+    """All-remote prefill (every TE in the 910B pod, decode in pod 0):
+    each finished prefill flushes KV across the RoCE seam, so the run
+    reports cross-pod transfers with nonzero wire time and a TTFT no
+    better than the all-local placement."""
+    local = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                            "pod_of_te": (0, 0), "kv_link_fifo": True})
+    remote = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                             "pod_of_te": (1, 1), "kv_link_fifo": True})
+    sl, sr = local.summary, remote.summary
+    assert sr["n_finished"] == sr["n_requests"]
+    assert sl["n_cross_pod_kv_xfers"] == 0
+    assert sr["n_cross_pod_kv_xfers"] == sr["n_finished"]
+    assert sr["cross_pod_kv_s"] > 0.0
+    assert sr["ttft_mean_s"] > sl["ttft_mean_s"]
+
+
+def test_two_pod_heterogeneous_prefill_slows_910b_pod():
+    """Default pod classes put prefill pods on 910B (half rate): the
+    same remote placement with an explicit all-910C class list must
+    prefill strictly faster."""
+    slow = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                           "pod_of_te": (1, 1)})
+    fast = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                           "pod_of_te": (1, 1),
+                           "pod_classes": ("910C", "910C")})
+    assert slow.summary["ttft_mean_s"] > fast.summary["ttft_mean_s"]
+
+
+def test_dead_pod_failover_reroutes_and_finishes():
+    """The prefill pod dies mid-run: its in-flight and queued requests
+    must reroute to the surviving pod's TEs and every request still
+    finishes."""
+    rep = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                          "pod_of_te": (0, 1)},
+                  faults=FaultPlan(dead_pod_id=1, dead_pod_at=0.2))
+    s = rep.summary
+    assert s["n_finished"] == s["n_requests"]
+    assert s["n_pod_failovers"] == 1
+    assert s["n_pod_reroutes"] > 0
+
+
+def test_dead_pod_with_kv_pool_recovers_remote_pins():
+    """Pod failover composes with the pod-pooled prefix directory: the
+    dead pod's trees unregister, borrowers of its pins fall back to a
+    full recompute, and the run still drains."""
+    rep = run_sim(sim_kw={"n_pods": 2, "n_prefill_tes": 2,
+                          "pod_of_te": (0, 1), "kv_pool": True},
+                  wl_kw={"prefix_share": 0.5},
+                  faults=FaultPlan(dead_pod_id=1, dead_pod_at=0.2))
+    s = rep.summary
+    assert s["n_finished"] == s["n_requests"]
+    assert s["n_pod_failovers"] == 1
+
+
+def test_pod_config_validation():
+    def cfg(**kw):
+        return SimConfig(arch=ARCH, **{**SMALL, **kw})
+
+    with pytest.raises(ValueError, match="n_pods"):
+        SuperPodSim(cfg(n_pods=0), WorkloadConfig(**WL))
+    with pytest.raises(ValueError, match="decode_pod"):
+        SuperPodSim(cfg(n_pods=2, decode_pod=5), WorkloadConfig(**WL))
+    with pytest.raises(ValueError, match="pod_of_te"):
+        SuperPodSim(cfg(n_pods=2, pod_of_te=(0,)), WorkloadConfig(**WL))
+    with pytest.raises(ValueError, match="chip class"):
+        SuperPodSim(cfg(n_pods=2, pod_classes=("910C", "910Z")),
+                    WorkloadConfig(**WL))
+    # dead_pod faults: need >= 2 pods, can't kill decode or all prefill
+    with pytest.raises(ValueError, match="n_pods"):
+        SuperPodSim(cfg(), WorkloadConfig(**WL),
+                    FaultPlan(dead_pod_id=1))
+    with pytest.raises(ValueError, match="decode pod"):
+        SuperPodSim(cfg(n_pods=2, decode_pod=0), WorkloadConfig(**WL),
+                    FaultPlan(dead_pod_id=0))
+    with pytest.raises(ValueError, match="prefill TE"):
+        SuperPodSim(cfg(n_pods=2, n_prefill_tes=2, pod_of_te=(1, 1)),
+                    WorkloadConfig(**WL), FaultPlan(dead_pod_id=1))

@@ -1,0 +1,248 @@
+"""Pod-aware topology + fabric-pricing regressions (two-SuperPod PR).
+
+Fast tier — pure analytic models plus the cost-model backend, no JAX
+compute. Locks in the two pricing bugfixes (per-fabric ``n_links``
+aggregation; the MTE per-core overhead double-discount) and the
+:class:`PodTopology` contract the two-pod simulator builds on.
+"""
+import pytest
+
+from repro.sim.fabric import FabricModel
+from repro.xccl.topology import (AIV_CORES_PER_DIE, CHIP_CLASSES, DMA_SETUP,
+                                 FABRICS, PodSpec, PodTopology,
+                                 UNIFIED_BUFFER_BYTES, best_transfer_time,
+                                 dma_transfer_time, mte_transfer_time)
+
+GB = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# n_links pricing bugfix: RoCE/VPC are single ports, not 8 UB planes
+# ---------------------------------------------------------------------------
+def test_roce_bulk_at_least_5x_slower_than_ub():
+    """§2.2: UB bandwidth is 'several times' RoCE. The un-fixed model
+    billed every fabric at UB's 8-plane aggregate, collapsing the ratio
+    to ~1x — this gate fails under that bug."""
+    t_ub = best_transfer_time(GB, "ub")
+    t_roce = best_transfer_time(GB, "roce")
+    assert t_roce >= 5.0 * t_ub
+    # and VPC (one 12.5 GB/s port) is slower still
+    assert best_transfer_time(GB, "vpc") > t_roce
+
+
+def test_dma_rate_is_fabric_aggregate():
+    """Bulk DMA must move at ``bandwidth * n_links``: 392 GB/s for UB's
+    8 planes, one NIC's worth (50 / 12.5 GB/s) for RoCE / VPC."""
+    for name, agg in (("ub", 392e9), ("roce", 50e9), ("vpc", 12.5e9)):
+        f = FABRICS[name]
+        assert f.bandwidth * f.n_links == pytest.approx(agg)
+        want = DMA_SETUP + f.base_latency + GB / agg
+        assert dma_transfer_time(GB, name) == pytest.approx(want)
+
+
+def test_fabric_price_monotonicity():
+    """UB < RoCE < VPC at every payload size (latency-dominated small
+    messages AND bandwidth-dominated bulk)."""
+    for nbytes in (64 * 1024, 1 << 20, 64 << 20, GB):
+        t_ub = best_transfer_time(nbytes, "ub")
+        t_roce = best_transfer_time(nbytes, "roce")
+        t_vpc = best_transfer_time(nbytes, "vpc")
+        assert t_ub < t_roce < t_vpc
+
+
+# ---------------------------------------------------------------------------
+# MTE double-discount bugfix
+# ---------------------------------------------------------------------------
+def test_mte_overhead_not_double_discounted():
+    """``n_chunks`` in the MTE model is already the PER-CORE chunk
+    count; the old code divided the overhead term by ``n_aiv_cores``
+    again. With the fix, equal per-core payloads price identically
+    regardless of core count (below the per-core bandwidth cap)."""
+    per_core = 4 * UNIFIED_BUFFER_BYTES
+    assert mte_transfer_time(2 * per_core, 2) == \
+        mte_transfer_time(4 * per_core, 4)
+
+
+def test_mte_fig5_anchors_hold_after_fix():
+    """The Fig. 5 calibration the fix must NOT disturb: <20 µs for a
+    1 MB payload with 2 AIV cores, and 48-vs-2-core speedup of 2.5-3x
+    at 9 MB."""
+    assert mte_transfer_time(1 << 20, n_aiv_cores=2) < 20e-6
+    ratio = mte_transfer_time(9 << 20, n_aiv_cores=2) \
+        / mte_transfer_time(9 << 20, n_aiv_cores=AIV_CORES_PER_DIE)
+    assert 2.5 < ratio < 3.0
+
+
+def test_mte_respects_fabric_link_budget():
+    """A single-port fabric caps the MTE aggregate at its own rate:
+    48 cores over RoCE cannot beat the 50 GB/s NIC."""
+    t = mte_transfer_time(64 << 20, AIV_CORES_PER_DIE, "roce")
+    assert t > (64 << 20) / 50e9
+
+
+# ---------------------------------------------------------------------------
+# PodTopology
+# ---------------------------------------------------------------------------
+def test_pod_of_die_consecutive_layout():
+    topo = PodTopology.two_pod()
+    per_pod = topo.pods[0].pod.n_dies
+    assert topo.n_dies == 2 * per_pod
+    assert topo.pod_of_die(0) == 0
+    assert topo.pod_of_die(per_pod - 1) == 0
+    assert topo.pod_of_die(per_pod) == 1
+    assert topo.pod_of_die(topo.n_dies - 1) == 1
+    with pytest.raises(ValueError):
+        topo.pod_of_die(topo.n_dies)
+    with pytest.raises(ValueError):
+        topo.pod_of_die(-1)
+
+
+def test_link_selection_intra_ub_cross_roce():
+    topo = PodTopology.two_pod()
+    assert topo.link(0, 0) == "ub"
+    assert topo.link(1, 1) == "ub"
+    assert topo.link(0, 1) == "roce"
+    assert topo.link(1, 0) == "roce"
+    with pytest.raises(ValueError):
+        topo.link(0, 2)
+
+
+def test_two_pod_heterogeneous_compute_scale():
+    """910B prefill pod runs at half the 910C dense rate (§7.2 /
+    P/D-Serve heterogeneous shape)."""
+    topo = PodTopology.two_pod(prefill_class="910B")
+    assert topo.compute_scale(0) == CHIP_CLASSES["910C"] == 1.0
+    assert topo.compute_scale(1) == CHIP_CLASSES["910B"] == 0.5
+
+
+def test_transfer_time_routes_by_pod_pair():
+    topo = PodTopology.two_pod()
+    n = 32 << 20
+    assert topo.transfer_time(n, 0, 0) == best_transfer_time(n, "ub")
+    assert topo.transfer_time(n, 0, 1) == best_transfer_time(n, "roce")
+    assert topo.transfer_time(n, 0, 1) > topo.transfer_time(n, 0, 0)
+
+
+def test_single_pod_degenerates_to_flat_pricing():
+    """One pod must price EXACTLY like the pre-pod flat model — both
+    through the topology and through a topology-aware FabricModel —
+    so existing seeds stay byte-identical."""
+    topo = PodTopology.single_pod()
+    flat = FabricModel()
+    podded = FabricModel(topology=topo)
+    for nbytes in (4096, 1 << 20, GB):
+        assert topo.transfer_time(nbytes) == \
+            best_transfer_time(nbytes, "ub")
+        assert podded.transfer_time(nbytes) == \
+            flat.transfer_time(nbytes)
+        assert podded.transfer_time(nbytes, 0, 0) == \
+            flat.transfer_time(nbytes)
+
+
+def test_topology_validation_errors():
+    with pytest.raises(ValueError):
+        PodSpec(chip_class="910Z")
+    with pytest.raises(ValueError):
+        PodTopology(pods=())
+    with pytest.raises(ValueError):
+        PodTopology(cross_fabric="infiniband")
+    with pytest.raises(ValueError):
+        PodTopology.homogeneous(3, chip_classes=["910C"])
+
+
+# ---------------------------------------------------------------------------
+# pod-level failure domains (TE-shell)
+# ---------------------------------------------------------------------------
+def _dp(dp_id):
+    from repro.configs import get_config
+    from repro.core.transformerless import plan_partition
+    from repro.serving.dp_group import DPGroup
+    from repro.sim.fabric import CostModelBackend, SuperPodCostModel
+    cfg = get_config("deepseek-v3-671b")
+    cost = SuperPodCostModel(cfg, plan_partition(cfg, 768))
+    return DPGroup(dp_id, CostModelBackend(dp_id, cost), max_batch=2,
+                   max_len=4096, n_kv_blocks=512)
+
+
+def test_te_shell_fail_pod_drains_whole_domain():
+    from repro.serving.te_shell import TEShell
+    dps = [_dp(i) for i in range(4)]
+    try:
+        shell = TEShell(dps, pod_of_dp=[0, 0, 1, 1])
+        assert shell.dead_pods() == []
+        failed = shell.fail_pod(1)
+        assert failed == ["dp2", "dp3"]
+        healthy = {s.dp_id: s.healthy for s in shell.statuses()}
+        assert healthy == {0: True, 1: True, 2: False, 3: False}
+        # heartbeat peers follow, so health_tick won't resurrect them
+        dead_peers = {p.name for p in shell.heartbeat.l2.peers
+                      if not p.alive}
+        assert dead_peers == {"dp2", "dp3"}
+        assert shell.dead_pods() == [1]
+        # a second call is a no-op (already drained)
+        assert shell.fail_pod(1) == []
+    finally:
+        for d in dps:
+            d.close()
+
+
+def test_te_shell_pod_of_dp_length_validated():
+    from repro.serving.te_shell import TEShell
+    dps = [_dp(0), _dp(1)]
+    try:
+        with pytest.raises(ValueError):
+            TEShell(dps, pod_of_dp=[0])
+    finally:
+        for d in dps:
+            d.close()
+
+
+# ---------------------------------------------------------------------------
+# property pack (hypothesis, optional)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    @settings(max_examples=60, deadline=None)
+    @given(nbytes=st.integers(1, 4 * GB))
+    def test_prop_fabric_ordering_everywhere(nbytes):
+        """UB <= RoCE <= VPC for EVERY payload size, and every best-path
+        time is positive and at least the fabric's base latency."""
+        times = {f: best_transfer_time(nbytes, f)
+                 for f in ("ub", "roce", "vpc")}
+        assert times["ub"] <= times["roce"] <= times["vpc"]
+        for f, t in times.items():
+            assert t > FABRICS[f].base_latency
+
+    @settings(max_examples=60, deadline=None)
+    @given(a=st.integers(1, GB), b=st.integers(1, GB),
+           fabric=st.sampled_from(["ub", "roce", "vpc"]))
+    def test_prop_transfer_time_monotone_in_bytes(a, b, fabric):
+        lo, hi = sorted((a, b))
+        assert best_transfer_time(lo, fabric) <= \
+            best_transfer_time(hi, fabric)
+
+    @settings(max_examples=40, deadline=None)
+    @given(n_pods=st.integers(1, 5), src=st.integers(0, 4),
+           dst=st.integers(0, 4))
+    def test_prop_link_intra_iff_same_pod(n_pods, src, dst):
+        topo = PodTopology.homogeneous(n_pods)
+        if src >= n_pods or dst >= n_pods:
+            with pytest.raises(ValueError):
+                topo.link(src, dst)
+        elif src == dst:
+            assert topo.link(src, dst) == topo.intra_fabric
+        else:
+            assert topo.link(src, dst) == topo.cross_fabric
+
+    @settings(max_examples=40, deadline=None)
+    @given(die=st.integers(0, 3 * 768 - 1))
+    def test_prop_pod_of_die_partitions_die_space(die):
+        topo = PodTopology.homogeneous(3)
+        pid = topo.pod_of_die(die)
+        per_pod = topo.pods[0].pod.n_dies
+        assert pid == die // per_pod
