@@ -85,12 +85,12 @@ def expert_half(ffn_params, buckets: jax.Array,
 
     ``phys_owner`` [n_phys] activates EPLB placement: buckets are per
     *physical replica slot* and each slot computes with its owning
-    logical expert's weights (the redundant slot's shadow-loaded copy on
-    hardware)."""
+    logical expert's weights via the owner-indexed grouped matmul
+    (``kernels/gmm.placement_gmm`` streams the owner's blocks in-kernel
+    — the redundant slot's shadow-loaded copy on hardware; no owner-
+    gathered weight materialization)."""
     routed = {n: ffn_params[n] for n in ("we_gate", "we_up", "we_down")}
-    if phys_owner is not None:
-        routed = {n: w[phys_owner] for n, w in routed.items()}
-    return F._expert_ffn(routed, buckets)
+    return F._expert_ffn(routed, buckets, owner=phys_owner)
 
 
 def combine_half(x, routed_out, shared_out):

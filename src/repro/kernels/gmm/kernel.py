@@ -5,6 +5,20 @@ The MoE expert matmul is the paper's dominant expert-die compute (§3.2,
 the gate/up projections and the SiLU product run on the MXU/VPU without
 materializing the [C, f] hidden in HBM — the f-dim is blocked and the
 down-projection accumulated in a VMEM scratch.
+
+Two entry points share one kernel body:
+
+* :func:`gmm` — buckets and weights indexed by the same expert axis
+  (the plain grouped matmul).
+* :func:`placement_gmm` — the EPLB owner-indexed variant (§4.5):
+  buckets are per *physical replica slot* and the grid step for slot
+  ``s`` scalar-prefetches ``phys_owner[s]``, streaming the OWNER's
+  weight blocks straight from HBM via the weight index maps. Replica
+  slots are just extra grouped-matmul rows — the owner-gathered
+  ``[n_phys, d, f]`` weight materialization (3·n_phys·d·f bytes of HBM
+  traffic per step at DeepSeek-V3 scale) never happens. The block walk
+  and arithmetic are identical to ``gmm`` on pre-gathered weights, so
+  the two are bit-identical.
 """
 from __future__ import annotations
 
@@ -61,3 +75,46 @@ def gmm(buckets, we_gate, we_up, we_down, *, bc: int = 128,
         scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
         interpret=interpret,
     )(buckets, we_gate, we_up, we_down)
+
+
+def _placement_kernel(owner_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref,
+                      acc_ref, *, n_f: int):
+    # the owner indirection lives entirely in the weight index maps; the
+    # body is the plain grouped-matmul step (bit-identity with `gmm` by
+    # construction)
+    del owner_ref
+    _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, n_f=n_f)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "bf", "interpret"))
+def placement_gmm(buckets, we_gate, we_up, we_down, phys_owner, *,
+                  bc: int = 128, bf: int = 512, interpret: bool = True):
+    """Owner-indexed grouped FFN. buckets [n_phys, C, d] per PHYSICAL
+    slot; we_* [E, ...] logical; phys_owner [n_phys] int32 (slot →
+    owning expert). Slot ``s`` streams expert ``phys_owner[s]``'s
+    gate/up/down blocks from HBM via scalar-prefetch index maps —
+    equivalent to ``gmm(buckets, we_gate[phys_owner], ...)`` without
+    materializing the gather. C % bc == 0, f % bf == 0 (ops.py pads)."""
+    S, C, d = buckets.shape
+    f = we_gate.shape[-1]
+    bc, bf = min(bc, C), min(bf, f)
+    grid = (S, C // bc, f // bf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda s, c, fi, o: (s, c, 0)),
+            pl.BlockSpec((1, d, bf), lambda s, c, fi, o: (o[s], 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda s, c, fi, o: (o[s], 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda s, c, fi, o: (o[s], fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda s, c, fi, o: (s, c, 0)),
+        scratch_shapes=[pltpu.VMEM((bc, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_placement_kernel, n_f=grid[2]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, C, d), jnp.float32),
+        interpret=interpret,
+    )(phys_owner.astype(jnp.int32), buckets, we_gate, we_up, we_down)

@@ -1,4 +1,22 @@
-"""jit'd wrapper for the grouped expert FFN kernel (pads capacity/ff)."""
+"""jit'd wrapper for the grouped expert FFN kernel (pads capacity/ff).
+
+``use_pallas=None`` (default) picks the execution automatically: the
+compiled Pallas kernel off-CPU, the jnp oracle on CPU (where the
+interpreter would only add overhead inside jitted serving steps) — the
+same convention as ``kernels/route_pack``. Tests pin ``use_pallas=True``
+to validate the kernel in interpret mode against the oracle.
+
+``phys_owner`` switches to the EPLB owner-indexed grouped matmul
+(§4.5): buckets are per physical replica slot and slot ``s`` computes
+against expert ``phys_owner[s]``'s weights, streamed block-by-block via
+scalar-prefetch index maps instead of an owner-gathered
+``[n_phys, d, f]`` weight materialization. The owner-indexed call is
+bit-identical to ``expert_ffn(buckets, we_gate[phys_owner], ...)`` —
+same block walk, same arithmetic (guarded in ``test_kernels.py``).
+
+The Pallas paths carry no custom VJP — callers that differentiate
+(train) must pass ``use_pallas=False``.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,16 +25,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gmm.kernel import gmm as _gmm
-from repro.kernels.gmm.ref import gmm_ref
-from repro.kernels.runtime import resolve_interpret
+from repro.kernels.gmm.kernel import placement_gmm as _placement_gmm
+from repro.kernels.gmm.ref import gmm_ref, placement_gmm_ref
+from repro.kernels.runtime import on_cpu, resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def expert_ffn(buckets, we_gate, we_up, we_down, *, use_pallas: bool = True,
-               interpret=None):
-    interpret = resolve_interpret(interpret)
+def _dispatch(buckets, we_gate, we_up, we_down, phys_owner, *,
+              use_pallas, interpret):
     if not use_pallas:
-        return gmm_ref(buckets, we_gate, we_up, we_down)
+        if phys_owner is None:
+            return gmm_ref(buckets, we_gate, we_up, we_down)
+        return placement_gmm_ref(buckets, we_gate, we_up, we_down,
+                                 phys_owner)
     E, C, d = buckets.shape
     f = we_gate.shape[-1]
     padc = (-C) % 8
@@ -28,6 +49,24 @@ def expert_ffn(buckets, we_gate, we_up, we_down, *, use_pallas: bool = True,
     bf = min(512, f)
     while f % bf:
         bf //= 2
-    out = _gmm(buckets, we_gate, we_up, we_down, bc=bc, bf=bf,
-               interpret=interpret)
+    if phys_owner is None:
+        out = _gmm(buckets, we_gate, we_up, we_down, bc=bc, bf=bf,
+                   interpret=interpret)
+    else:
+        out = _placement_gmm(buckets, we_gate, we_up, we_down,
+                             phys_owner, bc=bc, bf=bf,
+                             interpret=interpret)
     return out[:, :C]
+
+
+def expert_ffn(buckets, we_gate, we_up, we_down, *, phys_owner=None,
+               use_pallas=None, interpret=None):
+    """buckets [G, C, d] → [G, C, d] f32. With ``phys_owner=None``,
+    G indexes the weight arrays directly; with ``phys_owner`` [G] int32,
+    G is the physical-slot axis and slot ``s`` runs against
+    ``we_*[phys_owner[s]]`` (gather-free owner-indexed GMM)."""
+    if use_pallas is None:
+        use_pallas = not on_cpu()
+    return _dispatch(buckets, we_gate, we_up, we_down, phys_owner,
+                     use_pallas=bool(use_pallas),
+                     interpret=resolve_interpret(interpret))

@@ -1,15 +1,26 @@
 """Pure-jnp oracle: capacity-padded grouped expert matmul (SwiGLU FFN)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
 def gmm_ref(buckets, we_gate, we_up, we_down):
     """buckets [E, C, d]; we_gate/we_up [E, d, f]; we_down [E, f, d]
-    → [E, C, d] f32 (the MoE hot loop: §3.2 Expert MatMul)."""
+    → [E, C, d] f32 (the MoE hot loop: §3.2 Expert MatMul). Same SiLU
+    formulation (``g · sigmoid(g)``) as the Pallas kernel body."""
     g = jnp.einsum("ecd,edf->ecf", buckets.astype(jnp.float32),
                    we_gate.astype(jnp.float32))
     u = jnp.einsum("ecd,edf->ecf", buckets.astype(jnp.float32),
                    we_up.astype(jnp.float32))
-    h = g / (1 + jnp.exp(-g)) * u          # SiLU(g) * u
+    h = g * jax.nn.sigmoid(g) * u          # SiLU(g) * u
     return jnp.einsum("ecf,efd->ecd", h, we_down.astype(jnp.float32))
+
+
+def placement_gmm_ref(buckets, we_gate, we_up, we_down, phys_owner):
+    """Owner-indexed oracle: physical slot ``s`` computes against expert
+    ``phys_owner[s]``'s weights. This IS the owner-gathered path the
+    Pallas ``placement_gmm`` makes gather-free — the kernel's bit-
+    identity target."""
+    o = phys_owner.astype(jnp.int32)
+    return gmm_ref(buckets, we_gate[o], we_up[o], we_down[o])

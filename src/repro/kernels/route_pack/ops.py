@@ -79,6 +79,24 @@ def placement_route(dest: jax.Array, positions: jax.Array,
     return replica_slots[dest, r]
 
 
+def placement_route_local(dest: jax.Array, positions: jax.Array,
+                          replica_slots: jax.Array, n_replicas: jax.Array,
+                          rank, n_local: int):
+    """Sharded-EP view of :func:`placement_route`.
+
+    Physical slots are block-sharded over the EP ranks — slot ``s``
+    lives on rank ``s // n_local`` — so a hot expert's replicas land on
+    different ranks and split its load across the pod. Returns
+    ``(local_slot [N], mine [N] bool)``: the slot index within
+    ``rank``'s shard and the slot-ownership mask that replaces plain
+    sharded routing's logical ``flat_idx // E_local`` test
+    (``models/ffn.py`` decode gather path). ``rank`` may be a traced
+    scalar (``lax.axis_index`` inside ``shard_map``)."""
+    phys = placement_route(dest, positions, replica_slots, n_replicas)
+    mine = (phys // n_local) == rank
+    return phys % n_local, mine
+
+
 def fused_route_pack(x, dest, valid=None, eid=None, *, k: int = 1,
                      n_dest: int, capacity: int, quantize: bool = False,
                      use_pallas=None, interpret=None) -> RoutePack:

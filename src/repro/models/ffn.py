@@ -25,14 +25,28 @@ EPLB placement (§4.5): ``moe_apply`` optionally takes a per-layer
 [n_phys])`` sliced from the device-resident
 :class:`~repro.serving.eplb.PlacementTable` — and the decode gather
 strategy then routes each token assignment to a *physical replica slot*
-(round-robin of token position across the logical expert's replicas),
-computing the slot's bucket against the owning expert's weights. With no
-redundancy (budget 0) this is bit-identical to logical routing; with
-redundancy, a hot expert's load genuinely splits across its replica
-buckets. Placement applies to the replicated-expert gather regime (the
-decode pull path); the sharded-EP regimes keep logical routing — their
-slot-ownership-aware dispatch is priced in the simulator
-(``sim/engine.py``) and is future work on the execution side.
+(round-robin of token position across the logical expert's replicas).
+With no redundancy (budget 0) this is bit-identical to logical routing;
+with redundancy, a hot expert's load genuinely splits across its
+replica buckets. The slot buckets run through the owner-indexed
+grouped matmul (``kernels/gmm.placement_gmm``): the grid step for slot
+``s`` scalar-prefetches ``phys_owner[s]`` and streams the owner's
+weight blocks straight from HBM, so replica slots are just extra
+grouped-matmul rows — no per-step owner-gathered ``[n_phys, d, f]``
+weight materialization (``placement_gather_free=False`` keeps the
+legacy gathered path as a benchmark baseline).
+
+Placement covers BOTH decode gather regimes. Replicated experts route
+every slot locally. Under sharded EP, physical slots are block-sharded
+over the EP ranks (slot ``s`` lives on rank ``s // (n_phys//ep_size)``)
+and the ``mine`` mask comes from *slot ownership* instead of the
+logical ``flat_idx // E_local`` test — a hot expert's replicas land on
+different ranks and split its load across the pod, with the psum
+combine unchanged. Expert weights stay logically indexed and
+replicated over the EP axis in that path (the §3.1 UB global-shared-
+memory analogue: any rank streams any owner's blocks), which trades
+weight memory for gather-free replica routing exactly like the paper's
+pull-based decode dispatch.
 """
 from __future__ import annotations
 
@@ -45,7 +59,10 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig, MoEConfig
-from repro.kernels.route_pack.ops import fused_route_pack, placement_route
+from repro.kernels.gmm.ops import expert_ffn
+from repro.kernels.route_pack.ops import (fused_route_pack,
+                                          placement_route,
+                                          placement_route_local)
 from repro.models.common import dense_init, microbatch_sizes
 from repro.models.mesh_ctx import MeshCtx
 
@@ -107,12 +124,20 @@ def _route(x_flat: jax.Array, router_w: jax.Array, top_k: int):
     return idx, w, probs, logits
 
 
-def _expert_ffn(params_slice, buckets: jax.Array) -> jax.Array:
-    """buckets: [E_local, C, d] → [E_local, C, d] (capacity-padded GMM)."""
-    g = jnp.einsum("ecd,edf->ecf", buckets, params_slice["we_gate"])
-    u = jnp.einsum("ecd,edf->ecf", buckets, params_slice["we_up"])
-    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
-                      params_slice["we_down"])
+def _expert_ffn(params_slice, buckets: jax.Array, *, owner=None,
+                use_pallas=None) -> jax.Array:
+    """buckets: [E_local, C, d] → [E_local, C, d] (capacity-padded GMM,
+    ``kernels/gmm`` — fused Pallas kernel off-CPU, jnp oracle on CPU).
+
+    ``owner`` [n_slots] int32 switches to the owner-indexed placement
+    GMM: slot ``s`` computes against ``params[owner[s]]``'s weight
+    blocks streamed straight from HBM (replica slots are extra grouped-
+    matmul rows; no owner-gathered weight materialization). The Pallas
+    paths carry no VJP — train callers pass ``use_pallas=False``."""
+    out = expert_ffn(buckets, params_slice["we_gate"],
+                     params_slice["we_up"], params_slice["we_down"],
+                     phys_owner=owner, use_pallas=use_pallas)
+    return out.astype(buckets.dtype)
 
 
 def _aux_stats(probs, idx, n_experts: int, logits):
@@ -177,7 +202,8 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
     local_params = {
         n: params[n] for n in ("we_gate", "we_up", "we_down")
     }
-    out_b = _expert_ffn(local_params, buckets)
+    out_b = _expert_ffn(local_params, buckets,
+                        use_pallas=False if train else None)
     y_flat = out_b[jnp.where(valid, flat_eid, 0),
                    jnp.clip(rank2, 0, cap_e - 1)]
     y_flat = jnp.where(keep2[:, None], y_flat, 0.0).astype(x.dtype)
@@ -201,7 +227,8 @@ def _moe_alltoall_local(x, params, cfg: ModelConfig, ep_axis: str,
 def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
                       ep_size: int, batch_axes: Tuple[str, ...],
                       mesh_shape: Dict[str, int], train: bool,
-                      microbatches: int = 1, placement=None):
+                      microbatches: int = 1, placement=None,
+                      gather_free: bool = True):
     """x: [B_l, S, d]. Each rank pulls the tokens routed to its local
     experts and psum combines (the pull-based dispatch analogue).
 
@@ -220,11 +247,15 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
     micro-batch overlap the expert GMM of the other under XLA's async
     collective scheduling (aux stats become token-weighted averages).
 
-    ``placement`` (replicated-experts regime only) activates EPLB
-    physical-slot routing: buckets are per *physical slot* — replicas
-    included — and the expert GMM runs against owner-gathered weights.
-    Rotation position is the flattened token index within the
-    (micro-)batch, so replica selection needs no communication."""
+    ``placement`` activates EPLB physical-slot routing: buckets are per
+    *physical slot* — replicas included — and the expert GMM is owner-
+    indexed (``kernels/gmm.placement_gmm`` streams each slot's owner
+    weights; ``gather_free=False`` keeps the legacy owner-gathered
+    baseline). Rotation position is the flattened token index within
+    the (micro-)batch, so replica selection needs no communication.
+    Under sharded EP the physical slots are block-sharded over the EP
+    ranks and ``mine`` is the slot-ownership mask (weights arrive
+    replicated in that path — see ``moe_apply``)."""
     e = cfg.moe
     if isinstance(ep_axes, str):
         ep_axes = (ep_axes,)
@@ -252,17 +283,44 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
         flat_w = w.reshape(N)
         tok_of = jnp.repeat(jnp.arange(T), k)
 
-        if replicated_experts and placement is not None:
+        owner_arg = None
+        if placement is not None:
             # EPLB physical-slot indirection: replica selected by
-            # round-robin of the token index (§4.5 step 4); buckets and
-            # the GMM are per physical slot, weights gathered by owner
+            # round-robin of the token index (§4.5 step 4); buckets are
+            # per physical slot and the GMM is owner-indexed — slot s
+            # streams params[owner[s]]'s blocks in-kernel instead of
+            # materializing owner-gathered weights
             rep_slots, n_rep, owner = placement
-            my_eid = placement_route(flat_idx, tok_of, rep_slots, n_rep)
-            mine = jnp.ones((N,), bool)
-            n_slots = owner.shape[0]
-            cap = max(int(N / n_slots * e.capacity_factor), 4)
-            ffn_params = {n: params[n][owner]
-                          for n in ("we_gate", "we_up", "we_down")}
+            n_phys = owner.shape[0]
+            if replicated_experts:
+                my_eid = placement_route(flat_idx, tok_of, rep_slots,
+                                         n_rep)
+                mine = jnp.ones((N,), bool)
+                n_slots = n_phys
+                owner_local = owner
+            else:
+                # sharded-EP placement: slots block-sharded over the EP
+                # ranks, `mine` from SLOT ownership — a hot expert's
+                # replicas land on different ranks and split its load
+                r = jnp.int32(0)
+                for a in ep_axes:
+                    r = r * mesh_shape[a] + jax.lax.axis_index(a)
+                n_slots = n_phys // ep_size
+                my_eid, mine = placement_route_local(
+                    flat_idx, tok_of, rep_slots, n_rep, r, n_slots)
+                owner_local = jax.lax.dynamic_slice_in_dim(
+                    owner, r * n_slots, n_slots)
+            # capacity uses the LOGICAL expected load N/E (a slot's
+            # round-robin share never exceeds its owner's full load),
+            # with the same sharded-skew margin as logical routing —
+            # budget 0 stays bit-identical to the non-placement path
+            cap = max(int(N / E * e.capacity_factor
+                          * (1 if replicated_experts else 4)), 4)
+            if gather_free:
+                ffn_params, owner_arg = params, owner_local
+            else:       # legacy owner-gathered weights (bench baseline)
+                ffn_params = {n: params[n][owner_local]
+                              for n in ("we_gate", "we_up", "we_down")}
         else:
             if replicated_experts:
                 my_eid, mine = flat_idx, jnp.ones((N,), bool)
@@ -283,7 +341,8 @@ def _moe_gather_local(x, params, cfg: ModelConfig, ep_axes,
                                 valid=mine, k=k, n_dest=n_slots,
                                 capacity=cap)
         rank, keep = pack.rank, pack.keep
-        out_b = _expert_ffn(ffn_params, pack.buckets)
+        out_b = _expert_ffn(ffn_params, pack.buckets, owner=owner_arg,
+                            use_pallas=False if train else None)
         y_assign = out_b[jnp.where(mine, my_eid, 0),
                          jnp.clip(rank, 0, cap - 1)]
         y_assign = jnp.where(keep[:, None], y_assign, 0.0)
@@ -336,6 +395,8 @@ def moe_apply(
     mode: str,                      # train | prefill | decode
     placement=None,                 # per-layer (replica_slots, n_replicas,
                                     # phys_owner) from a PlacementTable
+    placement_gather_free: bool = True,   # False: legacy owner-gathered
+                                          # weights (benchmark baseline)
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     e = cfg.moe
     impl = "gather" if mode == "decode" else ctx.moe_impl
@@ -372,11 +433,26 @@ def moe_apply(
                                  mesh_shape=dict(ctx.mesh.shape),
                                  train=train,
                                  microbatches=(ctx.decode_microbatches
-                                               if mode == "decode" else 1))
-        if eff_ep != 1:
-            # sharded-EP placement routing needs slot-ownership-aware
-            # dispatch (priced in the sim; not executed here yet)
-            placement = None
+                                               if mode == "decode" else 1),
+                                 gather_free=placement_gather_free)
+        if eff_ep != 1 and placement is not None:
+            # sharded-EP placement: physical slots block-shard over the
+            # EP ranks. Pad the owner view to a multiple of eff_ep with
+            # dead identity slots (replica_slots can never reference
+            # them, so they stay empty GMM rows), and replicate the
+            # expert weights over the EP axis — the §3.1 UB global-
+            # shared-memory analogue: any rank streams any owner's
+            # blocks; the psum combine is unchanged.
+            rs_, nr_, owner_ = (jnp.asarray(a) for a in placement)
+            pad = (-owner_.shape[0]) % eff_ep
+            if pad:
+                ext = (jnp.arange(owner_.shape[0],
+                                  owner_.shape[0] + pad, dtype=owner_.dtype)
+                       % e.num_experts)
+                owner_ = jnp.concatenate([owner_, ext])
+            placement = (rs_, nr_, owner_)
+            w_spec = {n: P() for n in ("router", "we_gate", "we_up",
+                                       "we_down")}
 
     if placement is not None:
         pl = tuple(jnp.asarray(a) for a in placement)

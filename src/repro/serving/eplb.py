@@ -303,6 +303,29 @@ class PlacementTable:
         logical = np.asarray(logical)
         return rs[logical, np.asarray(positions) % nr[logical]]
 
+    # per-rank slot views (sharded-EP placement execution) -------------
+    def slots_per_rank(self, ep_size: int) -> int:
+        """Physical slots hosted per EP rank when slots are block-
+        sharded over the EP axis (``models/ffn.py`` sharded-EP placement
+        routing: slot ``s`` lives on rank ``s // slots_per_rank``).
+        Rounds up — ``moe_apply`` pads the owner view with dead identity
+        slots when ``n_physical % ep_size != 0``."""
+        return -(-self.n_physical // int(ep_size))
+
+    def rank_of_slot(self, slot, ep_size: int) -> np.ndarray:
+        """EP rank hosting physical slot(s) ``slot`` (host-side
+        reference of the device ``mine`` mask)."""
+        return np.asarray(slot) // self.slots_per_rank(ep_size)
+
+    def ranks_of_expert(self, layer: int, expert: int,
+                        ep_size: int) -> List[int]:
+        """Sorted EP ranks holding at least one LIVE replica of
+        ``expert`` — under slot-sharded placement routing, every
+        assignment of this expert lands on one of these ranks."""
+        nr = int(np.asarray(self.n_replicas[layer])[expert])
+        slots = np.asarray(self.replica_slots[layer])[expert, :nr]
+        return sorted({int(r) for r in self.rank_of_slot(slots, ep_size)})
+
 
 try:  # register as pytree when jax is importable (pure-numpy use works too)
     import jax as _jax

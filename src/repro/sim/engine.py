@@ -204,6 +204,12 @@ class SimConfig:
     # overrides the cost model's per-draft acceptance probability
     # (None keeps the default / calibrated ``mtp/acceptance`` value)
     mtp_acceptance: Optional[float] = None
+    # §4.5 placement data plane: True (default) prices decode through
+    # the gather-free owner-indexed GMM (placement-active iterations add
+    # nothing unless an ``eplb/placement_gmm`` calibration row says so);
+    # False prices the legacy owner-gathered weight materialization on
+    # every placement-active step (pure HBM traffic per MoE layer).
+    placement_gather_free: bool = True
     # -- two-SuperPod scale-out (§7.2 / P/D-Serve shape) ----------------
     # number of SuperPods. 1 (default) is the single-pod deployment,
     # byte-identical to the pre-pod build per seed. With n_pods > 1 the
@@ -389,6 +395,8 @@ class SuperPodSim:
         if sim_cfg.mtp_acceptance is not None:
             self.cost.mtp_acceptance = float(
                 np.clip(sim_cfg.mtp_acceptance, 0.0, 1.0))
+        self.cost.placement_gather_free = bool(
+            sim_cfg.placement_gather_free)
         if sim_cfg.kv_pool_remote_seed is not None:
             self.cost.prefix_remote_seed = float(
                 np.clip(sim_cfg.kv_pool_remote_seed, 0.0, 1.0))
@@ -495,6 +503,9 @@ class SuperPodSim:
             if n_experts else None)
         self._map_cache: Dict[int, tuple] = {}
         self._iter_charge: Dict[int, float] = {}
+        # physical slots of the ACTIVE PlacementTable (0 until the first
+        # EPLB swap lands) — decode_iter_time's placement term
+        self._placement_n_phys = 0
         # priced duration of each in-flight decode iteration, popped at
         # execution (cancelled steps never count) — feeds the effective-
         # TPOT accounting (decode_busy_s / n_decode_tokens)
@@ -884,7 +895,8 @@ class SuperPodSim:
                 len(positions), mean_context=max(ctx, 1),
                 moe_imbalance=self._moe_imbalance(),
                 slowdown=self.dies[dp_id].slowdown,
-                mtp_k=self.cfg.mtp_k)
+                mtp_k=self.cfg.mtp_k,
+                placement_slots=self._placement_n_phys)
             if self.loop.now < self._prefill_busy_until[dp_id]:
                 # a prefill chunk is executing on this die: the decode
                 # iteration pays the colocation contention factor
@@ -953,6 +965,8 @@ class SuperPodSim:
         pricing and the PlacementTable lands on every alive DP backend
         through the apply_placement contract."""
         table = self.shell.activate_maps(maps, push_to_dps=False)
+        self._placement_n_phys = table.n_physical if table is not None \
+            else 0
         for dp, die in zip(self.dps, self.dies):
             if die.alive:
                 dp.apply_placement(table)

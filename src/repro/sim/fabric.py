@@ -166,6 +166,18 @@ class SuperPodCostModel:
         # (None ⇒ analytic one-block estimate in decode_iter_time)
         self.mtp_acceptance = 0.9
         self.mtp_draft_overhead: Optional[float] = None
+        # §4.5 EPLB placement data plane: `placement_gather_free` says
+        # the decode path runs the owner-indexed GMM
+        # (kernels/gmm.placement_gmm — replica slots are extra grouped-
+        # matmul rows, no per-step weight gather). False prices the
+        # legacy owner-gathered path: every placement-active step
+        # materializes [n_phys, d, f] weights per MoE layer (write +
+        # re-read of pure HBM traffic). `placement_gmm_overhead`
+        # (seconds), when measured by bench_placement_gmm's
+        # ``eplb/placement_gmm`` row, is the residual per-layer cost the
+        # owner-indexed GMM adds over the plain grouped matmul.
+        self.placement_gather_free = True
+        self.placement_gmm_overhead: Optional[float] = None
         # measured dispatch/combine curve: sorted [(bpd, t_disp_s,
         # t_comb_s)] interpolated in decode_iter_time when present
         self._calib_comm: Optional[List[Tuple[float, float, float]]] = None
@@ -219,6 +231,10 @@ class SuperPodCostModel:
         * ``mtp/draft_overhead`` — measured extra time one draft-head
           pass adds to a decode iteration in µs (``bench_mtp``) →
           replaces the analytic draft term of :meth:`decode_iter_time`.
+        * ``eplb/placement_gmm`` — measured extra time one placement-
+          active MoE layer's owner-indexed GMM adds over the plain
+          grouped matmul in µs (``bench_placement_gmm``) → replaces the
+          analytic placement term of :meth:`decode_iter_time`.
 
         Extra keyword args override constants directly
         (``decode_mfu=0.6``, ``int8_moe_speedup=1.8``, …).
@@ -263,6 +279,9 @@ class SuperPodCostModel:
                     np.clip(float(row["us_per_call"]), 0.0, 1.0))
             elif name == "mtp/draft_overhead":
                 self.mtp_draft_overhead = float(row["us_per_call"]) * 1e-6
+            elif name == "eplb/placement_gmm":
+                self.placement_gmm_overhead = \
+                    float(row["us_per_call"]) * 1e-6
         if comm:
             self._calib_comm = sorted(comm)
         if pref:
@@ -470,7 +489,8 @@ class SuperPodCostModel:
                          moe_imbalance=1.0,
                          slowdown: float = 1.0,
                          microbatches: Optional[int] = None,
-                         mtp_k: int = 0) -> float:
+                         mtp_k: int = 0,
+                         placement_slots: int = 0) -> float:
         """One decode iteration of a DP group (batch ``batch_per_die``
         per attention die), with the pod's other DP domains loading the
         shared expert dies symmetrically.
@@ -499,13 +519,24 @@ class SuperPodCostModel:
         analytic one-block time otherwise). The emitted tokens per
         iteration (1 + accepted drafts) are the engine's concern; this
         method prices only the iteration itself.
+
+        ``placement_slots`` ≥ 1 marks the iteration placement-active
+        (an EPLB table with that many physical slots is installed): each
+        MoE layer then pays the placement term — the measured
+        ``eplb/placement_gmm`` residual when calibrated; otherwise zero
+        on the gather-free owner-indexed GMM path
+        (``placement_gather_free``, the default — replica routing is
+        free at the kernel level), or the legacy owner-gathered HBM
+        traffic (the [n_phys, d, f] weight materialization written and
+        re-read every step) when ``placement_gather_free`` is False.
         """
         if batch_per_die <= 0:
             return self.iter_overhead
         if mtp_k > 0:
             base = self.decode_iter_time(
                 batch_per_die * (mtp_k + 1), mean_context=mean_context,
-                moe_imbalance=moe_imbalance, microbatches=microbatches)
+                moe_imbalance=moe_imbalance, microbatches=microbatches,
+                placement_slots=placement_slots)
             ctx = mean_context or self.mean_context
             if self.mtp_draft_overhead is not None:
                 t_draft = mtp_k * self.mtp_draft_overhead
@@ -552,6 +583,20 @@ class SuperPodCostModel:
             else:
                 t_moe_total = self.n_moe_layers \
                     * layer_time(float(moe_imbalance))
+            if placement_slots > 0:
+                if self.placement_gmm_overhead is not None:
+                    t_place = self.placement_gmm_overhead
+                elif not self.placement_gather_free:
+                    # owner-gathered baseline: [n_phys, d, f] int8
+                    # weights written then re-read by the GMM — pure
+                    # HBM traffic per placement-active MoE layer
+                    t_place = (2.0 * placement_slots
+                               * self.expert_weight_bytes
+                               / (HBM_BW * self.hbm_eff))
+                else:
+                    t_place = 0.0
+                if t_place:
+                    t_moe_total += self.n_moe_layers * t_place
         else:
             t_moe_total = self.n_moe_layers * t_attn
 

@@ -70,6 +70,97 @@ def test_round_robin_splits_replica_load_within_one():
 
 
 # ---------------------------------------------------------------------------
+# Sharded-EP slot views (rank ownership of physical slots)
+# ---------------------------------------------------------------------------
+def test_placement_rank_views_consistent():
+    """slots_per_rank / rank_of_slot / ranks_of_expert must agree: an
+    expert's owning ranks are exactly the ranks its replica slots block-
+    shard onto."""
+    em = _skewed_map()
+    t = build_placement_table([em], em.n_logical)
+    for ep in (2, 3, 4):
+        n_local = t.slots_per_rank(ep)
+        assert n_local * ep >= t.n_physical
+        for e, slots in em.replicas.items():
+            want = sorted({s // n_local for s in slots})
+            assert t.ranks_of_expert(0, e, ep) == want
+        # every slot maps to a valid rank
+        ranks = t.rank_of_slot(np.arange(t.n_physical), ep)
+        assert ranks.min() >= 0 and ranks.max() < ep
+
+
+def test_placement_route_local_lands_on_owning_rank():
+    """Sharded-EP routing invariant: for every assignment the rank whose
+    ``mine`` mask claims it must own a replica slot of the routed
+    expert, exactly one rank claims it, and the local slot reconstructs
+    the global slot."""
+    import jax.numpy as jnp
+
+    from repro.kernels.route_pack.ops import (placement_route,
+                                              placement_route_local)
+
+    rng = np.random.default_rng(11)
+    em = _skewed_map()
+    t = build_placement_table([em], em.n_logical)
+    rs, nr, _ = (jnp.asarray(a) for a in t.layer(0))
+    n = 64
+    dest = jnp.asarray(rng.integers(0, em.n_logical, n), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+    phys = np.asarray(placement_route(dest, pos, rs, nr))
+    for ep in (2, 4):
+        n_local = t.slots_per_rank(ep)
+        claimed = np.zeros(n, np.int64)
+        for r in range(ep):
+            loc, mine = placement_route_local(dest, pos, rs, nr, r,
+                                              n_local)
+            loc, mine = np.asarray(loc), np.asarray(mine)
+            claimed += mine
+            # the claiming rank owns a replica of the routed expert
+            for a in np.nonzero(mine)[0]:
+                assert r in t.ranks_of_expert(0, int(dest[a]), ep)
+                assert r * n_local + loc[a] == phys[a]
+        np.testing.assert_array_equal(claimed, np.ones(n, np.int64))
+
+
+def test_placement_capacity_accounts_for_skew():
+    """Satellite: the placement bucket capacity must budget per-EXPERT
+    load, not per-slot average. Round-robin guarantees a slot's share
+    never exceeds its owner's full load, so the logical-formula
+    capacity (``N/E·cf``) makes placement overflow ≤ logical overflow;
+    the old per-slot average (``N·k/n_phys·cf``) under-provisions a hot
+    expert's replicas under skew."""
+    rng = np.random.default_rng(5)
+    E, budget, k = 8, 3, 2
+    counts = rng.integers(0, 30, (E, 4))
+    counts[2] += 500
+    em = build_expert_map(counts, E, budget, n_npus=4)
+    t = build_placement_table([em], E)
+    N = 96        # flat assignments this decode step (tokens × top-k)
+    cf = 1.5
+    # skewed live traffic: half the assignments hit the hot expert
+    dest = rng.integers(0, E, N)
+    dest[: N // 2] = 2
+    phys = t.map_assignments(0, np.arange(N), dest)
+
+    cap_log = max(int(N / E * cf), 4)
+    log_counts = np.bincount(dest, minlength=E)
+    slot_counts = np.bincount(phys, minlength=t.n_physical)
+    drops_logical = int(np.maximum(log_counts - cap_log, 0).sum())
+    drops_place = int(np.maximum(slot_counts - cap_log, 0).sum())
+    assert drops_place <= drops_logical, \
+        "replication must never increase the overflow rate"
+    # a slot's round-robin share is bounded by its owner's logical load
+    owner = np.asarray(t.phys_owner[0])
+    for s in range(t.n_physical):
+        assert slot_counts[s] <= log_counts[owner[s]]
+    # the OLD per-slot-average capacity would drop hot-expert traffic
+    # that the fixed formula keeps
+    cap_old = max(int(N / t.n_physical * cf), 4)
+    assert cap_old < cap_log
+    assert int(np.maximum(slot_counts - cap_old, 0).sum()) > drops_place
+
+
+# ---------------------------------------------------------------------------
 # moe_apply: placement routing vs logical routing
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")

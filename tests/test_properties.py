@@ -105,6 +105,49 @@ def test_expert_map_rotation_covers_replicas(n_exp, budget, n_npus, seed):
         assert f == em.table[p % em.rotation_period, l]
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    n_exp=st.integers(2, 16),
+    budget=st.integers(0, 5),
+    n_npus=st.integers(2, 8),
+    ep=st.sampled_from([2, 3, 4, 8]),
+    n_tokens=st.integers(1, 96),
+    seed=st.integers(0, 1000),
+)
+def test_sharded_placement_route_invariants(n_exp, budget, n_npus, ep,
+                                            n_tokens, seed):
+    """Sharded-EP placement routing (§4.5 on a block-sharded slot
+    plane): 1) every assignment is claimed by EXACTLY one rank, 2) the
+    claiming rank owns a replica slot of the routed logical expert, 3)
+    local slot + rank·n_local reconstructs the global round-robin slot,
+    4) at budget 0 the padded owner view keeps dead slots unreferenced."""
+    from repro.kernels.route_pack.ops import (placement_route,
+                                              placement_route_local)
+    from repro.serving.eplb import build_expert_map, build_placement_table
+    rng = np.random.default_rng(seed)
+    em = build_expert_map(rng.integers(0, 500, (n_exp, 4)), n_exp,
+                          budget, n_npus)
+    t = build_placement_table([em], n_exp)
+    n_local = t.slots_per_rank(ep)
+    rs, nr, _ = (jnp.asarray(a) for a in t.layer(0))
+    dest = jnp.asarray(rng.integers(0, n_exp, n_tokens), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, 10_000, n_tokens), jnp.int32)
+    phys = np.asarray(placement_route(dest, pos, rs, nr))
+    claimed = np.zeros(n_tokens, np.int64)
+    for r in range(ep):
+        loc, mine = map(np.asarray,
+                        placement_route_local(dest, pos, rs, nr, r,
+                                              n_local))
+        claimed += mine
+        for a in np.nonzero(mine)[0]:
+            assert r in t.ranks_of_expert(0, int(dest[a]), ep)
+            assert r * n_local + loc[a] == phys[a]
+    np.testing.assert_array_equal(claimed, np.ones(n_tokens, np.int64))
+    # 4) routing only ever targets real replica slots — the identity
+    # padding a sharded moe_apply appends can never receive traffic
+    assert phys.max(initial=0) < t.n_physical
+
+
 # ---------------------------------------------------------------------------
 # KV block allocator
 # ---------------------------------------------------------------------------

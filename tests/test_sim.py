@@ -166,6 +166,44 @@ def test_cost_model_from_calibration(tmp_path):
                                            not_a_constant=1.0)
 
 
+def test_placement_gmm_pricing_and_calibration(tmp_path):
+    """§4.5 placement pricing: the gather-free owner-indexed GMM adds
+    nothing to the decode iteration (replica slots are just extra GMM
+    rows), the legacy gathered path pays per-step HBM weight traffic
+    scaling with the slot count, and a measured ``eplb/placement_gmm``
+    row takes precedence over the analytic term."""
+    import json
+    cfg = get_config(ARCH)
+    plan = plan_partition(cfg, 768)
+    cost = SuperPodCostModel(cfg, plan)
+    base = cost.decode_iter_time(96, 1024)
+    assert cost.placement_gather_free, "gather-free is the default"
+    assert cost.decode_iter_time(96, 1024, placement_slots=288) == base, \
+        "gather-free placement must price like the plain GMM"
+    cost.placement_gather_free = False
+    gathered = cost.decode_iter_time(96, 1024, placement_slots=288)
+    assert gathered > base, "owner-gathered weights cost HBM traffic"
+    assert cost.decode_iter_time(96, 1024, placement_slots=576) > gathered
+    assert cost.decode_iter_time(96, 1024, placement_slots=0) == base
+    # calibration round-trip: the bench_placement_gmm row lands in
+    # placement_gmm_overhead and overrides the analytic term
+    p = tmp_path / "BENCH_placement_gmm.json"
+    p.write_text(json.dumps({"benchmark": "placement_gmm", "rows": [
+        {"name": "eplb/placement_gmm", "us_per_call": 50.0,
+         "derived": "per-layer placement-active residual"}]}))
+    cal = SuperPodCostModel.from_calibration(cfg, plan, str(p))
+    assert cal.placement_gmm_overhead == pytest.approx(50e-6)
+    c_base = cal.decode_iter_time(96, 1024)
+    c_place = cal.decode_iter_time(96, 1024, placement_slots=288)
+    assert c_place == pytest.approx(
+        c_base + cal.n_moe_layers * 50e-6, rel=1e-6), \
+        "measured per-layer residual must price every MoE layer"
+    # the measured row wins even on the legacy gathered path
+    cal.placement_gather_free = False
+    assert cal.decode_iter_time(96, 1024, placement_slots=288) \
+        == pytest.approx(c_place)
+
+
 def test_cost_backend_decode_sample_contract():
     """Fast-path contract on the sim backend: [B] int32 (4·B bytes),
     greedy equals the pseudo-logits argmax, stochastic deterministic in
